@@ -1,0 +1,81 @@
+"""Fig. 10 — scalability of DQN/DDPG/SAC vs parallel-actor count.
+
+The paper scales CPU cores; the JAX adaptation scales vectorized actor
+lanes (the same resource axis the DSE allocates).  Reports env-steps/s
+per algorithm at 1/2/4/8/16 lanes and derived speedup vs 1 lane."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.agents.ddpg import DDPGConfig, make_ddpg
+from repro.agents.dqn import DQNConfig, make_dqn
+from repro.agents.sac import SACConfig, make_sac
+from repro.core.replay import PrioritizedReplay, ReplayConfig
+from repro.envs.classic import make_vec
+from repro.runtime import loop
+
+
+def example(spec):
+    return {
+        "obs": jnp.zeros((spec.obs_dim,), jnp.float32),
+        "action": (jnp.zeros((), jnp.int32) if spec.discrete
+                   else jnp.zeros((spec.action_dim,), jnp.float32)),
+        "reward": jnp.zeros(()),
+        "next_obs": jnp.zeros((spec.obs_dim,), jnp.float32),
+        "done": jnp.zeros(()),
+    }
+
+
+ALGOS = {
+    "dqn": ("cartpole", lambda s: make_dqn(s, DQNConfig())),
+    "ddpg": ("pendulum", lambda s: make_ddpg(s, DDPGConfig())),
+    "sac": ("pendulum", lambda s: make_sac(s, SACConfig())),
+}
+
+
+def throughput(algo: str, n_envs: int, iters: int = 120) -> float:
+    env_name, mk = ALGOS[algo]
+    spec, v_reset, v_step = make_vec(env_name, n_envs)
+    agent = mk(spec)
+    replay = PrioritizedReplay(ReplayConfig(capacity=50_000, fanout=128),
+                               example(spec))
+    cfg = loop.LoopConfig(batch_size=64, warmup=64, epsilon=0.1)
+    step = loop.make_parallel_step(agent, replay, v_step, cfg, n_envs)
+    st = loop.init_loop_state(agent, replay, v_reset, jax.random.PRNGKey(0),
+                              n_envs)
+
+    @jax.jit
+    def chunk(st):
+        def body(s, _):
+            s, _m = step(s)
+            return s, None
+        s, _ = jax.lax.scan(body, st, None, length=20)
+        return s
+
+    st = chunk(st)
+    jax.block_until_ready(st.obs)
+    t0 = time.perf_counter()
+    for _ in range(iters // 20):
+        st = chunk(st)
+    jax.block_until_ready(st.obs)
+    return n_envs * 20 * (iters // 20) / (time.perf_counter() - t0)
+
+
+def run(csv=True):
+    rows = []
+    for algo in ALGOS:
+        base = None
+        for n in (1, 2, 4, 8, 16):
+            t = throughput(algo, n)
+            base = base or t
+            rows.append((f"fig10/{algo}_{n}actors", 1e6 / t, t / base))
+    if csv:
+        for name, us, derived in rows:
+            print(f"{name},{us:.2f},{derived:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

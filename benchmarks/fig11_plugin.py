@@ -1,0 +1,132 @@
+"""Fig. 11 — speedup from plugging our replay buffer into an existing
+trainer loop.
+
+The paper swaps its C++ buffer into tianshou/PFRL/rlpyt.  The analogue
+here: a fixed host-driven DQN trainer whose buffer is either (a) a naive
+numpy prioritized buffer (O(N) proportional sampling via np.random.choice,
+per-item priority updates — what pure-python RL libs do), or (b) our
+K-ary sum-tree buffer (batched, jitted).  Same agent, same env steps;
+derived column = naive_time / ours_time per trainer iteration."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.agents.dqn import DQNConfig, make_dqn
+from repro.core.replay import PrioritizedReplay, ReplayConfig
+from repro.envs.classic import make_vec
+
+
+class NaiveNumpyPER:
+    """Reference for what a pure-python library's PER does (paper §VI-F)."""
+
+    def __init__(self, capacity, obs_dim, alpha=0.6):
+        self.capacity, self.alpha = capacity, alpha
+        self.pri = np.zeros(capacity, np.float64)
+        self.obs = np.zeros((capacity, obs_dim), np.float32)
+        self.action = np.zeros(capacity, np.int64)
+        self.reward = np.zeros(capacity, np.float32)
+        self.next_obs = np.zeros((capacity, obs_dim), np.float32)
+        self.done = np.zeros(capacity, np.float32)
+        self.head = self.count = 0
+        self.max_pri = 1.0
+
+    def insert(self, obs, action, reward, next_obs, done):
+        for i in range(len(action)):                 # per-item, like CPython
+            j = self.head
+            self.obs[j], self.action[j] = obs[i], action[i]
+            self.reward[j], self.next_obs[j] = reward[i], next_obs[i]
+            self.done[j] = done[i]
+            self.pri[j] = self.max_pri
+            self.head = (self.head + 1) % self.capacity
+            self.count = min(self.count + 1, self.capacity)
+
+    def sample(self, batch, beta=0.4):
+        p = self.pri[: self.count]
+        prob = p / p.sum()                            # O(N) every call
+        idx = np.random.choice(self.count, batch, p=prob)
+        w = (self.count * prob[idx]) ** (-beta)
+        w = w / w.max()
+        return idx, {
+            "obs": self.obs[idx], "action": self.action[idx],
+            "reward": self.reward[idx], "next_obs": self.next_obs[idx],
+            "done": self.done[idx],
+        }, w
+
+    def update(self, idx, td):
+        for i, t in zip(idx, td):                     # per-item updates
+            self.pri[i] = (abs(t) + 1e-6) ** self.alpha
+            self.max_pri = max(self.max_pri, self.pri[i])
+
+
+def trainer_iteration_time(use_ours: bool, capacity=100_000, iters=60) -> float:
+    n_envs = 8
+    spec, v_reset, v_step = make_vec("cartpole", n_envs)
+    agent = make_dqn(spec, DQNConfig())
+    ast = agent.init(jax.random.PRNGKey(0))
+    env_state, obs = v_reset(jax.random.PRNGKey(1))
+    learn = jax.jit(agent.learn)
+    act = jax.jit(agent.act)
+
+    if use_ours:
+        ex = {"obs": jnp.zeros((4,)), "action": jnp.zeros((), jnp.int32),
+              "reward": jnp.zeros(()), "next_obs": jnp.zeros((4,)),
+              "done": jnp.zeros(())}
+        rb = PrioritizedReplay(ReplayConfig(capacity=capacity, fanout=128), ex)
+        rst = rb.init()
+        insert = jax.jit(rb.insert)
+        sample = jax.jit(lambda s, k: rb.sample(s, k, 64))
+        update = jax.jit(rb.update_priorities)
+    else:
+        rb = NaiveNumpyPER(capacity, 4)
+
+    def one_iter(i, ast, rst, env_state, obs):
+        key = jax.random.fold_in(jax.random.PRNGKey(2), i)
+        a = act(ast, obs, key, 0.1)
+        env_state, obs2, rew, done, true_next = v_step(env_state, a, key)
+        tr = {"obs": obs, "action": a, "reward": rew,
+              "next_obs": true_next, "done": done.astype(jnp.float32)}
+        if use_ours:
+            rst = insert(rst, tr)
+            idx, items, w = sample(rst, key)
+            ast, _, td = learn(ast, items, w)
+            rst = update(rst, idx, td)
+        else:
+            rb.insert(np.asarray(tr["obs"]), np.asarray(tr["action"]),
+                      np.asarray(tr["reward"]), np.asarray(tr["next_obs"]),
+                      np.asarray(tr["done"]))
+            idx, items, w = rb.sample(64)
+            ast, _, td = learn(ast, jax.tree.map(jnp.asarray, items),
+                               jnp.asarray(w.astype(np.float32)))
+            rb.update(idx, np.asarray(td))
+        return ast, rst, env_state, obs2
+
+    rst = rst if use_ours else None
+    # warmup buffer + jit
+    for i in range(12):
+        ast, rst, env_state, obs = one_iter(i, ast, rst, env_state, obs)
+    jax.block_until_ready(obs)
+    t0 = time.perf_counter()
+    for i in range(iters):
+        ast, rst, env_state, obs = one_iter(100 + i, ast, rst, env_state, obs)
+    jax.block_until_ready(obs)
+    return (time.perf_counter() - t0) / iters
+
+
+def run(csv=True):
+    rows = []
+    for cap in (10_000, 100_000):
+        naive = trainer_iteration_time(False, cap)
+        ours = trainer_iteration_time(True, cap)
+        rows.append((f"fig11/naive_N{cap}", naive * 1e6, 1.0))
+        rows.append((f"fig11/ours_N{cap}", ours * 1e6, naive / ours))
+    if csv:
+        for name, us, derived in rows:
+            print(f"{name},{us:.1f},{derived:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,79 @@
+"""Fig. 12 / §V-D — design-space exploration on profiled curves.
+
+Profiles the actual throughput of (a) data collection vs actor lanes and
+(b) learning vs learner batch lanes on this host, then solves Eq. 5 by
+exhaustive search.  CSV derived column = realized collection/consumption
+ratio of the chosen allocation."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.agents.dqn import DQNConfig, make_dqn
+from repro.core.replay import PrioritizedReplay, ReplayConfig
+from repro.envs.classic import make_vec
+from repro.runtime import dse
+
+
+def actor_throughput(lanes: int) -> float:
+    spec, v_reset, v_step = make_vec("cartpole", lanes)
+    agent = make_dqn(spec, DQNConfig())
+    ast = agent.init(jax.random.PRNGKey(0))
+    env_state, obs = v_reset(jax.random.PRNGKey(1))
+    act = jax.jit(agent.act)
+    step = jax.jit(v_step)
+
+    def fn():
+        nonlocal env_state, obs
+        for i in range(10):
+            key = jax.random.fold_in(jax.random.PRNGKey(2), i)
+            a = act(ast, obs, key, 0.1)
+            env_state, obs, r, d, t = step(env_state, a, key)
+        jax.block_until_ready(obs)
+
+    return dse.measure_throughput(fn, 10 * lanes)
+
+
+def learner_throughput(lanes: int) -> float:
+    """lanes × 32 = learner batch per update."""
+    spec, _, _ = make_vec("cartpole", 1)
+    agent = make_dqn(spec, DQNConfig())
+    ast = agent.init(jax.random.PRNGKey(0))
+    b = 32 * lanes
+    batch = {
+        "obs": jnp.zeros((b, 4)), "action": jnp.zeros((b,), jnp.int32),
+        "reward": jnp.ones((b,)), "next_obs": jnp.zeros((b, 4)),
+        "done": jnp.zeros((b,)),
+    }
+    learn = jax.jit(agent.learn)
+
+    def fn():
+        nonlocal ast
+        for _ in range(10):
+            ast, _, _ = learn(ast, batch, jnp.ones((b,)))
+        jax.block_until_ready(ast.params[0]["w"])
+
+    return dse.measure_throughput(fn, 10 * b)
+
+
+def run(csv=True):
+    lanes = [1, 2, 4, 8]
+    fa = dse.profile_curve(actor_throughput, lanes)
+    fl = dse.profile_curve(learner_throughput, lanes)
+    rows = []
+    for x in lanes:
+        rows.append((f"fig12/actor_curve_{x}", 1e6 / fa[x], fa[x]))
+        rows.append((f"fig12/learner_curve_{x}", 1e6 / fl[x], fl[x]))
+    for ratio in (1.0, 4.0):
+        res = dse.solve(fa, fl, total=8, update_interval=ratio)
+        rows.append((f"fig12/solve_ui{ratio:g}_xa{res.x_actor}_xl{res.x_learner}",
+                     0.0, res.ratio))
+    if csv:
+        for name, us, derived in rows:
+            print(f"{name},{us:.2f},{derived:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,73 @@
+"""Fig. 9 — K-ary sum tree throughput vs binary tree, fanout sweep.
+
+Reproduces the paper's experiment: "4 threads, each running sampling and
+priority update on the shared replay buffer 1000 times" → here, batched
+ops of the same total volume (4×1000 interleaved sample+update rounds),
+jitted, against buffer sizes 1e3/1e4/1e5.  Speedup = binary-tree time /
+K-ary time; the paper finds an optimal K per buffer size (cacheline
+effect) — on TPU-lane layout the optimum sits at K=128/256 (DESIGN.md §2).
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sumtree
+
+THREADS = 4
+ROUNDS = 50            # jitted rounds; each round = sample+update batch
+BATCH = THREADS * 25   # ops in flight per round
+
+
+def bench_tree(capacity: int, fanout: int, use_kernel: bool = False) -> float:
+    """Returns seconds per (sample+update) op."""
+    spec = sumtree.make_spec(capacity, fanout)
+    rng = np.random.default_rng(0)
+    pri = jnp.asarray(rng.uniform(0.1, 2.0, capacity).astype(np.float32))
+    tree = sumtree.build(spec, pri)
+
+    if use_kernel:
+        from repro.kernels import ops as kops
+        sample_fn = lambda t, u: kops.sumtree_sample(spec, t, u)
+        update_fn = lambda t, i, v: kops.sumtree_update(spec, t, i, v)
+    else:
+        sample_fn = lambda t, u: sumtree.sample(spec, t, u)
+        update_fn = lambda t, i, v: sumtree.update(spec, t, i, v)
+
+    @jax.jit
+    def round_(tree, key):
+        k1, k2 = jax.random.split(key)
+        u = jax.random.uniform(k1, (BATCH,))
+        idx, pri = sample_fn(tree, u)
+        new = jax.random.uniform(k2, (BATCH,), minval=0.05, maxval=2.0)
+        return update_fn(tree, idx, new)
+
+    key = jax.random.PRNGKey(0)
+    tree = round_(tree, key)  # compile
+    tree.block_until_ready()
+    t0 = time.perf_counter()
+    for i in range(ROUNDS):
+        tree = round_(tree, jax.random.fold_in(key, i))
+    tree.block_until_ready()
+    dt = time.perf_counter() - t0
+    return dt / (ROUNDS * BATCH)
+
+
+def run(csv=True):
+    rows = []
+    for capacity in (1_000, 10_000, 100_000):
+        base = bench_tree(capacity, 2)
+        rows.append((f"fig9/binary_N{capacity}", base * 1e6, 1.0))
+        for k in (4, 16, 64, 128, 256):
+            t = bench_tree(capacity, k)
+            rows.append((f"fig9/K{k}_N{capacity}", t * 1e6, base / t))
+    if csv:
+        for name, us, derived in rows:
+            print(f"{name},{us:.3f},{derived:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

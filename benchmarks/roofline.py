@@ -1,0 +1,74 @@
+"""§Roofline — aggregate the dry-run artifacts into the per-cell table.
+
+Reads experiments/dryrun/*.json (written by launch/dryrun.py) and prints
+the three-term roofline per (arch × shape × mesh): seconds per term,
+dominant bottleneck, MODEL_FLOPS/HLO_FLOPs useful ratio, and the
+roofline fraction t_compute/max(terms) — the headline §Perf number."""
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+DRYRUN_DIR = os.environ.get("DRYRUN_DIR", "experiments/dryrun")
+
+
+def load_records(d: str = DRYRUN_DIR) -> List[Dict]:
+    recs = []
+    for p in sorted(glob.glob(os.path.join(d, "*.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fraction(r: Dict) -> float:
+    mx = max(r.get("t_compute", 0), r.get("t_memory", 0),
+             r.get("t_collective", 0), 1e-30)
+    return r.get("t_compute", 0) / mx
+
+
+def table(recs: List[Dict]) -> str:
+    hdr = (f"{'arch':<26}{'shape':<13}{'mesh':<6}{'t_comp':>9}{'t_mem':>9}"
+           f"{'t_coll':>9}{'dom':>8}{'useful':>8}{'frac':>7}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in recs:
+        if r.get("status") == "skipped":
+            lines.append(f"{r['arch']:<26}{r['shape']:<13}"
+                         f"{'x'.join(map(str, r['mesh'])):<6}"
+                         f"{'— skipped (full attention @500k)':>40}")
+            continue
+        if r.get("status") != "ok":
+            lines.append(f"{r['arch']:<26}{r['shape']:<13}"
+                         f"{'x'.join(map(str, r['mesh'])):<6}  ERROR: "
+                         f"{r.get('error', '')[:60]}")
+            continue
+        lines.append(
+            f"{r['arch']:<26}{r['shape']:<13}"
+            f"{'x'.join(map(str, r['mesh'])):<6}"
+            f"{r['t_compute']:>9.3f}{r['t_memory']:>9.3f}"
+            f"{r['t_collective']:>9.3f}{r['dominant']:>8}"
+            f"{(r.get('useful_flops_ratio') or 0):>8.3f}{fraction(r):>7.3f}")
+    return "\n".join(lines)
+
+
+def run(csv=True):
+    rows = []
+    for prefix, d in (("roofline", DRYRUN_DIR),
+                      ("roofline_opt", DRYRUN_DIR + "_opt")):
+        if not os.path.isdir(d):
+            continue
+        for r in load_records(d):
+            if r.get("status") != "ok":
+                continue
+            tag = (f"{prefix}/{r['arch']}_{r['shape']}"
+                   f"_pod{2 if r['multi_pod'] else 1}")
+            step_s = max(r["t_compute"], r["t_memory"], r["t_collective"])
+            rows.append((tag, step_s * 1e6, fraction(r)))
+    if csv:
+        for name, us, derived in rows:
+            print(f"{name},{us:.1f},{derived:.4f}")
+    return rows
+
+
+if __name__ == "__main__":
+    print(table(load_records()))

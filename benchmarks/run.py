@@ -1,0 +1,50 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness (deliverable d): one module per paper figure.
+
+    fig8  — parallel framework vs sequential baseline (env-steps/s, speedup)
+    fig9  — K-ary sum tree vs binary tree, fanout sweep (per-op µs, speedup)
+    fig10 — DQN/DDPG/SAC scalability vs parallel actor lanes
+    fig11 — our buffer plugged into a naive trainer (iteration µs, speedup)
+    fig12 — DSE profile curves + Eq. 5 solution (realized ratio)
+    roofline — §Roofline table from the dry-run artifacts (if present)
+
+Run: PYTHONPATH=src python -m benchmarks.run [--only fig9,...]
+"""
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset, e.g. fig9,roofline")
+    args = ap.parse_args()
+
+    from benchmarks import (fig8_baseline, fig9_fanout, fig10_scalability,
+                            fig11_plugin, fig12_dse, roofline)
+    suites = {
+        "fig8": fig8_baseline.run,
+        "fig9": fig9_fanout.run,
+        "fig10": fig10_scalability.run,
+        "fig11": fig11_plugin.run,
+        "fig12": fig12_dse.run,
+        "roofline": roofline.run,
+    }
+    chosen = (args.only.split(",") if args.only else list(suites))
+    print("name,us_per_call,derived")
+    failed = []
+    for name in chosen:
+        try:
+            suites[name](csv=True)
+        except Exception:  # noqa: BLE001 — keep the harness sweeping
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"# FAILED suites: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""DSE auto-tuning (paper §V-D): profile collection/consumption curves on
+this machine and print the Eq. 5 actor/learner allocation.
+
+    PYTHONPATH=src python examples/dse_autotune.py --total 8 --ratio 1
+"""
+
+import argparse
+
+from benchmarks.fig12_dse import actor_throughput, learner_throughput
+from repro.runtime import dse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--total", type=int, default=8)
+    ap.add_argument("--ratio", type=float, default=1.0,
+                    help="update_interval (collect/consume target)")
+    args = ap.parse_args()
+
+    lanes = [1, 2, 4, 8]
+    print("profiling actor curve f_a(x)...")
+    fa = dse.profile_curve(actor_throughput, lanes)
+    print("profiling learner curve f_l(x)...")
+    fl = dse.profile_curve(learner_throughput, lanes)
+    for x in lanes:
+        print(f"  x={x}: f_a={fa[x]:,.0f} steps/s   f_l={fl[x]:,.0f} items/s")
+    res = dse.solve(fa, fl, args.total, args.ratio)
+    print(f"\nEq.5 solution for total={args.total}, "
+          f"update_interval={args.ratio}:")
+    print(f"  actors x_a={res.x_actor} (→ {res.actor_throughput:,.0f}/s), "
+          f"learners x_l={res.x_learner} (→ {res.learner_throughput:,.0f}/s)")
+    print(f"  realized ratio {res.ratio:.2f} (target {res.target_ratio})")
+
+
+if __name__ == "__main__":
+    main()

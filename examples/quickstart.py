@@ -1,0 +1,51 @@
+"""Quickstart: the paper end-to-end on a laptop — parallel actors +
+parallel learners + K-ary-sum-tree prioritized replay, DQN on CartPole.
+
+    PYTHONPATH=src python examples/quickstart.py [--iterations 3000]
+"""
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.agents.dqn import DQNConfig, make_dqn
+from repro.core.replay import PrioritizedReplay, ReplayConfig
+from repro.envs.classic import make_vec
+from repro.runtime import loop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--iterations", type=int, default=3000)
+    ap.add_argument("--n-envs", type=int, default=8, help="parallel actors")
+    ap.add_argument("--fanout", type=int, default=128,
+                    help="sum-tree K (paper Fig. 9 sweep)")
+    ap.add_argument("--use-kernels", action="store_true",
+                    help="route buffer ops through the Pallas kernels")
+    args = ap.parse_args()
+
+    spec, v_reset, v_step = make_vec("cartpole", args.n_envs)
+    agent = make_dqn(spec, DQNConfig(double_q=True))
+    replay = PrioritizedReplay(
+        ReplayConfig(capacity=50_000, fanout=args.fanout,
+                     use_kernels=args.use_kernels),
+        {
+            "obs": jnp.zeros((spec.obs_dim,), jnp.float32),
+            "action": jnp.zeros((), jnp.int32),
+            "reward": jnp.zeros(()),
+            "next_obs": jnp.zeros((spec.obs_dim,), jnp.float32),
+            "done": jnp.zeros(()),
+        },
+    )
+    cfg = loop.LoopConfig(batch_size=64, warmup=500, epsilon=0.15)
+    state, hist = loop.train(agent, replay, v_reset, v_step, cfg,
+                             n_envs=args.n_envs, iterations=args.iterations,
+                             key=jax.random.PRNGKey(0), log_every=256)
+    print(f"\nfinal mean episode return: "
+          f"{float(hist['mean_episode_return'][-1]):.1f} "
+          f"(CartPole solved ≈ 475; random ≈ 10)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Batched actor serving (deliverable b): the paper's act() at LM scale —
+prefill a batch of prompts, then KV-cached greedy decode (serve_step),
+reporting per-step latency and tokens/s.
+
+    PYTHONPATH=src python examples/serve_actor.py --arch granite_8b --smoke
+"""
+
+import argparse
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.agents import token_dqn
+from repro.configs import get_config
+from repro.models import backbone
+from repro.models.config import NO_SHARDING
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite_8b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-sized)")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    key = jax.random.PRNGKey(0)
+    params = backbone.init_params(cfg, key)
+    max_len = args.prompt_len + args.gen
+
+    extra = None
+    s_text = args.prompt_len
+    if cfg.family == "vlm":
+        s_text = max(4, args.prompt_len - cfg.num_patch_tokens)
+        extra = jax.random.normal(
+            key, (args.batch, cfg.num_patch_tokens, cfg.d_model)) * 0.1
+    if cfg.family == "audio":
+        extra = jax.random.normal(
+            key, (args.batch, cfg.encoder_seq, cfg.d_model)) * 0.1
+    prompts = jax.random.randint(key, (args.batch, s_text), 0, cfg.vocab_size)
+
+    prefill = jax.jit(functools.partial(backbone.prefill, cfg, NO_SHARDING),
+                      static_argnames=("max_len",))
+    serve = jax.jit(functools.partial(token_dqn.serve_step, cfg, NO_SHARDING),
+                    donate_argnums=(1,))
+
+    t0 = time.time()
+    logits, cache = prefill(params, prompts, max_len=max_len,
+                            extra_embeds=extra)
+    jax.block_until_ready(logits)
+    t_prefill = time.time() - t0
+    print(f"{cfg.name}: prefill {args.batch}×{s_text} in {t_prefill*1e3:.1f} ms")
+
+    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    outs = [tok]
+    # first call compiles
+    action, cache = serve(params, cache, tok)
+    tok = action[:, None].astype(jnp.int32)
+    t0 = time.time()
+    for _ in range(args.gen - 1):
+        action, cache = serve(params, cache, tok)
+        tok = action[:, None].astype(jnp.int32)
+        outs.append(tok)
+    jax.block_until_ready(tok)
+    dt = time.time() - t0
+    steps = args.gen - 1
+    print(f"decode: {steps} steps × {args.batch} seqs — "
+          f"{dt/steps*1e3:.2f} ms/step, {steps*args.batch/dt:.1f} tok/s")
+    gen = jnp.concatenate(outs, axis=1)
+    print("sample tokens:", gen[0, :16].tolist())
+
+
+if __name__ == "__main__":
+    main()

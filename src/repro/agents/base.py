@@ -1,0 +1,55 @@
+"""Agent API (paper §II-A): act(s) → a, learn(data, is) → new priorities.
+
+Every agent is a pure-functional bundle over an ``AgentState``; ``learn``
+returns per-item |TD| for the prioritized replay buffer update (paper
+Alg. 1 lines 17-18)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Tuple
+
+import jax
+
+Pytree = Any
+
+
+class AgentState(NamedTuple):
+    params: Pytree
+    target: Pytree
+    opt: Pytree
+    step: jax.Array
+    extra: Pytree = ()     # algorithm-specific (e.g. SAC log-alpha, its opt)
+
+
+@dataclasses.dataclass(frozen=True)
+class Agent:
+    """act/learn function bundle; see dqn.py etc. for constructors."""
+
+    name: str
+    init: Callable[[jax.Array], AgentState]
+    act: Callable[..., jax.Array]          # (state, obs, rng, explore) → action
+    learn: Callable[..., Tuple[AgentState, Dict[str, jax.Array], jax.Array]]
+    # learn(state, batch, is_weights) → (state', metrics, |td|)
+
+
+def mlp_init(key, sizes, dtype=None):
+    import jax.numpy as jnp
+    dt = dtype or jnp.float32
+    params = []
+    ks = jax.random.split(key, len(sizes) - 1)
+    for i, (a, b) in enumerate(zip(sizes[:-1], sizes[1:])):
+        w = jax.random.normal(ks[i], (a, b)) * (2.0 / (a + b)) ** 0.5
+        params.append({"w": w.astype(dt), "b": jnp.zeros((b,), dt)})
+    return params
+
+
+def mlp_apply(params, x, final_act=None):
+    import jax.numpy as jnp
+    for i, layer in enumerate(params):
+        x = x @ layer["w"] + layer["b"]
+        if i < len(params) - 1:
+            x = jax.nn.relu(x)
+    if final_act is not None:
+        x = final_act(x)
+    return x

@@ -1,0 +1,69 @@
+"""DDPG learner (paper's continuous-action algorithm set)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.agents.base import Agent, AgentState, mlp_apply, mlp_init
+from repro.envs.classic import EnvSpec
+from repro.optim import adam
+
+
+@dataclasses.dataclass(frozen=True)
+class DDPGConfig:
+    hidden: Tuple[int, ...] = (256, 256)
+    gamma: float = 0.99
+    tau: float = 0.005
+    expl_noise: float = 0.1
+    opt: adam.AdamConfig = adam.AdamConfig(lr=1e-3)
+
+
+def make_ddpg(spec: EnvSpec, cfg: DDPGConfig) -> Agent:
+    assert not spec.discrete
+    scale = (spec.action_high - spec.action_low) / 2.0
+    mid = (spec.action_high + spec.action_low) / 2.0
+
+    def pi(params, obs):
+        return mlp_apply(params, obs, final_act=jnp.tanh) * scale + mid
+
+    def q(params, obs, act):
+        return mlp_apply(params, jnp.concatenate([obs, act], -1))[..., 0]
+
+    def init(key) -> AgentState:
+        k1, k2 = jax.random.split(key)
+        params = {
+            "pi": mlp_init(k1, (spec.obs_dim, *cfg.hidden, spec.action_dim)),
+            "q": mlp_init(k2, (spec.obs_dim + spec.action_dim, *cfg.hidden, 1)),
+        }
+        return AgentState(params, jax.tree.map(jnp.copy, params),
+                          adam.init(params, cfg.opt), jnp.zeros((), jnp.int32))
+
+    def act(state, obs, rng, epsilon=0.0):
+        a = pi(state.params["pi"], obs)
+        noise = jax.random.normal(rng, a.shape) * cfg.expl_noise * scale * (epsilon > 0)
+        return jnp.clip(a + noise, spec.action_low, spec.action_high)
+
+    def learn(state, batch, is_w) -> Tuple[AgentState, Dict, jax.Array]:
+        obs, act_, rew = batch["obs"], batch["action"], batch["reward"]
+        nobs, done = batch["next_obs"], batch["done"]
+        a_next = pi(state.target["pi"], nobs)
+        tgt = rew + cfg.gamma * (1 - done) * q(state.target["q"], nobs, a_next)
+
+        def loss_fn(params):
+            td = q(params["q"], obs, act_) - jax.lax.stop_gradient(tgt)
+            critic = jnp.mean(is_w * jnp.square(td))
+            actor = -jnp.mean(q(jax.lax.stop_gradient(params)["q"], obs,
+                                pi(params["pi"], obs)))
+            return critic + actor, td
+
+        (loss, td), grads = jax.value_and_grad(loss_fn, has_aux=True)(state.params)
+        new_params, new_opt, gnorm = adam.update(grads, state.opt, state.params, cfg.opt)
+        new_target = adam.ema_update(state.target, new_params, cfg.tau)
+        return (AgentState(new_params, new_target, new_opt, state.step + 1),
+                {"loss": loss, "grad_norm": gnorm}, jnp.abs(td))
+
+    return Agent("ddpg", init, act, learn)

@@ -1,0 +1,75 @@
+"""DQN / DDQN learners (paper §II-C, Eq. 1-3) with PER importance weights."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.agents.base import Agent, AgentState, mlp_apply, mlp_init
+from repro.envs.classic import EnvSpec
+from repro.optim import adam
+
+
+@dataclasses.dataclass(frozen=True)
+class DQNConfig:
+    hidden: Tuple[int, ...] = (256, 256)
+    gamma: float = 0.99
+    tau: float = 0.005             # Polyak target update
+    double_q: bool = False         # DDQN
+    opt: adam.AdamConfig = adam.AdamConfig(lr=1e-3)
+
+
+def make_dqn(spec: EnvSpec, cfg: DQNConfig) -> Agent:
+    assert spec.discrete
+    sizes = (spec.obs_dim, *cfg.hidden, spec.action_dim)
+
+    def init(key) -> AgentState:
+        params = mlp_init(key, sizes)
+        return AgentState(
+            params=params,
+            target=jax.tree.map(jnp.copy, params),
+            opt=adam.init(params, cfg.opt),
+            step=jnp.zeros((), jnp.int32),
+        )
+
+    def act(state: AgentState, obs, rng, epsilon=0.0):
+        q = mlp_apply(state.params, obs)
+        greedy = jnp.argmax(q, axis=-1)
+        rnd = jax.random.randint(rng, greedy.shape, 0, spec.action_dim)
+        take_rnd = jax.random.uniform(jax.random.fold_in(rng, 1), greedy.shape) < epsilon
+        return jnp.where(take_rnd, rnd, greedy)
+
+    def learn(state: AgentState, batch, is_w
+              ) -> Tuple[AgentState, Dict[str, jax.Array], jax.Array]:
+        obs, act_, rew = batch["obs"], batch["action"], batch["reward"]
+        nobs, done = batch["next_obs"], batch["done"]
+
+        q_next_t = mlp_apply(state.target, nobs)
+        if cfg.double_q:
+            sel = jnp.argmax(mlp_apply(state.params, nobs), axis=-1)
+            v_next = jnp.take_along_axis(q_next_t, sel[:, None], 1)[:, 0]
+        else:
+            v_next = jnp.max(q_next_t, axis=-1)
+        tgt = rew + cfg.gamma * (1.0 - done) * v_next
+
+        def loss_fn(params):
+            q = mlp_apply(params, obs)
+            q_sa = jnp.take_along_axis(q, act_[:, None].astype(jnp.int32), 1)[:, 0]
+            td = q_sa - jax.lax.stop_gradient(tgt)
+            return jnp.mean(is_w * jnp.square(td)), td
+
+        (loss, td), grads = jax.value_and_grad(loss_fn, has_aux=True)(state.params)
+        new_params, new_opt, gnorm = adam.update(grads, state.opt, state.params, cfg.opt)
+        new_target = adam.ema_update(state.target, new_params, cfg.tau)
+        metrics = {"loss": loss, "grad_norm": gnorm, "q_mean": jnp.mean(td + tgt)}
+        return (
+            AgentState(new_params, new_target, new_opt, state.step + 1),
+            metrics,
+            jnp.abs(td),
+        )
+
+    return Agent(name="ddqn" if cfg.double_q else "dqn",
+                 init=init, act=act, learn=learn)

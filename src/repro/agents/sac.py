@@ -1,0 +1,111 @@
+"""SAC learner — tanh-Gaussian actor, twin critics, learned temperature."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.agents.base import Agent, AgentState, mlp_apply, mlp_init
+from repro.envs.classic import EnvSpec
+from repro.optim import adam
+
+LOG_STD_MIN, LOG_STD_MAX = -10.0, 2.0
+
+
+@dataclasses.dataclass(frozen=True)
+class SACConfig:
+    hidden: Tuple[int, ...] = (256, 256)
+    gamma: float = 0.99
+    tau: float = 0.005
+    init_alpha: float = 0.2
+    learn_alpha: bool = True
+    opt: adam.AdamConfig = adam.AdamConfig(lr=3e-4)
+
+
+def make_sac(spec: EnvSpec, cfg: SACConfig) -> Agent:
+    assert not spec.discrete
+    scale = (spec.action_high - spec.action_low) / 2.0
+    mid = (spec.action_high + spec.action_low) / 2.0
+    target_entropy = -float(spec.action_dim)
+
+    def actor_dist(params, obs):
+        out = mlp_apply(params, obs)
+        mu, log_std = jnp.split(out, 2, axis=-1)
+        log_std = jnp.clip(log_std, LOG_STD_MIN, LOG_STD_MAX)
+        return mu, jnp.exp(log_std)
+
+    def sample_action(params, obs, rng):
+        mu, std = actor_dist(params, obs)
+        eps = jax.random.normal(rng, mu.shape)
+        pre = mu + std * eps
+        a = jnp.tanh(pre)
+        # log prob with tanh correction
+        logp = (-0.5 * (eps**2 + jnp.log(2 * jnp.pi)) - jnp.log(std)).sum(-1)
+        logp = logp - jnp.sum(jnp.log(1 - a**2 + 1e-6), axis=-1)
+        return a * scale + mid, logp
+
+    def q(params, obs, act):
+        return mlp_apply(params, jnp.concatenate([obs, act], -1))[..., 0]
+
+    def init(key) -> AgentState:
+        ks = jax.random.split(key, 3)
+        params = {
+            "pi": mlp_init(ks[0], (spec.obs_dim, *cfg.hidden, 2 * spec.action_dim)),
+            "q1": mlp_init(ks[1], (spec.obs_dim + spec.action_dim, *cfg.hidden, 1)),
+            "q2": mlp_init(ks[2], (spec.obs_dim + spec.action_dim, *cfg.hidden, 1)),
+        }
+        log_alpha = jnp.asarray(jnp.log(cfg.init_alpha), jnp.float32)
+        alpha_opt = adam.init(log_alpha, cfg.opt)
+        return AgentState(params, jax.tree.map(jnp.copy, params),
+                          adam.init(params, cfg.opt), jnp.zeros((), jnp.int32),
+                          extra=(log_alpha, alpha_opt))
+
+    def act(state, obs, rng, epsilon=0.0):
+        mu, std = actor_dist(state.params["pi"], obs)
+        a_det = jnp.tanh(mu) * scale + mid
+        a_sto, _ = sample_action(state.params["pi"], obs, rng)
+        return jnp.where(epsilon > 0, a_sto, a_det)
+
+    def learn(state, batch, is_w) -> Tuple[AgentState, Dict, jax.Array]:
+        obs, act_, rew = batch["obs"], batch["action"], batch["reward"]
+        nobs, done = batch["next_obs"], batch["done"]
+        log_alpha, alpha_opt = state.extra
+        alpha = jnp.exp(log_alpha)
+        rng = jax.random.fold_in(jax.random.PRNGKey(23), state.step)
+        k1, k2 = jax.random.split(rng)
+
+        a_next, logp_next = sample_action(state.params["pi"], nobs, k1)
+        v_next = jnp.minimum(q(state.target["q1"], nobs, a_next),
+                             q(state.target["q2"], nobs, a_next)) - alpha * logp_next
+        tgt = rew + cfg.gamma * (1 - done) * v_next
+
+        def loss_fn(params):
+            td1 = q(params["q1"], obs, act_) - jax.lax.stop_gradient(tgt)
+            td2 = q(params["q2"], obs, act_) - jax.lax.stop_gradient(tgt)
+            critic = jnp.mean(is_w * (jnp.square(td1) + jnp.square(td2)))
+            a_pi, logp = sample_action(params["pi"], obs, k2)
+            q_pi = jnp.minimum(q(jax.lax.stop_gradient(params)["q1"], obs, a_pi),
+                               q(jax.lax.stop_gradient(params)["q2"], obs, a_pi))
+            actor = jnp.mean(alpha * logp - q_pi)
+            return critic + actor, (0.5 * (jnp.abs(td1) + jnp.abs(td2)), logp)
+
+        (loss, (td, logp)), grads = jax.value_and_grad(loss_fn, has_aux=True)(state.params)
+        new_params, new_opt, gnorm = adam.update(grads, state.opt, state.params, cfg.opt)
+        new_target = adam.ema_update(state.target, new_params, cfg.tau)
+
+        if cfg.learn_alpha:
+            def alpha_loss_fn(la):
+                return -jnp.exp(la) * jnp.mean(jax.lax.stop_gradient(logp) + target_entropy)
+            ga = jax.grad(alpha_loss_fn)(log_alpha)
+            log_alpha_new, alpha_opt, _ = adam.update(ga, alpha_opt, log_alpha, cfg.opt)
+        else:
+            log_alpha_new = log_alpha
+
+        return (AgentState(new_params, new_target, new_opt, state.step + 1,
+                           extra=(log_alpha_new, alpha_opt)),
+                {"loss": loss, "grad_norm": gnorm, "alpha": alpha}, td)
+
+    return Agent("sac", init, act, learn)

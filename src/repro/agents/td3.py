@@ -1,0 +1,87 @@
+"""TD3 learner — twin critics, delayed policy, target smoothing."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.agents.base import Agent, AgentState, mlp_apply, mlp_init
+from repro.envs.classic import EnvSpec
+from repro.optim import adam
+
+
+@dataclasses.dataclass(frozen=True)
+class TD3Config:
+    hidden: Tuple[int, ...] = (256, 256)
+    gamma: float = 0.99
+    tau: float = 0.005
+    expl_noise: float = 0.1
+    policy_noise: float = 0.2
+    noise_clip: float = 0.5
+    policy_delay: int = 2
+    opt: adam.AdamConfig = adam.AdamConfig(lr=1e-3)
+
+
+def make_td3(spec: EnvSpec, cfg: TD3Config) -> Agent:
+    assert not spec.discrete
+    scale = (spec.action_high - spec.action_low) / 2.0
+    mid = (spec.action_high + spec.action_low) / 2.0
+
+    def pi(params, obs):
+        return mlp_apply(params, obs, final_act=jnp.tanh) * scale + mid
+
+    def q(params, obs, act):
+        return mlp_apply(params, jnp.concatenate([obs, act], -1))[..., 0]
+
+    def init(key) -> AgentState:
+        ks = jax.random.split(key, 3)
+        params = {
+            "pi": mlp_init(ks[0], (spec.obs_dim, *cfg.hidden, spec.action_dim)),
+            "q1": mlp_init(ks[1], (spec.obs_dim + spec.action_dim, *cfg.hidden, 1)),
+            "q2": mlp_init(ks[2], (spec.obs_dim + spec.action_dim, *cfg.hidden, 1)),
+        }
+        return AgentState(params, jax.tree.map(jnp.copy, params),
+                          adam.init(params, cfg.opt), jnp.zeros((), jnp.int32))
+
+    def act(state, obs, rng, epsilon=0.0):
+        a = pi(state.params["pi"], obs)
+        noise = jax.random.normal(rng, a.shape) * cfg.expl_noise * scale * (epsilon > 0)
+        return jnp.clip(a + noise, spec.action_low, spec.action_high)
+
+    def learn(state, batch, is_w) -> Tuple[AgentState, Dict, jax.Array]:
+        obs, act_, rew = batch["obs"], batch["action"], batch["reward"]
+        nobs, done = batch["next_obs"], batch["done"]
+        rng = jax.random.fold_in(jax.random.PRNGKey(17), state.step)
+
+        noise = jnp.clip(
+            jax.random.normal(rng, act_.shape) * cfg.policy_noise,
+            -cfg.noise_clip, cfg.noise_clip) * scale
+        a_next = jnp.clip(pi(state.target["pi"], nobs) + noise,
+                          spec.action_low, spec.action_high)
+        v_next = jnp.minimum(q(state.target["q1"], nobs, a_next),
+                             q(state.target["q2"], nobs, a_next))
+        tgt = rew + cfg.gamma * (1 - done) * v_next
+        do_policy = (state.step % cfg.policy_delay) == 0
+
+        def loss_fn(params):
+            td1 = q(params["q1"], obs, act_) - jax.lax.stop_gradient(tgt)
+            td2 = q(params["q2"], obs, act_) - jax.lax.stop_gradient(tgt)
+            critic = jnp.mean(is_w * (jnp.square(td1) + jnp.square(td2)))
+            actor = -jnp.mean(q(jax.lax.stop_gradient(params)["q1"], obs,
+                                pi(params["pi"], obs)))
+            loss = critic + jnp.where(do_policy, actor, 0.0)
+            return loss, 0.5 * (jnp.abs(td1) + jnp.abs(td2))
+
+        (loss, td), grads = jax.value_and_grad(loss_fn, has_aux=True)(state.params)
+        new_params, new_opt, gnorm = adam.update(grads, state.opt, state.params, cfg.opt)
+        new_target = jax.tree.map(
+            lambda t, o: jnp.where(do_policy,
+                                   adam.ema_update(t, o, cfg.tau), t),
+            state.target, new_params)
+        return (AgentState(new_params, new_target, new_opt, state.step + 1),
+                {"loss": loss, "grad_norm": gnorm}, td)
+
+    return Agent("td3", init, act, learn)

@@ -1,0 +1,163 @@
+"""Token-MDP Q-learner over the assigned LM backbones.
+
+The paper's learner (§V-B) at LM scale: Q(s, ·) = the backbone's logits;
+a transition is one position of a trajectory segment (state = prefix,
+action = next token, per-position reward/done).  The DQN/DDQN TD rule
+(paper Eq. 1-3) applies verbatim, PER importance weights included, and
+per-*sequence* mean |TD| is the new buffer priority.
+
+``train_step`` is the function the multi-pod dry-run lowers for the
+``train_4k`` cells.  Memory discipline at 32B–400B scale:
+  * params FSDP(data[,pod]) × TP(model); optimizer state same sharding
+    (= ZeRO-1), bf16 m/v for the big archs;
+  * gradient accumulation over ``accum`` microbatches (lax.scan);
+  * per-layer remat inside the backbone scan;
+  * EMA target network (bf16 copy, same sharding).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import backbone
+from repro.models.config import ModelConfig, ShardingConfig
+from repro.optim import adam
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenDQNConfig:
+    gamma: float = 0.99
+    target_tau: float = 0.01
+    double_q: bool = True
+    accum: int = 1                 # gradient-accumulation microbatches
+    opt: adam.AdamConfig = adam.AdamConfig(lr=3e-5)
+
+
+class TrainState(NamedTuple):
+    params: Pytree
+    target: Pytree
+    opt: adam.AdamState
+    step: jax.Array
+
+
+def init_train_state(cfg: ModelConfig, tcfg: TokenDQNConfig, key) -> TrainState:
+    params = backbone.init_params(cfg, key)
+    return TrainState(
+        params=params,
+        target=jax.tree.map(jnp.copy, params),
+        opt=adam.init(params, tcfg.opt),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def state_specs(cfg: ModelConfig, shd: ShardingConfig, state_shape: TrainState):
+    """PartitionSpec tree for TrainState (ZeRO-1: opt state mirrors params)."""
+    from jax.sharding import PartitionSpec as P
+    pspec = backbone.param_specs(cfg, shd, state_shape.params)
+    mspec = backbone.param_specs(cfg, shd, state_shape.opt.m)
+    return TrainState(
+        params=pspec,
+        target=pspec,
+        opt=adam.AdamState(count=P(), m=mspec, v=mspec),
+        step=P(),
+    )
+
+
+def _td_loss(cfg: ModelConfig, tcfg: TokenDQNConfig, params, target_params,
+             shd: ShardingConfig, mb: Dict[str, jax.Array]):
+    """Per-microbatch TD loss.  mb: tokens/actions/rewards/dones (b, S),
+    is_weights (b,), optional extra_embeds."""
+    tokens, actions = mb["tokens"], mb["actions"]
+    rewards, dones, is_w = mb["rewards"], mb["dones"], mb["is_weights"]
+    extra = mb.get("extra_embeds")
+
+    logits = backbone.forward(cfg, shd, params, tokens, extra)      # (b,S*,V)
+    off = logits.shape[1] - tokens.shape[1]          # vlm: patch offset
+    q = logits[:, off:, :].astype(jnp.float32)
+
+    tgt_logits = backbone.forward(cfg, shd, target_params, tokens, extra)
+    qt = tgt_logits[:, off:, :].astype(jnp.float32)
+
+    q_sa = jnp.take_along_axis(q, actions[..., None], axis=-1)[..., 0]
+    if tcfg.double_q:   # DDQN: select with online, evaluate with target
+        sel = jnp.argmax(q, axis=-1)
+        v_next_all = jnp.take_along_axis(qt, sel[..., None], axis=-1)[..., 0]
+    else:
+        v_next_all = jnp.max(qt, axis=-1)
+    # s' of position t is position t+1; terminal segment tail bootstraps 0
+    v_next = jnp.concatenate(
+        [v_next_all[:, 1:], jnp.zeros_like(v_next_all[:, :1])], axis=1)
+    tgt = rewards + tcfg.gamma * (1.0 - dones) * v_next
+    td = q_sa - jax.lax.stop_gradient(tgt)
+    loss = jnp.mean(is_w[:, None] * jnp.square(td))
+    seq_td = jnp.mean(jnp.abs(td), axis=1)           # (b,) → new priorities
+    return loss, (seq_td, jnp.mean(q_sa))
+
+
+def train_step(
+    cfg: ModelConfig,
+    shd: ShardingConfig,
+    tcfg: TokenDQNConfig,
+    state: TrainState,
+    batch: Dict[str, jax.Array],
+) -> Tuple[TrainState, Dict[str, jax.Array], jax.Array]:
+    """One learner update (paper Alg. 1 lines 12-18, token MDP).
+
+    Returns (state', metrics, per-sequence |TD| for priority update).
+    Data parallelism comes from batch sharding (GSPMD inserts the
+    gradient reduce — the parameter-server push/pull, DESIGN.md §2).
+    """
+    accum = max(1, tcfg.accum)
+    b = batch["tokens"].shape[0]
+    assert b % accum == 0, (b, accum)
+    mbs = jax.tree.map(
+        lambda x: x.reshape((accum, b // accum) + x.shape[1:]), batch)
+    # §Perf iteration 2: the (B,…)→(accum, B/accum,…) reshape is sharding-
+    # ambiguous — GSPMD may place the data axis on the *accum* dim, fully
+    # replicating every microbatch's activations.  Pin the batch axis.
+    from repro.models.layers import dp as _dp, shard as _shard
+    mbs = jax.tree.map(
+        lambda x: _shard(x, shd, None, _dp(shd), *(None,) * (x.ndim - 2)),
+        mbs)
+
+    grad_fn = jax.value_and_grad(
+        lambda p, mb: _td_loss(cfg, tcfg, p, state.target, shd, mb),
+        has_aux=True)
+
+    def micro(carry, mb):
+        gsum, losssum, qsum = carry
+        (loss, (seq_td, qmean)), g = grad_fn(state.params, mb)
+        gsum = jax.tree.map(jnp.add, gsum, g)
+        return (gsum, losssum + loss, qsum + qmean), seq_td
+
+    gzero = jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+    if accum == 1:
+        (loss, (seq_td, qmean)), grads = grad_fn(
+            state.params, jax.tree.map(lambda x: x[0], mbs))
+        tds = seq_td
+    else:
+        (grads, loss, qmean), tds = jax.lax.scan(
+            micro, (gzero, jnp.zeros(()), jnp.zeros(())), mbs)
+        grads = jax.tree.map(lambda g: g / accum, grads)
+        loss, qmean = loss / accum, qmean / accum
+        tds = tds.reshape(b)
+
+    new_params, new_opt, gnorm = adam.update(grads, state.opt, state.params, tcfg.opt)
+    new_target = adam.ema_update(state.target, new_params, tcfg.target_tau)
+    metrics = {"loss": loss, "grad_norm": gnorm, "q_mean": qmean}
+    return TrainState(new_params, new_target, new_opt, state.step + 1), metrics, tds
+
+
+def serve_step(cfg: ModelConfig, shd: ShardingConfig, params, cache,
+               tokens) -> Tuple[jax.Array, Any]:
+    """Actor act(): one KV-cached decode step → greedy Q action + cache."""
+    logits, cache = backbone.decode_step(cfg, shd, params, cache, tokens)
+    return jnp.argmax(logits[:, -1, :], axis=-1), cache

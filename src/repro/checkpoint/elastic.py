@@ -1,0 +1,43 @@
+"""Elastic restart: reshard a restored pytree onto a (possibly different)
+mesh.  A job checkpointed on a 2-pod 512-chip mesh can restart on a
+single 256-chip pod (or vice versa): restore() yields host-resident full
+arrays; ``reshard`` device_puts each leaf with the sharding derived from
+the *current* mesh + the model's PartitionSpec tree.  Straggler/failure
+policy (DESIGN.md §4.5): on node loss, the job restarts from the last
+committed step on the surviving slice — actor shards refill the replay
+buffer (not checkpointed by default, matching the paper's process-local
+buffers), learner state resumes exactly.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Pytree = Any
+
+
+def _filter_spec(mesh: Mesh, spec: P) -> P:
+    """Drop axis names that don't exist in the current mesh (elastic
+    shrink: a 'pod' axis from a multi-pod checkpoint vanishes on 1 pod)."""
+    def keep(entry):
+        if entry is None:
+            return None
+        if isinstance(entry, (tuple, list)):
+            kept = tuple(a for a in entry if a in mesh.axis_names)
+            return kept if kept else None
+        return entry if entry in mesh.axis_names else None
+
+    return P(*(keep(e) for e in spec))
+
+
+def reshard(tree: Pytree, specs: Pytree, mesh: Mesh) -> Pytree:
+    """device_put every leaf with its (mesh-filtered) NamedSharding."""
+    def put(x, spec):
+        s = NamedSharding(mesh, _filter_spec(mesh, spec))
+        return jax.device_put(x, s)
+
+    return jax.tree.map(put, tree, specs,
+                        is_leaf=lambda x: not isinstance(x, (dict, list, tuple)))

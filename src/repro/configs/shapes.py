@@ -1,0 +1,90 @@
+"""Assigned input shapes and ShapeDtypeStruct stand-ins (dry-run inputs).
+
+Shapes (LM family — seq_len × global_batch):
+    train_4k      4_096 × 256   → lowers train_step (token-Q learner)
+    prefill_32k  32_768 × 32    → lowers prefill (actor episode bootstrap)
+    decode_32k   32_768 × 128   → lowers serve_step (1 token, 32k KV cache)
+    long_500k   524_288 × 1     → serve_step; sub-quadratic archs only
+
+``input_specs`` returns weak-type-correct ShapeDtypeStructs — no device
+allocation — for every model input of the given (arch, shape) cell.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCase:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeCase] = {
+    "train_4k": ShapeCase("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeCase("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeCase("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeCase("long_500k", 524_288, 1, "decode"),
+}
+
+
+def runnable(cfg: ModelConfig, shape: str) -> bool:
+    """long_500k is skipped for pure-full-attention archs (DESIGN.md §5)."""
+    if shape == "long_500k":
+        return cfg.sub_quadratic
+    return True
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def token_specs(cfg: ModelConfig, case: ShapeCase) -> Dict[str, Any]:
+    """Model inputs for the given cell (tokens + modality stubs)."""
+    b, s = case.global_batch, case.seq_len
+    specs: Dict[str, Any] = {}
+    if case.kind == "decode":
+        specs["tokens"] = _sds((b, 1), jnp.int32)
+        return specs
+    s_text = s
+    if cfg.family == "vlm":
+        s_text = s - cfg.num_patch_tokens
+        specs["extra_embeds"] = _sds((b, cfg.num_patch_tokens, cfg.d_model),
+                                     jnp.bfloat16)
+    if cfg.family == "audio":
+        specs["extra_embeds"] = _sds((b, cfg.encoder_seq, cfg.d_model),
+                                     jnp.bfloat16)
+    specs["tokens"] = _sds((b, s_text), jnp.int32)
+    return specs
+
+
+def learner_batch_specs(cfg: ModelConfig, case: ShapeCase) -> Dict[str, Any]:
+    """Transition minibatch for the token-Q learner train_step:
+    tokens/actions/rewards/dones per position + PER importance weights."""
+    b, s = case.global_batch, case.seq_len
+    s_text = s
+    specs: Dict[str, Any] = {}
+    if cfg.family == "vlm":
+        s_text = s - cfg.num_patch_tokens
+        specs["extra_embeds"] = _sds((b, cfg.num_patch_tokens, cfg.d_model),
+                                     jnp.bfloat16)
+    if cfg.family == "audio":
+        specs["extra_embeds"] = _sds((b, cfg.encoder_seq, cfg.d_model),
+                                     jnp.bfloat16)
+    specs.update(
+        tokens=_sds((b, s_text), jnp.int32),
+        actions=_sds((b, s_text), jnp.int32),
+        rewards=_sds((b, s_text), jnp.float32),
+        dones=_sds((b, s_text), jnp.float32),
+        is_weights=_sds((b,), jnp.float32),
+    )
+    return specs

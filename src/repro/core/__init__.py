@@ -1,0 +1,14 @@
+"""Core: the paper's contribution — K-ary sum tree prioritized replay."""
+
+from repro.core import sumtree
+from repro.core.replay import PrioritizedReplay, ReplayConfig, ReplayState
+from repro.core.distributed import ShardedPrioritizedReplay, ShardedReplayConfig
+
+__all__ = [
+    "sumtree",
+    "PrioritizedReplay",
+    "ReplayConfig",
+    "ReplayState",
+    "ShardedPrioritizedReplay",
+    "ShardedReplayConfig",
+]

@@ -1,0 +1,102 @@
+"""Sharded replay buffer across a device mesh (DESIGN.md §2, last row).
+
+The paper's single shared buffer in DRAM becomes, at pod scale, one shard
+per data-axis device: local storage + a local K-ary sum tree.  Sampling is
+*stratified*: each learner shard draws B/D items from its own tree (full
+data locality — no all-to-all of transitions) and the importance weights
+are computed against the **global** priority distribution:
+
+    inclusion prob of item i on shard d:  q(i) = (B/D) · p_i / S_d
+    PER-consistent weight:                w_i ∝ (N_glob · p_i / S_glob)^(-β)
+
+where S_d is the shard root sum (local tree root) and S_glob/N_glob come
+from a single scalar ``psum`` — 8 bytes per step, negligible collective
+cost.  The β-correction against the global distribution keeps the learner
+objective equal to the paper's single-buffer objective in expectation (the
+stratification across shards only changes variance, not bias, because the
+per-shard sample count is fixed and weights divide out q(i)).
+
+All functions are written to run inside ``shard_map`` over the data axes;
+each call sees its local shard and the mesh axis name(s).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.replay import PrioritizedReplay, ReplayConfig, ReplayState
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedReplayConfig:
+    capacity_per_shard: int
+    fanout: int = 128
+    alpha: float = 0.6
+    eps: float = 1e-6
+    use_kernels: bool = False
+    axis_names: Tuple[str, ...] = ("data",)
+
+
+class ShardedPrioritizedReplay:
+    """Per-shard API; call inside shard_map over ``axis_names``."""
+
+    def __init__(self, config: ShardedReplayConfig, example_item: Pytree):
+        self.config = config
+        self.local = PrioritizedReplay(
+            ReplayConfig(
+                capacity=config.capacity_per_shard,
+                fanout=config.fanout,
+                alpha=config.alpha,
+                eps=config.eps,
+                use_kernels=config.use_kernels,
+            ),
+            example_item,
+        )
+
+    def init(self) -> ReplayState:
+        return self.local.init()
+
+    # -- global scalars (one psum of 2 floats) -----------------------------
+
+    def global_stats(self, state: ReplayState) -> Tuple[jax.Array, jax.Array]:
+        tot = state.tree[0]
+        cnt = state.count.astype(jnp.float32)
+        for ax in self.config.axis_names:
+            tot = jax.lax.psum(tot, ax)
+            cnt = jax.lax.psum(cnt, ax)
+        return tot, cnt
+
+    # -- ops ----------------------------------------------------------------
+
+    def insert(self, state: ReplayState, items: Pytree) -> ReplayState:
+        """Local insert — actors write to their own shard (no collective)."""
+        return self.local.insert(state, items)
+
+    def insert_begin(self, state: ReplayState, batch: int):
+        return self.local.insert_begin(state, batch)
+
+    def insert_commit(self, state, slots, items):
+        return self.local.insert_commit(state, slots, items)
+
+    def sample(
+        self,
+        state: ReplayState,
+        rng: jax.Array,
+        batch_per_shard: int,
+        beta: float | jax.Array = 0.4,
+    ) -> Tuple[jax.Array, Pytree, jax.Array]:
+        """Stratified global sample: B/D local draws, global IS weights."""
+        g_tot, g_cnt = self.global_stats(state)
+        return self.local.sample(
+            state, rng, batch_per_shard, beta,
+            global_total=g_tot, global_count=g_cnt,
+        )
+
+    def update_priorities(self, state, idx, td_errors) -> ReplayState:
+        return self.local.update_priorities(state, idx, td_errors)

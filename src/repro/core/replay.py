@@ -1,0 +1,203 @@
+"""Prioritized replay buffer with lazy-writing insertion (paper §IV-D).
+
+The paper's thread-safety mechanisms map to functional JAX as follows
+(see DESIGN.md §2):
+
+  * locks            → batched single-program ops (no shared mutability);
+  * lazy writing     → two-phase insert: ``insert_begin`` zeroes the
+                       priorities of the in-flight slots, then sampling /
+                       learning may run against that tree state (in-flight
+                       slots are invisible, the paper's exact invariant),
+                       then ``insert_commit`` writes storage and restores
+                       P_max.  Because the learner step has *no data
+                       dependency* on the storage write, XLA overlaps the
+                       HBM copy with learner compute — the same overlap
+                       the paper's lock split enables;
+  * write-after-read → ``update_priorities`` applies priorities computed
+                       at sample time even if inserts landed in between
+                       (paper §IV-D3: tolerated transient inconsistency).
+
+Priorities follow PER (Schaul et al., the paper's [24]): stored priority
+``p = (|δ| + ε)^α``; importance weights ``w = (N·Pr(i))^(-β) / max_w``.
+New insertions receive P_max (paper §IV-A1).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sumtree
+from repro.core.sumtree import SumTreeSpec
+
+Pytree = Any
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class ReplayState:
+    """Functional state of one replay-buffer shard."""
+
+    tree: jax.Array           # flat K-ary sum tree (priorities^α)
+    storage: Pytree           # pytree of (capacity, ...) arrays
+    head: jax.Array           # int32 — next insert position (FIFO eviction)
+    count: jax.Array          # int32 — number of valid entries (≤ capacity)
+    max_priority: jax.Array   # f32 — running P_max (already ^α-scaled)
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplayConfig:
+    capacity: int
+    fanout: int = sumtree.DEFAULT_FANOUT
+    alpha: float = 0.6          # priority exponent
+    eps: float = 1e-6           # priority floor
+    use_kernels: bool = False   # route tree ops through Pallas kernels
+
+
+class PrioritizedReplay:
+    """Single-shard prioritized replay buffer (paper §IV).
+
+    All methods are pure functions of ``ReplayState`` and jit-friendly.
+    Batched throughout: B parallel inserts / samples / updates per call
+    replace the paper's B concurrent threads.
+    """
+
+    def __init__(self, config: ReplayConfig, example_item: Pytree):
+        self.config = config
+        self.spec: SumTreeSpec = sumtree.make_spec(config.capacity, config.fanout)
+        self._example = jax.tree.map(jnp.asarray, example_item)
+        if config.use_kernels:
+            from repro.kernels import ops as kernel_ops  # lazy import
+            self._kops = kernel_ops
+        else:
+            self._kops = None
+
+    # -- state ------------------------------------------------------------
+
+    def init(self) -> ReplayState:
+        cap = self.config.capacity
+        storage = jax.tree.map(
+            lambda x: jnp.zeros((cap,) + tuple(x.shape), x.dtype), self._example
+        )
+        return ReplayState(
+            tree=sumtree.init(self.spec),
+            storage=storage,
+            head=jnp.zeros((), jnp.int32),
+            count=jnp.zeros((), jnp.int32),
+            max_priority=jnp.ones((), jnp.float32),
+        )
+
+    # -- tree-op dispatch (pure jnp vs Pallas kernels) ---------------------
+
+    def _tree_update(self, tree, idx, vals):
+        if self._kops is not None:
+            return self._kops.sumtree_update(self.spec, tree, idx, vals)
+        return sumtree.update(self.spec, tree, idx, vals)
+
+    def _tree_sample(self, tree, u):
+        if self._kops is not None:
+            return self._kops.sumtree_sample(self.spec, tree, u)
+        return sumtree.sample(self.spec, tree, u)
+
+    # -- insertion (lazy writing, paper Alg. 3 INSERT) ---------------------
+
+    def insert_slots(self, state: ReplayState, batch: int) -> jax.Array:
+        """FIFO slot allocation: next ``batch`` indices after head."""
+        return (state.head + jnp.arange(batch, dtype=jnp.int32)) % self.config.capacity
+
+    def insert_begin(self, state: ReplayState, batch: int) -> Tuple[ReplayState, jax.Array]:
+        """Phase 1 — atomically zero the in-flight slots' priorities.
+
+        After this returns, sampling from ``state.tree`` can never select
+        a slot whose data write is still pending.
+        """
+        slots = self.insert_slots(state, batch)
+        tree = self._tree_update(state.tree, slots, jnp.zeros((batch,), jnp.float32))
+        return dataclasses.replace(state, tree=tree), slots
+
+    def insert_commit(
+        self, state: ReplayState, slots: jax.Array, items: Pytree
+    ) -> ReplayState:
+        """Phase 2 — storage write, then restore priority to P_max."""
+        storage = jax.tree.map(
+            lambda buf, x: buf.at[slots].set(x), state.storage, items
+        )
+        batch = slots.shape[0]
+        pmax = jnp.broadcast_to(state.max_priority, (batch,))
+        tree = self._tree_update(state.tree, slots, pmax)
+        return dataclasses.replace(
+            state,
+            tree=tree,
+            storage=storage,
+            head=(state.head + batch) % self.config.capacity,
+            count=jnp.minimum(state.count + batch, self.config.capacity),
+        )
+
+    def insert(self, state: ReplayState, items: Pytree) -> ReplayState:
+        """Convenience: begin + commit in one call."""
+        batch = jax.tree.leaves(items)[0].shape[0]
+        state, slots = self.insert_begin(state, batch)
+        return self.insert_commit(state, slots, items)
+
+    # -- sampling (paper Alg. 3 SAMPLE) ------------------------------------
+
+    def sample(
+        self,
+        state: ReplayState,
+        rng: jax.Array,
+        batch: int,
+        beta: float | jax.Array = 0.4,
+        global_total: jax.Array | None = None,
+        global_count: jax.Array | None = None,
+    ) -> Tuple[jax.Array, Pytree, jax.Array]:
+        """Prioritized sample of ``batch`` items.
+
+        Returns (indices, items, importance_weights).  For a sharded
+        buffer, pass the psum'd ``global_total`` / ``global_count`` so the
+        importance weights are computed against the *global* distribution
+        (stratified sampling across shards; DESIGN.md §2).
+        """
+        u = jax.random.uniform(rng, (batch,))
+        idx, pri = self._tree_sample(state.tree, u)
+        items = self._gather(state.storage, idx)
+        tot = state.tree[0] if global_total is None else global_total
+        cnt = state.count if global_count is None else global_count
+        prob = pri / jnp.maximum(tot, 1e-12)
+        w = (jnp.maximum(cnt, 1).astype(jnp.float32) * prob) ** (-beta)
+        w = w / jnp.maximum(jnp.max(w), 1e-12)
+        return idx, items, w
+
+    def _gather(self, storage: Pytree, idx: jax.Array) -> Pytree:
+        if self._kops is not None:
+            return jax.tree.map(
+                lambda buf: self._kops.prioritized_gather(buf, idx), storage
+            )
+        return jax.tree.map(lambda buf: buf[idx], storage)
+
+    # -- priority maintenance ----------------------------------------------
+
+    def priorities_from_td(self, td_errors: jax.Array) -> jax.Array:
+        return (jnp.abs(td_errors) + self.config.eps) ** self.config.alpha
+
+    def update_priorities(
+        self, state: ReplayState, idx: jax.Array, td_errors: jax.Array
+    ) -> ReplayState:
+        """Write-after-read tolerated (paper §IV-D3)."""
+        pri = self.priorities_from_td(td_errors)
+        tree = self._tree_update(state.tree, idx, pri)
+        return dataclasses.replace(
+            state,
+            tree=tree,
+            max_priority=jnp.maximum(state.max_priority, jnp.max(pri)),
+        )
+
+    def get_priority(self, state: ReplayState, idx: jax.Array) -> jax.Array:
+        """Θ(1) priority retrieval (paper Alg. 3 PRIORITYRETRIEVAL)."""
+        return sumtree.get(self.spec, state.tree, idx)
+
+    def total_priority(self, state: ReplayState) -> jax.Array:
+        return sumtree.total(self.spec, state.tree)

@@ -1,0 +1,125 @@
+"""Pure-JAX vectorized control environments (the paper's OpenAI-gym
+analogue — LunarLander is swapped for CartPole/Pendulum so the physics
+runs vmapped/jitted on-device; same discrete/continuous split the paper
+tests: DQN on discrete, DDPG/SAC on continuous).
+
+API mirrors the paper §II-A: reset() → s, step(a) → (s', r, done)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class EnvSpec:
+    name: str
+    obs_dim: int
+    action_dim: int           # discrete: number of actions; continuous: dim
+    discrete: bool
+    max_steps: int
+    action_low: float = -1.0
+    action_high: float = 1.0
+
+
+class EnvState(NamedTuple):
+    x: jax.Array        # physics state
+    t: jax.Array        # step counter
+
+
+# ---------------------------------------------------------------- CartPole
+
+CARTPOLE = EnvSpec("cartpole", 4, 2, True, 500)
+
+_G, _MC, _MP, _L, _F, _DT = 9.8, 1.0, 0.1, 0.5, 10.0, 0.02
+
+
+def cartpole_reset(key) -> Tuple[EnvState, jax.Array]:
+    x = jax.random.uniform(key, (4,), minval=-0.05, maxval=0.05)
+    return EnvState(x, jnp.zeros((), jnp.int32)), x
+
+
+def cartpole_step(state: EnvState, action: jax.Array, key
+                  ) -> Tuple[EnvState, jax.Array, jax.Array, jax.Array]:
+    x, x_dot, th, th_dot = state.x
+    force = jnp.where(action == 1, _F, -_F)
+    cos, sin = jnp.cos(th), jnp.sin(th)
+    tot_m = _MC + _MP
+    tmp = (force + _MP * _L * th_dot**2 * sin) / tot_m
+    th_acc = (_G * sin - cos * tmp) / (_L * (4.0 / 3.0 - _MP * cos**2 / tot_m))
+    x_acc = tmp - _MP * _L * th_acc * cos / tot_m
+    nx = jnp.stack([x + _DT * x_dot, x_dot + _DT * x_acc,
+                    th + _DT * th_dot, th_dot + _DT * th_acc])
+    t = state.t + 1
+    done = (
+        (jnp.abs(nx[0]) > 2.4) | (jnp.abs(nx[2]) > 0.2095) | (t >= CARTPOLE.max_steps)
+    )
+    return EnvState(nx, t), nx, jnp.ones(()), done
+
+
+# ---------------------------------------------------------------- Pendulum
+
+PENDULUM = EnvSpec("pendulum", 3, 1, False, 200, -2.0, 2.0)
+
+
+def _pend_obs(x):
+    th, th_dot = x
+    return jnp.stack([jnp.cos(th), jnp.sin(th), th_dot])
+
+
+def pendulum_reset(key) -> Tuple[EnvState, jax.Array]:
+    k1, k2 = jax.random.split(key)
+    th = jax.random.uniform(k1, (), minval=-jnp.pi, maxval=jnp.pi)
+    thd = jax.random.uniform(k2, (), minval=-1.0, maxval=1.0)
+    x = jnp.stack([th, thd])
+    return EnvState(x, jnp.zeros((), jnp.int32)), _pend_obs(x)
+
+
+def pendulum_step(state: EnvState, action: jax.Array, key
+                  ) -> Tuple[EnvState, jax.Array, jax.Array, jax.Array]:
+    th, th_dot = state.x
+    u = jnp.clip(action.reshape(()), -2.0, 2.0)
+    norm_th = ((th + jnp.pi) % (2 * jnp.pi)) - jnp.pi
+    cost = norm_th**2 + 0.1 * th_dot**2 + 0.001 * u**2
+    new_thd = th_dot + (3 * 9.81 / (2 * 1.0) * jnp.sin(th) + 3.0 / 1.0 * u) * 0.05
+    new_thd = jnp.clip(new_thd, -8.0, 8.0)
+    new_th = th + new_thd * 0.05
+    x = jnp.stack([new_th, new_thd])
+    t = state.t + 1
+    done = t >= PENDULUM.max_steps
+    return EnvState(x, t), _pend_obs(x), -cost, done
+
+
+# ---------------------------------------------------------- registry / vector
+
+ENVS = {
+    "cartpole": (CARTPOLE, cartpole_reset, cartpole_step),
+    "pendulum": (PENDULUM, pendulum_reset, pendulum_step),
+}
+
+
+def make_vec(name: str, n_envs: int):
+    """Vectorized auto-resetting environment (paper §V-A parallel actors:
+    each actor owns an independent env instance)."""
+    spec, reset, step = ENVS[name]
+
+    def v_reset(key):
+        ks = jax.random.split(key, n_envs)
+        return jax.vmap(reset)(ks)
+
+    def v_step(states, actions, key):
+        ks = jax.random.split(key, n_envs)
+        nstates, obs, rew, done = jax.vmap(step)(states, actions, ks)
+        # auto-reset finished episodes
+        rks = jax.random.split(jax.random.fold_in(key, 1), n_envs)
+        rstates, robs = jax.vmap(reset)(rks)
+        nstates = jax.tree.map(
+            lambda a, b: jnp.where(
+                done.reshape((n_envs,) + (1,) * (a.ndim - 1)), b, a), nstates, rstates)
+        obs_out = jnp.where(done[:, None], robs, obs)
+        return nstates, obs_out, rew, done, obs  # obs = true next obs pre-reset
+
+    return spec, v_reset, v_step

@@ -1,0 +1,48 @@
+"""Token MDP — the LM-scale environment for the assigned architectures.
+
+State = current token; action = predicted next token; the environment
+advances by sampling from a fixed random Markov chain over the vocab;
+reward = 1 if the agent's action equals the sampled next token.  The
+optimal policy is argmax of the transition matrix — learnable by the
+token-Q learner, with known optimal expected reward (tests assert the
+learner approaches it)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenMDPSpec:
+    vocab: int
+    concentration: float = 0.3   # lower → peakier transitions (easier)
+
+
+class TokenMDPState(NamedTuple):
+    token: jax.Array   # (n,) int32 current tokens
+    table: jax.Array   # (V, V) transition logits (fixed per MDP instance)
+
+
+def make(spec: TokenMDPSpec, key: jax.Array, n_envs: int):
+    table = jax.random.gumbel(key, (spec.vocab, spec.vocab)) / spec.concentration
+
+    def reset(key):
+        tok = jax.random.randint(key, (n_envs,), 0, spec.vocab)
+        return TokenMDPState(tok, table), tok
+
+    def step(state: TokenMDPState, actions: jax.Array, key: jax.Array):
+        logits = state.table[state.token]                     # (n, V)
+        nxt = jax.random.categorical(key, logits, axis=-1)
+        reward = (actions == nxt).astype(jnp.float32)
+        return TokenMDPState(nxt, state.table), nxt, reward, jnp.zeros_like(reward, bool)
+
+    def optimal_reward(n_samples: int = 4096) -> float:
+        # E[max_a P(a|s)] under the stationary token distribution ≈ uniform
+        probs = jax.nn.softmax(table, axis=-1)
+        return float(jnp.mean(jnp.max(probs, axis=-1)))
+
+    return reset, step, optimal_reward

@@ -1,0 +1,139 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Responsibilities:
+  * flat-tree ↔ level-matrix conversion (the kernels see each level as a
+    (groups, K) matrix; the rest of the system uses the paper's flat
+    implicit-array layout);
+  * batch padding to kernel block multiples, with delta-neutral padding
+    for updates (a padded update targets the same leaf as the *last* real
+    update of that leaf — or the leaf's current value — so sequential
+    last-writer-wins semantics are preserved);
+  * VMEM-budget dispatch: trees whose working set exceeds the kernel's
+    VMEM budget fall back to the ``core.sumtree`` XLA path (documented in
+    DESIGN.md §4.2);
+  * ``interpret`` switching: on CPU (this container) kernels run in
+    Pallas interpret mode; on TPU they compile to Mosaic.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sumtree as _st
+from repro.core.sumtree import SumTreeSpec
+from repro.kernels import gather as _gather
+from repro.kernels import sumtree_sample as _ks
+from repro.kernels import sumtree_update as _ku
+
+# VMEM working-set cap for the kernel path (bytes); beyond this the ops
+# fall back to XLA.  ~8 MB leaves headroom for one-hots + transients in
+# a 16 MB v5e VMEM.
+KERNEL_TREE_BYTE_BUDGET = 8 * 1024 * 1024
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _interpret() -> bool:
+    return not _on_tpu()
+
+
+def _ceil_to(x: int, k: int) -> int:
+    return ((x + k - 1) // k) * k
+
+
+def tree_to_levels(spec: SumTreeSpec, tree: jax.Array) -> List[jax.Array]:
+    """Split the flat array into (groups, K) level matrices, root first."""
+    out = []
+    for level in range(len(spec.level_sizes)):
+        off, size = spec.offsets[level], spec.level_sizes[level]
+        lv = jax.lax.dynamic_slice(tree, (off,), (size,))
+        out.append(lv.reshape(size // spec.fanout, spec.fanout))
+    return out
+
+
+def levels_to_tree(spec: SumTreeSpec, levels) -> jax.Array:
+    flat = jnp.concatenate([lv.reshape(-1) for lv in levels])
+    return jnp.concatenate([flat, jnp.zeros((1,), flat.dtype)])  # scratch
+
+
+def kernel_path_ok(spec: SumTreeSpec) -> bool:
+    return spec.total_size * 4 <= KERNEL_TREE_BYTE_BUDGET
+
+
+# -- sampling ---------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def sumtree_sample(spec: SumTreeSpec, tree: jax.Array, u: jax.Array):
+    """Kernel-backed batched sample; XLA fallback above VMEM budget."""
+    if not kernel_path_ok(spec):
+        return _st.sample(spec, tree, u)
+    b = u.shape[0]
+    bp = _ceil_to(b, _ks.SAMPLE_BLOCK)
+    u_pad = jnp.pad(u, (0, bp - b), constant_values=0.5)
+    levels = tree_to_levels(spec, tree)[1:]  # descent starts below the root
+    idx, pri = _ks.sumtree_sample_levels(
+        levels, u_pad,
+        capacity=spec.capacity, fanout=spec.fanout,
+        interpret=_interpret(),
+    )
+    return idx[:b], pri[:b]
+
+
+# -- update -------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def sumtree_update(spec: SumTreeSpec, tree: jax.Array, idx: jax.Array,
+                   values: jax.Array) -> jax.Array:
+    """Kernel-backed batched SET; XLA fallback above VMEM budget."""
+    if not kernel_path_ok(spec):
+        return _st.update(spec, tree, idx, values)
+    b = idx.shape[0]
+    bp = _ceil_to(b, _ku.UPDATE_BLOCK)
+    if bp != b:
+        # Delta-neutral padding: pad entries re-write the final value of
+        # leaf `t` (the last real write to `t`, else its current value),
+        # so the extra last-writers change nothing.
+        t = spec.capacity - 1
+        match = idx == t
+        has = jnp.any(match)
+        last_pos = jnp.max(jnp.where(match, jnp.arange(b), -1))
+        cur = tree[spec.leaf_offset + t]
+        pad_val = jnp.where(has, values[jnp.maximum(last_pos, 0)], cur)
+        idx = jnp.pad(idx, (0, bp - b), constant_values=t)
+        values = jnp.concatenate(
+            [values, jnp.broadcast_to(pad_val, (bp - b,)).astype(values.dtype)]
+        )
+    root, *levels = tree_to_levels(spec, tree)
+    out = _ku.sumtree_update_levels(
+        root, levels, idx.astype(jnp.int32), values,
+        fanout=spec.fanout, interpret=_interpret(),
+    )
+    return levels_to_tree(spec, out)
+
+
+# -- storage gather -----------------------------------------------------------
+
+@jax.jit
+def prioritized_gather(storage: jax.Array, idx: jax.Array) -> jax.Array:
+    """out[i] = storage[idx[i]], any-rank storage (leading index dim)."""
+    shape = storage.shape
+    n = shape[0]
+    feat = 1
+    for s in shape[1:]:
+        feat *= s
+    if feat == 0:
+        return storage[idx]
+    flat = storage.reshape(n, feat)
+    b = idx.shape[0]
+    bp = _ceil_to(b, _gather.BATCH_BLOCK)
+    np_ = _ceil_to(n, _gather.STORAGE_BLOCK)
+    idx_pad = jnp.pad(idx.astype(jnp.int32), (0, bp - b))
+    flat_pad = jnp.pad(flat, ((0, np_ - n), (0, 0)))
+    out = _gather.gather_rows(flat_pad, idx_pad, interpret=_interpret())
+    return out[:b].reshape((b,) + shape[1:])

@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests).
+
+These are the *semantic* references: ``core.sumtree`` is itself the
+reference implementation of the tree algorithms, so the tree oracles
+delegate to it on the flat-array layout; the gather oracle is a plain
+take.  Kernels must match these bit-for-bit up to f32 accumulation
+ordering (tests assert allclose with tight tolerances, and exact
+index equality for sampling away from fp cutoff ties).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sumtree
+from repro.core.sumtree import SumTreeSpec
+
+
+def sumtree_sample_ref(spec: SumTreeSpec, tree: jax.Array, u: jax.Array):
+    return sumtree.sample(spec, tree, u)
+
+
+def sumtree_update_ref(spec: SumTreeSpec, tree: jax.Array, idx, values):
+    return sumtree.update(spec, tree, idx, values)
+
+
+def gather_rows_ref(storage: jax.Array, idx: jax.Array) -> jax.Array:
+    return storage[idx]
+
+
+def flash_attention_ref(q, k, v, attention="full", window=0, causal=True,
+                        is_global=True):
+    """Naive (N, S, hd) attention oracle for the flash kernels."""
+    import math
+
+    n, s, hd = q.shape
+    sk = k.shape[1]
+    scores = jnp.einsum("nqd,nkd->nqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(hd)
+    qp = jnp.arange(s)[:, None]
+    kp = jnp.arange(sk)[None, :]
+    mask = jnp.ones((s, sk), bool)
+    if causal:
+        mask &= kp <= qp
+    if attention == "sliding" and not is_global:
+        mask &= kp > qp - window
+    if attention == "chunked" and not is_global:
+        mask &= (kp // window) == (qp // window)
+    scores = jnp.where(mask[None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("nqk,nkd->nqd", w, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,106 @@
+"""Pallas TPU kernel: batched prefix-sum descent over the K-ary sum tree.
+
+TPU adaptation of the paper's cache-aligned sibling scan (§IV-C3/C4):
+
+  * every level is a ``(groups, K)`` matrix — one sibling group per row;
+    with K = 128 a row is exactly one lane-aligned VREG row (the paper's
+    cache line);
+  * per-sample row gather is a **one-hot MXU matmul**
+    ``one_hot(group_idx, G) @ level`` — TPUs have no efficient scalar
+    gather, so the "minimise cache misses" goal becomes "turn the
+    irregular access into a dense systolic op";
+  * the linear child scan becomes a lane-parallel ``cumsum`` + first-hit
+    ``argmax`` over the 128-lane row (VPU);
+  * all levels are VMEM-resident (BlockSpec index_map pinned to block 0);
+    the grid streams sample blocks of ``SB`` draws.
+
+VMEM budget: tree bytes + SB·G_leaf·4 (one-hot) + transient rows.  The
+``ops.py`` wrapper falls back to the XLA path when the leaf level exceeds
+the VMEM budget (documented limit; at that size HBM gathers dominate and
+XLA's native gather is the right tool).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+SAMPLE_BLOCK = 128  # SB — samples per grid step
+
+
+def _kernel(capacity: int, fanout: int, u_ref, *refs):
+    """refs = (level_1, ..., level_H, out_idx, out_pri)."""
+    level_refs = refs[:-2]
+    out_idx_ref, out_pri_ref = refs[-2:]
+    k = fanout
+    sb = u_ref.shape[0]
+
+    lvl1 = level_refs[0][...]                      # (1, K) — children of root
+    total = jnp.sum(lvl1.astype(jnp.float32))
+    u = u_ref[...].astype(jnp.float32)
+    residual = jnp.clip(u, 1e-12, 1.0 - 1e-7) * total
+    group = jnp.zeros((sb,), jnp.int32)
+
+    lane = jax.lax.broadcasted_iota(jnp.int32, (sb, k), 1)
+    row_val = jnp.zeros((sb,), jnp.float32)
+    for ref in level_refs:
+        lv = ref[...].astype(jnp.float32)          # (G, K)
+        g = lv.shape[0]
+        giota = jax.lax.broadcasted_iota(jnp.int32, (sb, g), 1)
+        onehot = (group[:, None] == giota).astype(jnp.float32)
+        rows = jax.lax.dot(                        # MXU gather of sibling rows
+            onehot, lv, precision=jax.lax.Precision.HIGHEST
+        )                                          # (SB, K)
+        csum = jnp.cumsum(rows, axis=-1)
+        hit = csum >= residual[:, None]
+        cutoff = jnp.argmax(hit, axis=-1).astype(jnp.int32)
+        cutoff = jnp.where(jnp.any(hit, axis=-1), cutoff, k - 1)
+        sel = (lane == cutoff[:, None]).astype(jnp.float32)
+        picked = jnp.sum(csum * sel, axis=-1)
+        row_val = jnp.sum(rows * sel, axis=-1)
+        residual = residual - (picked - row_val)   # drop prefix before cutoff
+        group = group * k + cutoff
+
+    leaf = jnp.minimum(group, capacity - 1)
+    out_idx_ref[...] = leaf
+    out_pri_ref[...] = row_val
+
+
+def sumtree_sample_levels(
+    levels: Sequence[jax.Array],
+    u: jax.Array,
+    *,
+    capacity: int,
+    fanout: int,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Sample ``u.shape[0]`` leaves from level matrices (top-down, no root).
+
+    ``levels[l]`` has shape (groups_l, K); ``levels[-1]`` is the leaf level.
+    B must be a multiple of SAMPLE_BLOCK (ops.py pads).
+    """
+    b = u.shape[0]
+    assert b % SAMPLE_BLOCK == 0, b
+    grid = (b // SAMPLE_BLOCK,)
+
+    level_specs = [
+        pl.BlockSpec(lv.shape, lambda i: (0, 0)) for lv in levels
+    ]
+    return pl.pallas_call(
+        functools.partial(_kernel, capacity, fanout),
+        grid=grid,
+        in_specs=[pl.BlockSpec((SAMPLE_BLOCK,), lambda i: (i,))] + level_specs,
+        out_specs=[
+            pl.BlockSpec((SAMPLE_BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((SAMPLE_BLOCK,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(u, *levels)

@@ -1,0 +1,97 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+os.environ["REPRO_FLASH_STUB"] = "1"
+
+"""Per-op profile of a dry-run cell: top HBM-bytes ops and top collectives
+(trip-count multiplied) from the compiled partitioned HLO — the CPU-only
+stand-in for a TPU profile (§Perf methodology).
+
+    PYTHONPATH=src python -m repro.launch.analyze --arch qwen1_5_32b --shape train_4k
+"""
+
+import argparse
+import collections
+import re
+from typing import Dict, List, Tuple
+
+from repro.launch import hlo_analysis as HA
+
+
+def op_profile(hlo: str, top: int = 25):
+    blocks, entry = HA._split_computations(hlo)
+    mult_exec, mult_all = HA._multipliers(blocks, entry)
+
+    byte_rows: List[Tuple[float, str, str]] = []
+    coll_rows: List[Tuple[float, str, str]] = []
+    for name, text in blocks.items():
+        me = mult_exec.get(name, 0.0)
+        ma = mult_all.get(name, 0.0)
+        symbols: Dict[str, float] = {}
+        for line in text.splitlines():
+            lm = HA._OPLINE_RE.match(line)
+            if not lm:
+                continue
+            out_name, rhs = lm.group(1), lm.group(2)
+            out_bytes, opcode, operands = HA._parse_rhs(rhs)
+            symbols[out_name] = out_bytes
+            meta = re.search(r'op_name="([^"]+)"', line)
+            label = (meta.group(1)[-90:] if meta else out_name)
+            base = opcode.replace("-start", "").replace("-done", "")
+            if ma > 0:
+                got = HA._line_collective(line)
+                if got is not None:
+                    op, b, n, w = got
+                    coll_rows.append((w * ma, f"{op}(g={n})", label))
+            if me <= 0 or base in HA._SKIP_OPS or not opcode:
+                continue
+            op_bytes = sum(symbols.get(o, 0.0) for o in operands) + out_bytes
+            if base == "fusion":
+                cm = HA._CALLS_NAME_RE.search(rhs)
+                if cm:
+                    ft = HA._fusion_traffic(blocks.get(cm.group(1).lstrip("%"), ""))
+                    if ft is not None:
+                        op_bytes = ft
+            elif base == "dynamic-update-slice" and len(operands) >= 2:
+                op_bytes = 2.0 * symbols.get(operands[1], 0.0)
+            elif base in ("dynamic-slice", "gather"):
+                op_bytes = 2.0 * out_bytes
+            byte_rows.append((op_bytes * me, f"{base}×{me:g}", label))
+
+    byte_rows.sort(reverse=True)
+    coll_rows.sort(reverse=True)
+    total_b = sum(r[0] for r in byte_rows)
+    total_c = sum(r[0] for r in coll_rows)
+    print(f"\n== HBM bytes/device: {total_b/1e9:.1f} GB "
+          f"(t_mem={total_b/HA.HBM_BW:.2f}s) — top {top} ops ==")
+    for b, op, label in byte_rows[:top]:
+        print(f"  {b/1e9:9.2f} GB  {op:<28} {label}")
+    print(f"\n== collective wire bytes/device: {total_c/1e9:.1f} GB "
+          f"(t_coll={total_c/HA.ICI_BW:.2f}s) — top {top} ==")
+    for b, op, label in coll_rows[:top]:
+        print(f"  {b/1e9:9.2f} GB  {op:<24} {label}")
+
+    # aggregate by op kind
+    agg = collections.Counter()
+    for b, op, _ in byte_rows:
+        agg[op.split("×")[0]] += b
+    print("\n== bytes by op kind ==")
+    for k, v in agg.most_common(12):
+        print(f"  {v/1e9:9.2f} GB  {k}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--top", type=int, default=25)
+    args = ap.parse_args()
+    from repro.launch.dryrun import build_cell
+    lower_fn, info = build_cell(args.arch, args.shape, args.multi_pod)
+    print("cell info:", {k: v for k, v in info.items() if k != "skipped"})
+    compiled = lower_fn().compile()
+    op_profile(compiled.as_text(), args.top)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,361 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+os.environ["REPRO_FLASH_STUB"] = "1"  # opaque-cost flash stand-in (see kernels/flash_attention.py)
+
+"""Multi-pod dry-run (deliverable e): lower + compile every
+(architecture × input shape × mesh) cell and record roofline inputs.
+
+MUST be the very first lines above: jax locks the device count on first
+init, and the production meshes need 512 host-platform placeholder
+devices.  Do NOT set this flag anywhere global (tests/benches see 1).
+
+Usage:
+    python -m repro.launch.dryrun --arch internlm2-1.8b --shape train_4k
+    python -m repro.launch.dryrun --all [--multi-pod] [--out experiments/dryrun]
+
+Each cell writes a JSON artifact with memory_analysis, cost_analysis,
+parsed collective stats and the three roofline terms; EXPERIMENTS.md
+§Dry-run/§Roofline are generated from these artifacts.
+"""
+
+import argparse
+import dataclasses
+import functools
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.agents import token_dqn
+from repro.agents.token_dqn import TokenDQNConfig
+from repro.configs import ARCH_IDS, get_config
+from repro.configs import shapes as shp
+from repro.launch import hlo_analysis as HA
+from repro.launch.mesh import make_production_mesh, sharding_config
+from repro.launch.specs import batch_specs, cache_specs, shardings_for, valid_spec
+from repro.models import backbone
+from repro.models.config import ModelConfig, NO_SHARDING
+from repro.optim import adam
+
+
+def choose_tcfg(cfg: ModelConfig, case: shp.ShapeCase, fsdp_size: int) -> TokenDQNConfig:
+    """Accum so each device sees ~1 sequence per microbatch at ≥4B scale,
+    and bf16 optimizer state for the biggest archs (HBM budget)."""
+    big = cfg.d_model >= 4096 or cfg.num_experts >= 64
+    per_dev = max(1, case.global_batch // fsdp_size)
+    accum = per_dev if big else max(1, per_dev // 4)
+    # accum must divide global_batch and keep microbatch divisible by fsdp
+    while case.global_batch % accum or (case.global_batch // accum) % fsdp_size:
+        accum -= 1
+    state_dtype = "bfloat16" if big else None
+    return TokenDQNConfig(accum=accum,
+                          opt=adam.AdamConfig(lr=3e-5, state_dtype=state_dtype))
+
+
+def sds_batch(cfg: ModelConfig, case: shp.ShapeCase):
+    return shp.learner_batch_specs(cfg, case)
+
+
+def per_device_bytes(shapes, shardings) -> float:
+    total = 0.0
+    for s, sh in zip(jax.tree.leaves(shapes), jax.tree.leaves(
+            shardings, is_leaf=lambda x: isinstance(x, NamedSharding))):
+        n = 1
+        for d in s.shape:
+            n *= d
+        total += n * jnp.dtype(s.dtype).itemsize / sh.num_devices_sharded_over()
+    return total
+
+
+def _num_shards(sharding: NamedSharding, shape) -> int:
+    n = 1
+    spec = tuple(sharding.spec) + (None,) * (len(shape) - len(tuple(sharding.spec)))
+    for entry in spec:
+        if entry is None:
+            continue
+        axes = entry if isinstance(entry, (tuple, list)) else (entry,)
+        for a in axes:
+            n *= dict(sharding.mesh.shape)[a]
+    return n
+
+
+def tree_device_bytes(shapes, shardings) -> float:
+    leaves_s = jax.tree.leaves(shapes)
+    leaves_h = jax.tree.leaves(shardings,
+                               is_leaf=lambda x: isinstance(x, NamedSharding))
+    total = 0.0
+    for s, h in zip(leaves_s, leaves_h):
+        n = 1
+        for d in s.shape:
+            n *= d
+        total += n * jnp.dtype(s.dtype).itemsize / _num_shards(h, s.shape)
+    return total
+
+
+def build_probe(arch: str, shape: str, opt: bool = False):
+    """Cost-probe lowering: layers unrolled, accum=1, no sharding/mesh.
+
+    ``lowered.cost_analysis()`` on this module gives *global* FLOPs/bytes
+    with nothing hidden inside layer/microbatch scan bodies (XLA counts
+    while bodies once — EXPERIMENTS.md §Methodology).  True train cost =
+    accum × probe (optimizer/EMA outside the microbatch loop double-counts
+    <1%, documented), plus analytic corrections for sequence-recurrence
+    bodies (xLSTM).
+    """
+    cfg = dataclasses.replace(get_config(arch), scan_layers=False)
+    if opt:
+        cfg = optimized(cfg)
+    case = shp.SHAPES[shape]
+    key = jax.random.PRNGKey(0)
+
+    if case.kind == "train":
+        tcfg = TokenDQNConfig(accum=1)
+        state_shapes = jax.eval_shape(
+            functools.partial(token_dqn.init_train_state, cfg, tcfg), key)
+        b_shapes = sds_batch(cfg, case)
+        fn = functools.partial(token_dqn.train_step, cfg, NO_SHARDING, tcfg)
+        return jax.jit(fn).lower(state_shapes, b_shapes)
+    params_shapes = jax.eval_shape(
+        functools.partial(backbone.init_params, cfg), key)
+    if case.kind == "prefill":
+        t_shapes = shp.token_specs(cfg, case)
+        tokens_s = t_shapes.pop("tokens")
+        extra_s = t_shapes.pop("extra_embeds", None)
+
+        def fn(params, tokens, extra_embeds=None):
+            logits, cache = backbone.prefill(cfg, NO_SHARDING, params, tokens,
+                                             case.seq_len, extra_embeds)
+            return logits[:, -1, :], cache["pos"]
+
+        if extra_s is not None:
+            return jax.jit(fn).lower(params_shapes, tokens_s, extra_s)
+        return jax.jit(fn).lower(params_shapes, tokens_s)
+    cache_shapes = jax.eval_shape(
+        functools.partial(backbone.init_cache, cfg, NO_SHARDING,
+                          case.global_batch, case.seq_len))
+    tok_sds = jax.ShapeDtypeStruct((case.global_batch, 1), jnp.int32)
+    fn = functools.partial(token_dqn.serve_step, cfg, NO_SHARDING)
+    return jax.jit(fn).lower(params_shapes, cache_shapes, tok_sds)
+
+
+OPT_OVERRIDES = dict(attn_impl="flash", moe_ff_tp_fallback=True,
+                     mlstm_chunked=True, moe_local_dispatch=True)
+
+
+def optimized(cfg: ModelConfig) -> ModelConfig:
+    """Beyond-paper §Perf configuration (baseline stays 'naive')."""
+    return dataclasses.replace(cfg, **OPT_OVERRIDES)
+
+
+def build_cell(arch: str, shape: str, multi_pod: bool, opt: bool = False):
+    """Returns (lower_fn, static info) for the cell."""
+    cfg = get_config(arch)
+    if opt:
+        cfg = optimized(cfg)
+    case = shp.SHAPES[shape]
+    if not shp.runnable(cfg, shape):
+        return None, {"skipped": True,
+                      "reason": "long_500k requires sub-quadratic attention "
+                                "(DESIGN.md §5)"}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    shd = sharding_config(multi_pod)
+    fsdp_size = 1
+    for a in shd.fsdp:
+        fsdp_size *= mesh.shape[a]
+
+    key = jax.random.PRNGKey(0)
+
+    if case.kind == "train":
+        tcfg = choose_tcfg(cfg, case, fsdp_size)
+        state_shapes = jax.eval_shape(
+            functools.partial(token_dqn.init_train_state, cfg, tcfg), key)
+        sspec = token_dqn.state_specs(cfg, shd, state_shapes)
+        s_shard = shardings_for(state_shapes, sspec, mesh)
+        b_shapes = sds_batch(cfg, case)
+        b_shard = shardings_for(b_shapes, batch_specs(b_shapes, shd), mesh)
+        fn = functools.partial(token_dqn.train_step, cfg, shd, tcfg)
+        jfn = jax.jit(fn, in_shardings=(s_shard, b_shard), donate_argnums=(0,))
+
+        def lower():
+            with jax.set_mesh(mesh):
+                return jfn.lower(state_shapes, b_shapes)
+
+        info = {"kind": "train", "accum": tcfg.accum,
+                "state_bytes_per_device": tree_device_bytes(state_shapes, s_shard)}
+        return lower, info
+
+    params_shapes = jax.eval_shape(
+        functools.partial(backbone.init_params, cfg), key)
+    pspec = backbone.param_specs(cfg, shd, params_shapes)
+    p_shard = shardings_for(params_shapes, pspec, mesh)
+
+    if case.kind == "prefill":
+        t_shapes = shp.token_specs(cfg, case)
+        t_shard = shardings_for(t_shapes, batch_specs(t_shapes, shd), mesh)
+        max_len = case.seq_len
+
+        def fn(params, tokens, extra_embeds=None):
+            logits, cache = backbone.prefill(cfg, shd, params, tokens,
+                                             max_len, extra_embeds)
+            return logits[:, -1, :], cache["pos"]  # actor bootstrap output
+
+        kwargs = dict(t_shapes)
+        tokens_s = kwargs.pop("tokens")
+        extra_s = kwargs.pop("extra_embeds", None)
+        in_sh = (p_shard, t_shard["tokens"]) + (
+            (t_shard["extra_embeds"],) if extra_s is not None else ())
+        jfn = jax.jit(fn, in_shardings=in_sh)
+
+        def lower():
+            with jax.set_mesh(mesh):
+                if extra_s is not None:
+                    return jfn.lower(params_shapes, tokens_s, extra_s)
+                return jfn.lower(params_shapes, tokens_s)
+
+        info = {"kind": "prefill",
+                "state_bytes_per_device": tree_device_bytes(params_shapes, p_shard)}
+        return lower, info
+
+    # decode / long-decode: serve_step with a seq_len KV cache
+    cache_shapes = jax.eval_shape(
+        functools.partial(backbone.init_cache, cfg, NO_SHARDING,
+                          case.global_batch, case.seq_len))
+    c_shard = shardings_for(cache_shapes, cache_specs(cfg, shd, cache_shapes), mesh)
+    tok_sds = jax.ShapeDtypeStruct((case.global_batch, 1), jnp.int32)
+    tok_shard = NamedSharding(
+        mesh, valid_spec(tok_sds.shape, P(shd.fsdp, None), mesh))
+    fn = functools.partial(token_dqn.serve_step, cfg, shd)
+    jfn = jax.jit(fn, in_shardings=(p_shard, c_shard, tok_shard),
+                  donate_argnums=(1,))
+
+    def lower():
+        with jax.set_mesh(mesh):
+            return jfn.lower(params_shapes, cache_shapes, tok_sds)
+
+    info = {"kind": "decode",
+            "state_bytes_per_device": tree_device_bytes(params_shapes, p_shard),
+            "cache_bytes_per_device": tree_device_bytes(cache_shapes, c_shard)}
+    return lower, info
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str,
+             force: bool = False, opt: bool = False) -> Dict[str, Any]:
+    tag = f"{arch}_{shape}_{'pod2' if multi_pod else 'pod1'}"
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, tag + ".json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+
+    cfg = optimized(get_config(arch)) if opt else get_config(arch)
+    case = shp.SHAPES[shape]
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape, "multi_pod": multi_pod,
+        "opt": opt,
+        "mesh": [2, 16, 16] if multi_pod else [16, 16],
+    }
+    t0 = time.time()
+    try:
+        lower_fn, info = build_cell(arch, shape, multi_pod, opt=opt)
+        rec.update(info)
+        if info.get("skipped"):
+            rec["status"] = "skipped"
+        else:
+            lowered = lower_fn()
+            t_lower = time.time()
+            compiled = lowered.compile()
+            t_comp = time.time()
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis() or {}
+            hlo = compiled.as_text()
+            coll = HA.parse_collectives(hlo)
+            chips = 512 if multi_pod else 256
+            # memory term: fused partitioned HLO, trip-count multiplied
+            g_bytes = HA.hbm_bytes_per_device(hlo) * chips
+            # compute term: unrolled unpartitioned probe (full batch, accum=1
+            # → already whole-step FLOPs; + recurrence-scan corrections)
+            t_probe = time.time()
+            try:
+                probe_cost = build_probe(arch, shape, opt=opt).cost_analysis() or {}
+                g_flops = float(probe_cost.get("flops", 0.0))
+                g_flops += HA.recurrence_flops_correction(
+                    cfg, case, case.kind == "train")
+                g_flops += HA.flash_attention_flops(
+                    cfg, case, case.kind == "train")
+                rec["probe_s"] = round(time.time() - t_probe, 1)
+                rec["probe"] = "ok"
+                rec["probe_bytes_naive"] = probe_cost.get("bytes accessed")
+            except Exception as pe:  # noqa: BLE001
+                g_flops = float(cost.get("flops", 0.0)) * chips
+                rec["probe"] = f"failed: {type(pe).__name__}: {str(pe)[:200]}"
+            terms = HA.cost_terms(g_flops, g_bytes, chips, coll)
+            mf = HA.model_flops(cfg, case)
+            rec.update({
+                "status": "ok",
+                "lower_s": round(t_lower - t0, 1),
+                "compile_s": round(t_comp - t_lower, 1),
+                "memory_analysis": repr(mem),
+                "compiled_cost_flops_per_device": cost.get("flops"),
+                "compiled_cost_bytes_per_device": cost.get("bytes accessed"),
+                "collectives": coll.counts,
+                "collective_raw_bytes": coll.raw_bytes,
+                **terms,
+                "model_flops_global": mf,
+                "useful_flops_ratio": (mf / g_flops if g_flops else None),
+                "dominant": HA.dominant(terms),
+            })
+            print(compiled.memory_analysis())
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    rec["total_s"] = round(time.time() - t0, 1)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+    print(f"[{tag}] {rec['status']} ({rec['total_s']}s) "
+          f"dominant={rec.get('dominant')} err={rec.get('error', '')[:120]}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--opt", action="store_true",
+                    help="beyond-paper optimized config (writes to --out)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    if args.out is None:
+        args.out = "experiments/dryrun_opt" if args.opt else "experiments/dryrun"
+
+    cells = []
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes_ = list(shp.SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for mp in meshes:
+        for a in archs:
+            for s in shapes_:
+                cells.append((a, s, mp))
+
+    ok = err = skipped = 0
+    for a, s, mp in cells:
+        rec = run_cell(a, s, mp, args.out, args.force, opt=args.opt)
+        st = rec["status"]
+        ok += st == "ok"
+        err += st == "error"
+        skipped += st == "skipped"
+    print(f"\ndry-run summary: {ok} ok, {skipped} skipped, {err} errors "
+          f"of {len(cells)} cells")
+    raise SystemExit(1 if err else 0)
+
+
+if __name__ == "__main__":
+    main()

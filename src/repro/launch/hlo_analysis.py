@@ -1,0 +1,456 @@
+"""Roofline-term extraction from compiled dry-run artifacts (§Roofline).
+
+compute  = HLO_FLOPs / (chips × 197 TFLOP/s bf16)
+memory   = HLO_bytes / (chips × 819 GB/s HBM)
+collective = wire_bytes / (chips × 50 GB/s/link ICI)
+
+``cost_analysis()`` on the *partitioned* module reports per-device FLOPs
+and bytes; collective wire bytes are parsed from the compiled HLO text:
+per-device ring-algorithm traffic factors
+
+    all-gather       (n-1)/n × out_bytes
+    reduce-scatter   (n-1)   × out_bytes        (= (n-1)/n × in)
+    all-reduce       2(n-1)/n × bytes
+    all-to-all       (n-1)/n × bytes
+    collective-permute  1 × bytes
+
+with n = collective group size parsed from replica_groups (both the
+explicit {{...}} and the iota [a,b]<=[N] formats).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12      # bf16 / chip (TPU v5e)
+HBM_BW = 819e9           # bytes/s / chip
+ICI_BW = 50e9            # bytes/s / link; per-axis-hop budget (documented)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|(?P<dtype>\w+)\[(?P<shape>[\d,]*)\][^ ]*)\s*"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", re.M)
+
+_TUPLE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: Dict[str, float]
+    wire_bytes: float                 # per device, ring-factored, ×trip counts
+    raw_bytes: Dict[str, float]       # per op kind, unfactored output bytes
+    details: List[Tuple[str, float, int]]  # (op, bytes, group size)
+
+
+def _shape_bytes(dtype: str, shape: str) -> float:
+    n = 1
+    if shape.strip():
+        for d in shape.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _line_collective(line: str):
+    m = _COLL_RE.search(line)
+    if not m:
+        return None
+    op = m.group("op")
+    # shapes strictly between '=' and the opcode occurrence that matched
+    eq = line.find("=")
+    lhs = line[eq: m.start("op")] if eq >= 0 else line[: m.start("op")]
+    bytes_out = sum(_shape_bytes(d, s) for d, s in _TUPLE_RE.findall(lhs))
+    if bytes_out == 0:
+        return None
+    gm = _GROUPS_BRACE_RE.search(line)
+    if gm:
+        n = len([t for t in gm.group(1).split(",") if t.strip() != ""])
+    else:
+        gi = _GROUPS_IOTA_RE.search(line)
+        n = int(gi.group(2)) if gi else 2
+    n = max(n, 2)
+    if op == "all-gather":
+        w = bytes_out * (n - 1) / n
+    elif op == "reduce-scatter":
+        w = bytes_out * (n - 1)
+    elif op == "all-reduce":
+        w = 2 * bytes_out * (n - 1) / n
+    elif op == "all-to-all":
+        w = bytes_out * (n - 1) / n
+    else:  # collective-permute
+        w = bytes_out
+    return op, bytes_out, n, w
+
+
+# --- computation-graph walk: multiply collectives inside while bodies by
+# their static trip counts (XLA cost/ text views count loop bodies ONCE;
+# see EXPERIMENTS.md §Methodology) ---------------------------------------
+
+_BLOCK_HDR_RE = re.compile(r"^(ENTRY\s+)?(%?[\w.\-]+)\s*\(.*?\)\s*->", re.M)
+_WHILE_CALL_RE = re.compile(
+    r"while\((?:[^)]*)\), condition=([%\w.\-]+), body=([%\w.\-]+)")
+_SUBCALL_RE = re.compile(r"(?:calls=|to_apply=)(%?[\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRIP_RE = re.compile(r"s(?:32|64)\[\] constant\((\d+)\)")
+
+
+def _split_computations(hlo: str):
+    headers = [(m.start(), m.group(2).lstrip("%"), bool(m.group(1)))
+               for m in _BLOCK_HDR_RE.finditer(hlo)]
+    blocks, entry = {}, None
+    for i, (pos, name, is_entry) in enumerate(headers):
+        end = headers[i + 1][0] if i + 1 < len(headers) else len(hlo)
+        blocks[name] = hlo[pos:end]
+        if is_entry:
+            entry = name
+    return blocks, entry
+
+
+def _trip_count(cond_text: str) -> int:
+    vals = [int(v) for v in _TRIP_RE.findall(cond_text)]
+    return max(vals) if vals else 1     # dynamic bound → conservative ×1
+
+
+def _multipliers(blocks, entry):
+    """Execution multipliers per computation.
+
+    Returns (mult_exec, mult_all): exec counts only while-body/branch/entry
+    reachability (HBM-visible computations — fusion bodies excluded);
+    'all' additionally descends calls=/to_apply= (for collectives)."""
+    mult_all: Dict[str, float] = {entry: 1.0}
+    mult_exec: Dict[str, float] = {entry: 1.0}
+    order = [entry]
+    seen = set()
+    i = 0
+    while i < len(order):
+        name = order[i]
+        i += 1
+        text = blocks.get(name, "")
+        ma = mult_all.get(name, 0.0)
+        me = mult_exec.get(name, 0.0)
+
+        def add(child, factor, execu):
+            key = (name, child, factor, execu)
+            if key in seen or child not in blocks:
+                return
+            seen.add(key)
+            mult_all[child] = mult_all.get(child, 0.0) + ma * factor
+            if execu:
+                mult_exec[child] = mult_exec.get(child, 0.0) + me * factor
+            if child not in order:
+                order.append(child)
+
+        for cm in _WHILE_CALL_RE.finditer(text):
+            cond = cm.group(1).lstrip("%").rstrip(",")
+            body = cm.group(2).lstrip("%").rstrip(",")
+            trip = float(_trip_count(blocks.get(cond, "")))
+            add(cond, 1.0, True)
+            add(body, trip, True)
+        for cm in _BRANCHES_RE.finditer(text):
+            for child in cm.group(1).split(","):
+                add(child.strip().lstrip("%"), 1.0, True)
+        for cm in _SUBCALL_RE.finditer(text):
+            add(cm.group(1).lstrip("%"), 1.0, False)
+    return mult_exec, mult_all
+
+
+def parse_collectives(hlo: str) -> CollectiveStats:
+    blocks, entry = _split_computations(hlo)
+    if entry is None:                   # fallback: flat scan, no multipliers
+        blocks, entry = {"__all__": hlo}, "__all__"
+    _, mult_all = _multipliers(blocks, entry)
+
+    counts: Dict[str, float] = {}
+    raw: Dict[str, float] = {}
+    wire = 0.0
+    details: List[Tuple[str, float, int]] = []
+    for name, text in blocks.items():
+        m = mult_all.get(name, 0.0)
+        if m <= 0:
+            continue
+        for line in text.splitlines():
+            got = _line_collective(line)
+            if got is None:
+                continue
+            op, bytes_out, n, w = got
+            counts[op] = counts.get(op, 0.0) + m
+            raw[op] = raw.get(op, 0.0) + bytes_out * m
+            wire += w * m
+            details.append((op, bytes_out * m, n))
+    return CollectiveStats(counts, wire, raw, details)
+
+
+# --- HBM-traffic estimate from the fused, partitioned HLO ------------------
+
+_OPLINE_RE = re.compile(r"^\s+(?:ROOT\s+)?(%[\w.\-]+) = (.*)$")
+_SKIP_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "opt-barrier",
+}
+
+
+def _parse_rhs(rhs: str):
+    """rhs = 'TYPE opcode(args), attrs' → (out_bytes, opcode, operand names)."""
+    rhs = rhs.strip()
+    if rhs.startswith("("):
+        depth = 0
+        for i, c in enumerate(rhs):
+            depth += c == "("
+            depth -= c == ")"
+            if depth == 0:
+                break
+        typ, rest = rhs[: i + 1], rhs[i + 1:].strip()
+    else:
+        sp = rhs.find(" ")
+        if sp < 0:
+            return 0.0, "", []
+        typ, rest = rhs[:sp], rhs[sp + 1:].strip()
+    m = re.match(r"([\w\-]+)\((.*)$", rest)
+    if not m:
+        return 0.0, "", []
+    opcode = m.group(1)
+    args = m.group(2).split(")")[0]
+    operands = [a.strip() for a in args.split(",") if a.strip().startswith("%")]
+    out_bytes = sum(_shape_bytes(d, s) for d, s in _TUPLE_RE.findall(typ))
+    return out_bytes, opcode, operands
+
+
+_PARAM_RE = re.compile(r"parameter\((\d+)\)")
+_CALLS_NAME_RE = re.compile(r"calls=(%?[\w.\-]+)")
+
+
+def _fusion_traffic(comp_text: str) -> Optional[float]:
+    """HBM traffic of one fusion from its fused computation body.
+
+    A fusion reads each *parameter* and writes its root — EXCEPT:
+      * a parameter consumed only by dynamic-slice ops is read at slice
+        granularity (the scan-over-layers stacked-weights pattern);
+      * a dynamic-update-slice root writes (and reads) only the update
+        region; the big aliased buffer costs nothing.
+    Returns None if the body can't be parsed.
+    """
+    sym: Dict[str, float] = {}
+    params: Dict[str, float] = {}
+    uses: Dict[str, List[Tuple[str, float]]] = {}
+    root = None
+    for line in comp_text.splitlines():
+        lm = _OPLINE_RE.match(line)
+        if not lm:
+            continue
+        out_name, rhs = lm.group(1), lm.group(2)
+        out_bytes, opcode, operands = _parse_rhs(rhs)
+        sym[out_name] = out_bytes
+        if _PARAM_RE.search(rhs):
+            params[out_name] = out_bytes
+        for o in operands:
+            uses.setdefault(o, []).append((opcode, out_bytes))
+        if " ROOT " in line or line.lstrip().startswith("ROOT"):
+            root = (opcode, operands, out_bytes)
+    if root is None:
+        return None
+    total = 0.0
+    root_opcode, root_operands, root_bytes = root
+    inplace_target = (root_operands[0] if root_opcode == "dynamic-update-slice"
+                      and root_operands else None)
+    for pname, pbytes in params.items():
+        u = uses.get(pname, [])
+        if pname == inplace_target:
+            continue                       # aliased in-place buffer
+        if u and all(op == "dynamic-slice" for op, _ in u):
+            total += sum(b for _, b in u)  # sliced reads only
+        else:
+            total += pbytes
+    if root_opcode == "dynamic-update-slice" and len(root_operands) >= 2:
+        total += 2.0 * sym.get(root_operands[1], root_bytes)
+    else:
+        total += root_bytes
+    return total
+
+
+def hbm_bytes_per_device(hlo: str) -> float:
+    """Σ over HBM-visible ops of (operand + output bytes) × trip multiplier.
+
+    Post-fusion accounting: only ops at computation top level touch HBM.
+    Fusions are analysed through their fused computation (slice-granular
+    parameter reads, in-place dus roots — see _fusion_traffic); top-level
+    in-place/gather ops are special-cased the same way.
+    """
+    blocks, entry = _split_computations(hlo)
+    if entry is None:
+        return 0.0
+    mult_exec, _ = _multipliers(blocks, entry)
+
+    total = 0.0
+    for name, text in blocks.items():
+        m = mult_exec.get(name, 0.0)
+        if m <= 0:
+            continue
+        symbols: Dict[str, float] = {}
+        comp_bytes = 0.0
+        for line in text.splitlines():
+            lm = _OPLINE_RE.match(line)
+            if not lm:
+                continue
+            out_name, rhs = lm.group(1), lm.group(2)
+            out_bytes, opcode, operands = _parse_rhs(rhs)
+            symbols[out_name] = out_bytes
+            base = opcode.replace("-start", "").replace("-done", "")
+            if base in _SKIP_OPS or not opcode:
+                continue
+            op_bytes = sum(symbols.get(o, 0.0) for o in operands) + out_bytes
+            if base == "fusion":
+                cm = _CALLS_NAME_RE.search(rhs)
+                if cm:
+                    ft = _fusion_traffic(blocks.get(cm.group(1).lstrip("%"), ""))
+                    if ft is not None:
+                        op_bytes = ft
+            elif base == "dynamic-update-slice" and len(operands) >= 2:
+                op_bytes = 2.0 * symbols.get(operands[1], 0.0)
+            elif base in ("dynamic-slice", "gather"):
+                op_bytes = 2.0 * out_bytes
+            elif base == "scatter" and len(operands) >= 3:
+                op_bytes = 2.0 * symbols.get(operands[2], 0.0)
+            comp_bytes += op_bytes
+        total += comp_bytes * m
+    return total
+
+
+def cost_terms(global_flops: float, global_bytes: float, chips: int,
+               coll: CollectiveStats) -> Dict[str, float]:
+    """Three roofline terms in seconds.
+
+    compute = HLO_FLOPs/(chips·peak); memory = HLO_bytes/(chips·HBM_bw);
+    collective = wire_bytes/(chip·link_bw) — wire bytes are already
+    per-device (ring-factored per-partition shapes × trip counts)."""
+    return {
+        "flops_global": global_flops,
+        "bytes_global": global_bytes,
+        "collective_bytes_per_device": coll.wire_bytes,
+        "t_compute": global_flops / (chips * PEAK_FLOPS),
+        "t_memory": global_bytes / (chips * HBM_BW),
+        "t_collective": coll.wire_bytes / ICI_BW,
+    }
+
+
+def flash_attention_flops(cfg, case, train: bool) -> float:
+    """Analytic FLOPs of the Pallas flash-attention custom calls (invisible
+    to HLO cost analysis).  Per layer forward: 4·B·H·hd·Σ_q S_eff(q)
+    (QKᵀ + PV, 2 FLOPs per MAC each).  Train factor 5.5 ≈ fwd + target fwd
+    + remat fwd + bwd (dq/dkv recompute P and run 5 block dots ≈ 2.5×fwd).
+    Only reachable blocks execute, so S_eff honors causal/window/chunked.
+    """
+    if cfg.attn_impl != "flash" or cfg.family in ("ssm",):
+        return 0.0
+    s = case.seq_len if case.kind != "decode" else 1
+    if case.kind == "decode":
+        return 0.0   # decode keeps the cached (naive) path
+    b = case.global_batch
+    h, hd = cfg.num_heads, cfg.hd
+    total = 0.0
+    layers = cfg.num_layers
+    for i in range(layers):
+        if cfg.layer_is_global_attn(i) or cfg.attention == "full":
+            s_eff_sum = s * (s + 1) / 2                     # causal triangle
+        elif cfg.attention == "sliding":
+            w = min(cfg.window, s)
+            s_eff_sum = w * (w + 1) / 2 + max(s - w, 0) * w
+        else:  # chunked-local
+            w = min(cfg.window, s)
+            s_eff_sum = max(1, s // w) * w * (w + 1) / 2
+        total += 4.0 * b * h * hd * s_eff_sum
+    # whisper: encoder self-attn + cross-attn keep the naive path (short
+    # encoder length, not flash-eligible) — counted by the probe already.
+    factor = 5.5 if train else 1.0
+    return total * factor
+
+
+def recurrence_flops_correction(cfg, case, train: bool) -> float:
+    """Analytic FLOPs for ops inside *sequence* scans (mLSTM/sLSTM bodies),
+    which the HLO cost probe counts once instead of ×S.  Per token:
+      mLSTM ≈ 12·h·hd² (C/n update + decay + readout)
+      sLSTM ≈ 8·h·hd² (4 recurrent head-local matmuls) + O(h·hd)
+    Scaled ×5 for training (online fwd + remat fwd + bwd 2× + target fwd).
+    Mamba's chunk-scan body is O(h·n·p) per *chunk* — negligible, skipped.
+    """
+    if cfg.family != "ssm":
+        return 0.0
+    h = cfg.num_heads
+    hd = cfg.d_model // h
+    toks = case.global_batch * (case.seq_len if case.kind != "decode" else 1)
+    per_tok = 0.0
+    for i in range(cfg.num_layers):
+        per_tok += (8.0 if i in cfg.slstm_at else 12.0) * h * hd * hd
+    scale = 5.0 if train else 1.0
+    return per_tok * toks * scale
+
+
+def dominant(terms: Dict[str, float]) -> str:
+    keys = ["t_compute", "t_memory", "t_collective"]
+    return max(keys, key=lambda k: terms.get(k, 0.0)).replace("t_", "")
+
+
+# ----------------------------------------------------------- model flops ----
+
+def param_count(cfg) -> Tuple[float, float]:
+    """(total, active) parameter counts from the config (analytic)."""
+    d, hd = cfg.d_model, cfg.hd
+    h, kv, f, v = cfg.num_heads, cfg.num_kv_heads, cfg.d_ff, cfg.vocab_size
+    attn = d * h * hd + 2 * d * kv * hd + h * hd * d
+    dense_mlp = 3 * d * f
+    total = active = 0.0
+    layers = cfg.num_layers
+    if cfg.family == "ssm":
+        for i in range(layers):
+            if i in cfg.slstm_at:
+                blk = 4 * d * d + 4 * cfg.num_heads * (d // cfg.num_heads) ** 2 \
+                    + d * d + 3 * d * ((d * 4) // 3)
+            else:
+                blk = 4 * d * d + d * d + 3 * d * (d * 2)
+            total += blk
+        active = total
+    else:
+        for i in range(layers):
+            lt = attn
+            if cfg.family == "hybrid":
+                di = cfg.ssm_expand * d
+                lt += 2 * d * di + 2 * d * h * cfg.ssm_state + d * h + di * d
+            if cfg.layer_is_moe(i):
+                e_params = 3 * d * f
+                lt_moe = cfg.num_experts * e_params + d * cfg.num_experts
+                lt_active = cfg.experts_per_token * e_params
+                if cfg.num_shared_experts:
+                    shared = 3 * d * f * cfg.num_shared_experts
+                    lt_moe += shared
+                    lt_active += shared
+                total += lt + lt_moe
+                active += lt + lt_active
+            else:
+                total += lt + dense_mlp
+                active += lt + dense_mlp
+        if cfg.family == "audio":
+            enc = cfg.encoder_layers * (attn + dense_mlp)
+            cross = cfg.num_layers * attn
+            total += enc + cross
+            active += enc + cross
+    emb = v * d * (1 if cfg.tie_embeddings else 2)
+    return total + emb, active + emb
+
+
+def model_flops(cfg, case) -> float:
+    """6·N_active·D train; 2·N_active·tokens for prefill; 2·N_active·B decode."""
+    total, active = param_count(cfg)
+    toks = case.global_batch * case.seq_len
+    if case.kind == "train":
+        return 6.0 * active * toks
+    if case.kind == "prefill":
+        return 2.0 * active * toks
+    return 2.0 * active * case.global_batch   # decode: one token per seq

@@ -1,0 +1,47 @@
+"""Production mesh construction (never touches jax device state at import).
+
+Single pod: 16×16 = 256 chips, axes (data, model).
+Multi-pod:  2×16×16 = 512 chips, axes (pod, data, model) — the pod axis
+is the slow inter-pod interconnect; gradients crossing it may use the
+int8 error-feedback compressed reduce (optim/compress.py)."""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.models.config import ShardingConfig
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, found {len(devices)} — "
+            "the dry-run must set XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "before any jax import (launch/dryrun.py does)."
+        )
+    dev_array = np.asarray(devices[:n]).reshape(shape)
+    return jax.sharding.Mesh(dev_array, axes)
+
+
+def sharding_config(multi_pod: bool = False) -> ShardingConfig:
+    return ShardingConfig(
+        fsdp=("pod", "data") if multi_pod else ("data",),
+        tp="model",
+        tp_extent=16,
+        dp_extent=32 if multi_pod else 16,
+    )
+
+
+def small_mesh(n_data: Optional[int] = None, n_model: int = 1):
+    """Host-size mesh for tests/examples (uses however many devices exist)."""
+    devs = jax.devices()
+    n_data = n_data or (len(devs) // n_model)
+    dev_array = np.asarray(devs[: n_data * n_model]).reshape(n_data, n_model)
+    return jax.sharding.Mesh(dev_array, ("data", "model"))

@@ -1,0 +1,86 @@
+"""Sharding-spec assembly for dry-run inputs, with divisibility filtering.
+
+jit in/out shardings require every sharded dimension to divide evenly by
+its mesh-axis extent; this module mirrors shape trees with PartitionSpec
+trees and drops axis names where the dimension doesn't divide (e.g. 8
+experts over a 16-way model axis, batch=1 over data for long_500k).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import backbone
+from repro.models.config import ModelConfig, ShardingConfig
+
+Pytree = Any
+
+
+def axis_size(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, (tuple, list)):
+        n = 1
+        for a in entry:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[entry]
+
+
+def valid_spec(shape: Tuple[int, ...], spec: P, mesh: Mesh) -> P:
+    """Drop axis names on dimensions they don't divide."""
+    entries = tuple(spec) + (None,) * (len(shape) - len(tuple(spec)))
+    out = []
+    for dim, entry in zip(shape, entries):
+        if entry is None:
+            out.append(None)
+        elif dim % axis_size(mesh, entry) == 0:
+            out.append(entry)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def shardings_for(tree_shapes: Pytree, spec_tree: Pytree, mesh: Mesh) -> Pytree:
+    """NamedSharding tree from (shape tree, spec tree), filtered valid."""
+    def one(shp, spec):
+        return NamedSharding(mesh, valid_spec(shp.shape, spec, mesh))
+
+    return jax.tree.map(one, tree_shapes, spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_specs(batch_shapes: Dict[str, Any], shd: ShardingConfig) -> Dict[str, Any]:
+    """Learner/actor batch: leading batch dim over the data axes."""
+    dp = shd.fsdp
+
+    def one(s):
+        return P(dp, *(None,) * (len(s.shape) - 1))
+
+    return jax.tree.map(one, batch_shapes)
+
+
+def cache_specs(cfg: ModelConfig, shd: ShardingConfig, cache_shapes) -> Pytree:
+    """Spec tree mirroring init_cache output."""
+    dp = shd.fsdp
+    kv_spec = backbone._cache_kv_spec(cfg, shd)
+
+    def rule(path, leaf):
+        names = [str(getattr(k, "key", getattr(k, "idx", getattr(k, "name", k))))
+                 for k in path]
+        nd = len(leaf.shape)
+        if not names:
+            return P()
+        if names[0] in ("k", "v", "cross_k", "cross_v"):
+            return kv_spec
+        if names[0] == "ssm":          # (U, B, H, N, P)
+            return P(None, dp, None, None, None)
+        if names[0] == "blocks":       # xlstm states: (B, H, ...)
+            return P(*((dp,) + (None,) * (nd - 1)))
+        return P()                     # pos etc.
+
+    return jax.tree_util.tree_map_with_path(rule, cache_shapes)

@@ -1,0 +1,711 @@
+"""Unified agent-network backbone covering all 10 assigned families.
+
+Paths:
+  * ``forward``      — full-sequence (training / prefill) logits
+  * ``init_cache`` / ``prefill`` / ``decode_step`` — KV/state-cached serving
+    (= the paper's *actor* ``act()`` at LM scale, DESIGN.md §2)
+
+Structure per family:
+  dense / vlm         embed(+patches) → scan[attn → mlp] → norm → unembed
+  moe (mixtral)       scan[attn → moe]
+  moe (llama4)        scan over pairs [attn → mlp][attn → moe] (alternating)
+  hybrid (hymba)      scan[(attn ∥ mamba) → mlp]   (parallel heads, averaged)
+  ssm (xlstm)         unrolled mLSTM/sLSTM blocks (pattern from cfg.slstm_at)
+  audio (whisper)     encoder scan[attn_bidir → mlp] + decoder
+                      scan[attn → cross-attn → mlp], conv frontend stubbed
+
+Memory discipline: scan-over-layers keeps HLO size O(1) in depth;
+``jax.checkpoint`` around each scan unit gives per-layer remat; the
+learner additionally microbatches (agents/token_dqn.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as L
+from repro.models import mamba as M
+from repro.models import moe as MOE
+from repro.models import xlstm as X
+from repro.models.config import ModelConfig, ShardingConfig
+
+Params = Dict[str, Any]
+
+
+# ===========================================================================
+# Init
+# ===========================================================================
+
+def _stack_init(fn, key, n: int):
+    """vmap an init over layer keys → params stacked on a leading L dim."""
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+def _unit_init(cfg: ModelConfig, sub: Tuple[str, ...]):
+    def init_one(key):
+        ks = jax.random.split(key, len(sub) * 2)
+        p = {}
+        for i, kind in enumerate(sub):
+            kp, kn = ks[2 * i], ks[2 * i + 1]
+            if kind in ("attn", "attn_nc", "cross"):
+                p[kind] = {"norm": L.norm_init(cfg, cfg.d_model), "w": L.attn_init(cfg, kp)}
+            elif kind == "mlp":
+                p[kind] = {"norm": L.norm_init(cfg, cfg.d_model), "w": L.mlp_init(cfg, kp)}
+            elif kind == "moe":
+                p[kind] = {"norm": L.norm_init(cfg, cfg.d_model), "w": MOE.moe_init(cfg, kp)}
+            elif kind == "hybrid":
+                p[kind] = {
+                    "norm": L.norm_init(cfg, cfg.d_model),
+                    "attn": L.attn_init(cfg, kp),
+                    "ssm": M.mamba_init(cfg, kn),
+                    "norm_attn": L.norm_init(cfg, cfg.d_model),
+                    "norm_ssm": L.norm_init(cfg, cfg.d_model),
+                }
+            else:
+                raise ValueError(kind)
+        return p
+
+    return init_one
+
+
+def unit_structure(cfg: ModelConfig) -> Tuple[Tuple[str, ...], int]:
+    """(sub-layer kinds per scan unit, number of scan units)."""
+    if cfg.family == "hybrid":
+        return ("hybrid", "mlp"), cfg.num_layers
+    if cfg.family == "moe":
+        if cfg.moe_layer_period == 1:
+            return ("attn", "moe"), cfg.num_layers
+        assert cfg.moe_layer_period == 2
+        return ("attn", "mlp", "attn", "moe"), cfg.num_layers // 2
+    return ("attn", "mlp"), cfg.num_layers  # dense / vlm
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    ks = jax.random.split(key, 8)
+    p: Params = {"embed": L.embed_init(cfg, ks[0]),
+                 "final_norm": L.norm_init(cfg, cfg.d_model)}
+
+    if cfg.family == "ssm":  # xLSTM — unrolled heterogeneous blocks
+        blocks = []
+        bks = jax.random.split(ks[1], cfg.num_layers)
+        for i in range(cfg.num_layers):
+            kind = "slstm" if i in cfg.slstm_at else "mlstm"
+            sub = {"norm": L.norm_init(cfg, cfg.d_model)}
+            if kind == "slstm":
+                sub["slstm"] = X.slstm_init(cfg, bks[i])
+                sub["mlp"] = {"norm": L.norm_init(cfg, cfg.d_model),
+                              "w": L.mlp_init(cfg, bks[i], d_ff=(cfg.d_model * 4) // 3)}
+            else:
+                sub["mlstm"] = X.mlstm_init(cfg, bks[i])
+                sub["mlp"] = {"norm": L.norm_init(cfg, cfg.d_model),
+                              "w": L.mlp_init(cfg, bks[i], d_ff=cfg.d_model * 2)}
+            blocks.append(sub)
+        p["blocks"] = blocks
+        return p
+
+    if cfg.family == "audio":  # Whisper enc-dec (learned abs positions, no RoPE)
+        p["enc_pos"] = jnp.zeros((cfg.encoder_seq, cfg.d_model), jnp.dtype(cfg.dtype))
+        p["enc_units"] = _stack_init(_unit_init(cfg, ("attn_nc", "mlp")), ks[2], cfg.encoder_layers)
+        p["enc_norm"] = L.norm_init(cfg, cfg.d_model)
+        p["dec_units"] = _stack_init(_unit_init(cfg, ("attn", "cross", "mlp")), ks[3], cfg.num_layers)
+        return p
+
+    sub, n_units = unit_structure(cfg)
+    p["units"] = _stack_init(_unit_init(cfg, sub), ks[2], n_units)
+    return p
+
+
+# ===========================================================================
+# Sharding specs
+# ===========================================================================
+
+def param_specs(cfg: ModelConfig, shd: ShardingConfig, params_shape) -> Any:
+    """PartitionSpec pytree mirroring ``params`` (works on shapes or arrays)."""
+    fsdp = shd.fsdp if shd.fsdp else None
+    tp = shd.tp
+
+    def rule(path, leaf) -> P:
+        names = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+        name = names[-1]
+        shape = leaf.shape
+        nd = len(shape)
+        stacked = "units" in names or "blocks" in names
+        base_nd = nd - 1 if stacked else nd
+
+        def wrap(*spec):
+            spec = spec + (None,) * (base_nd - len(spec))
+            return P(*((None,) + spec)) if stacked else P(*spec)
+
+        if name in ("scale", "bias", "bq", "bk", "bv", "A_log", "w_dt", "enc_pos"):
+            return wrap()
+        if name == "tok":
+            return wrap(tp, fsdp)
+        if name == "out":
+            return wrap(fsdp, tp)
+        if name == "router":
+            return wrap(fsdp, None)
+        ep_ok = (shape[-3] % max(1, shd.tp_extent) == 0
+                 or not cfg.moe_ff_tp_fallback) if base_nd == 3 else True
+        if base_nd == 3 and name in ("w_gate", "w_up"):     # MoE experts (E,d,f)
+            # EP when experts divide the model axis; else dense-style TP on
+            # d_ff (replicated experts) — avoids GSPMD reducing expert
+            # outputs over a padded expert sharding (§Perf, mixtral)
+            return wrap(tp, fsdp, None) if ep_ok else wrap(None, fsdp, tp)
+        if base_nd == 3 and name == "w_down":               # (E,f,d)
+            return wrap(tp, None, fsdp) if ep_ok else wrap(None, tp, fsdp)
+        if base_nd == 3 and name.startswith("r"):           # sLSTM (H,hd,hd)
+            return wrap(tp, None, None)
+        if name in ("wo", "w_down", "w_out"):               # row-parallel
+            return wrap(tp, fsdp)
+        if base_nd == 2:                                    # column-parallel
+            return wrap(fsdp, tp)
+        return wrap()
+
+    if not shd.enabled:
+        return jax.tree.map(lambda _: P(), params_shape)
+    return jax.tree_util.tree_map_with_path(rule, params_shape)
+
+
+# ===========================================================================
+# Forward (training / prefill)
+# ===========================================================================
+
+def _apply_sub(cfg, shd, kind, p, x, positions, freqs, is_global, enc_out=None):
+    h = L.apply_norm(cfg, p[kind]["norm"] if kind != "hybrid" else p["hybrid"]["norm"], x)
+    if kind == "attn":
+        return x + L.mha(cfg, shd, p["attn"]["w"], h, positions, freqs,
+                         is_global, use_rope=cfg.family != "audio")
+    if kind == "attn_nc":
+        return x + L.mha(cfg, shd, p["attn_nc"]["w"], h, positions, freqs,
+                         True, causal=False, use_rope=False)
+    if kind == "cross":
+        return x + L.mha(cfg, shd, p["cross"]["w"], h, positions, freqs,
+                         True, kv_override=enc_out, causal=False)
+    if kind == "mlp":
+        return x + L.mlp(cfg, shd, p["mlp"]["w"], h)
+    if kind == "moe":
+        y, _metrics = MOE.moe(cfg, shd, p["moe"]["w"], h)
+        return x + y
+    if kind == "hybrid":  # Hymba: parallel attention + mamba heads, averaged
+        a = L.mha(cfg, shd, p["hybrid"]["attn"], h, positions, freqs, is_global)
+        s = M.mamba_scan(cfg, shd, p["hybrid"]["ssm"], h)
+        a = L.apply_norm(cfg, p["hybrid"]["norm_attn"], a)
+        s = L.apply_norm(cfg, p["hybrid"]["norm_ssm"], s)
+        return x + 0.5 * (a + s)
+    raise ValueError(kind)
+
+
+def _maybe_scan(cfg: ModelConfig, body, carry, xs):
+    """lax.scan over stacked layers, or a python unroll (cost probes /
+    heterogeneous stacks).  Matches lax.scan's (carry, ys) contract."""
+    if cfg.scan_layers:
+        return jax.lax.scan(body, carry, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        x_i = jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, x_i)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *t: jnp.stack(t), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+def _global_flags(cfg: ModelConfig, n_units: int, sub: Tuple[str, ...]) -> jnp.ndarray:
+    """(n_units, n_attn_sublayers) bool — which attn sub-layers are global."""
+    per_unit = [k in ("attn", "hybrid") for k in sub]
+    idx = 0
+    flags = []
+    for u in range(n_units):
+        row = []
+        for is_attn in per_unit:
+            if is_attn:
+                row.append(cfg.layer_is_global_attn(idx))
+                idx += 1
+        flags.append(row)
+    return jnp.asarray(flags, bool)
+
+
+def _scan_units(cfg, shd, params, x, positions, freqs, enc_out=None,
+                units_key="units", sub=None, n_units=None):
+    if sub is None:
+        sub, n_units = unit_structure(cfg)
+    flags = _global_flags(cfg, n_units, sub)
+
+    def unit(x, inp):
+        p_u, flag_row = inp
+        fi = 0
+        attn_like = [k for k in sub if k in ("attn", "hybrid")]
+        for kind in sub:
+            g = flag_row[fi] if kind in ("attn", "hybrid") else True
+            if kind in ("attn", "hybrid"):
+                fi += 1
+            x = _apply_sub(cfg, shd, kind, p_u, x, positions, freqs, g, enc_out)
+        return x, None
+
+    body = jax.checkpoint(unit) if cfg.remat else unit
+    x, _ = _maybe_scan(cfg, body, x, (params[units_key], flags))
+    return x
+
+
+def forward(
+    cfg: ModelConfig,
+    shd: ShardingConfig,
+    params: Params,
+    tokens: jax.Array,                          # (B, S_text)
+    extra_embeds: Optional[jax.Array] = None,   # vision patches / audio frames
+) -> jax.Array:
+    """Full-sequence logits (B, S_total, V)."""
+    freqs = L.rope_freqs(cfg)
+
+    if cfg.family == "audio":
+        return _whisper_forward(cfg, shd, params, tokens, extra_embeds, freqs)
+
+    x = L.embed(cfg, shd, params["embed"], tokens)
+    if cfg.family == "vlm" and extra_embeds is not None:
+        x = jnp.concatenate([extra_embeds.astype(x.dtype), x], axis=1)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    if cfg.family == "ssm":
+        x = _xlstm_forward(cfg, shd, params, x)
+    else:
+        x = _scan_units(cfg, shd, params, x, positions, freqs)
+
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    return L.unembed(cfg, shd, params["embed"], x)
+
+
+def _xlstm_forward(cfg, shd, params, x):
+    for i, bp in enumerate(params["blocks"]):
+        h = L.apply_norm(cfg, bp["norm"], x)
+        if "slstm" in bp:
+            x = x + X.slstm_forward(cfg, shd, bp["slstm"], h)
+        elif cfg.mlstm_chunked:
+            x = x + X.mlstm_forward_chunked(cfg, shd, bp["mlstm"], h)
+        else:
+            x = x + X.mlstm_forward(cfg, shd, bp["mlstm"], h)
+        h2 = L.apply_norm(cfg, bp["mlp"]["norm"], x)
+        x = x + L.mlp(cfg, shd, bp["mlp"]["w"], h2)
+    return x
+
+
+def _whisper_forward(cfg, shd, params, tokens, frames, freqs):
+    """frames: (B, S_enc, d) stub embeddings (conv frontend is stubbed —
+    input_specs supplies precomputed frame embeddings per the assignment)."""
+    enc = frames.astype(jnp.dtype(cfg.dtype)) + params["enc_pos"][None]
+    b, se, _ = enc.shape
+    pos_e = jnp.broadcast_to(jnp.arange(se, dtype=jnp.int32), (b, se))
+    enc = _scan_units(cfg, shd, params, enc, pos_e, freqs,
+                      units_key="enc_units", sub=("attn_nc", "mlp"),
+                      n_units=cfg.encoder_layers)
+    enc = L.apply_norm(cfg, params["enc_norm"], enc)
+
+    x = L.embed(cfg, shd, params["embed"], tokens)
+    bd, sd, _ = x.shape
+    pos_d = jnp.broadcast_to(jnp.arange(sd, dtype=jnp.int32), (bd, sd))
+    # cross K/V computed per decoder layer inside the unit (enc_out passed)
+    kv = cfg.num_kv_heads
+    hd = cfg.hd
+
+    def cross_kv(p_u):
+        k = jnp.einsum("bsd,dk->bsk", enc, p_u["cross"]["w"]["wk"]).reshape(b, se, kv, hd)
+        v = jnp.einsum("bsd,dk->bsk", enc, p_u["cross"]["w"]["wv"]).reshape(b, se, kv, hd)
+        return k, v
+
+    flags = _global_flags(cfg, cfg.num_layers, ("attn", "cross", "mlp"))
+
+    def unit(x, inp):
+        p_u, flag_row = inp
+        x = _apply_sub(cfg, shd, "attn", p_u, x, pos_d, freqs, True)
+        ck, cv = cross_kv(p_u)
+        x = _apply_sub(cfg, shd, "cross", p_u, x, pos_d, freqs, True, (ck, cv))
+        x = _apply_sub(cfg, shd, "mlp", p_u, x, pos_d, freqs, True)
+        return x, None
+
+    body = jax.checkpoint(unit) if cfg.remat else unit
+    x, _ = _maybe_scan(cfg, body, x, (params["dec_units"], flags))
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    return L.unembed(cfg, shd, params["embed"], x)
+
+
+# ===========================================================================
+# Serving: KV/state caches, prefill, decode_step (the paper's actor act())
+# ===========================================================================
+
+def _cache_kv_spec(cfg: ModelConfig, shd: ShardingConfig):
+    """Sharding for (U, B, S, KV, hd): batch→data; heads→model when the
+    head count divides evenly, else sequence→model (flash-decoding style,
+    GSPMD inserts the log-sum-exp combine collectives)."""
+    if not shd.enabled:
+        return P()
+    mode = cfg.cache_shard
+    if mode == "auto":
+        mode = "heads" if cfg.num_kv_heads % 16 == 0 else "seq"
+    if mode == "heads":
+        return P(None, shd.fsdp, None, shd.tp, None)
+    return P(None, shd.fsdp, shd.tp, None, None)
+
+
+def init_cache(cfg: ModelConfig, shd: ShardingConfig, batch: int, max_len: int,
+               dtype=None) -> Dict[str, Any]:
+    dt = dtype or jnp.dtype(cfg.dtype)
+    kv, hd = cfg.num_kv_heads, cfg.hd
+
+    def kv_buf(n_units):
+        z = jnp.zeros((n_units, batch, max_len, kv, hd), dt)
+        return L.shard(z, shd, *(_cache_kv_spec(cfg, shd) or ()))
+
+    cache: Dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
+    if cfg.family == "ssm":
+        states = []
+        for i in range(cfg.num_layers):
+            if i in cfg.slstm_at:
+                states.append({"slstm": X.slstm_decode_init(cfg, batch)})
+            else:
+                states.append({"mlstm": X.mlstm_decode_init(cfg, batch)})
+        cache["blocks"] = states
+        return cache
+    if cfg.family == "audio":
+        cache["k"] = kv_buf(cfg.num_layers)
+        cache["v"] = kv_buf(cfg.num_layers)
+        cache["cross_k"] = jnp.zeros((cfg.num_layers, batch, cfg.encoder_seq, kv, hd), dt)
+        cache["cross_v"] = jnp.zeros_like(cache["cross_k"])
+        return cache
+    sub, n_units = unit_structure(cfg)
+    n_attn = sum(1 for k in sub if k in ("attn", "hybrid"))
+    cache["k"] = kv_buf(n_units * n_attn)
+    cache["v"] = kv_buf(n_units * n_attn)
+    if cfg.family == "hybrid":
+        h, pd = M.mamba_heads(cfg)
+        cache["ssm"] = jnp.zeros((n_units, batch, h, cfg.ssm_state, pd), jnp.float32)
+    return cache
+
+
+def _decode_mask(cfg: ModelConfig, k_pos: jax.Array, pos: jax.Array,
+                 is_global) -> jax.Array:
+    """(S_cache,) bool validity of cached entries for query at ``pos``."""
+    m = k_pos <= pos
+    if cfg.attention == "full":
+        return m
+    if cfg.attention == "sliding":
+        local = m & (k_pos > pos - cfg.window)
+    else:  # chunked
+        local = m & ((k_pos // cfg.window) == (pos // cfg.window))
+    return jnp.where(is_global, m, local)
+
+
+def _attn_decode(cfg, shd, p, x, k_cache, v_cache, pos, freqs, is_global,
+                 use_rope=True):
+    """x: (B,1,d); k_cache/v_cache: (B,S,KV,hd). Returns out, new caches."""
+    b = x.shape[0]
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    s_cache = k_cache.shape[1]
+    pos_b = jnp.broadcast_to(pos, (b, 1)).astype(jnp.int32)
+
+    q = jnp.einsum("bsd,dk->bsk", x, p["wq"])
+    k = jnp.einsum("bsd,dk->bsk", x, p["wk"])
+    v = jnp.einsum("bsd,dk->bsk", x, p["wv"])
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, 1, h, hd)
+    k = k.reshape(b, 1, kv, hd)
+    v = v.reshape(b, 1, kv, hd)
+    if use_rope:
+        q = L.apply_rope(q, pos_b, freqs)
+        k = L.apply_rope(k, pos_b, freqs)    # cache stores post-RoPE keys
+
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k.astype(k_cache.dtype), (0, pos, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v.astype(v_cache.dtype), (0, pos, 0, 0))
+
+    qg = q.reshape(b, 1, kv, cfg.q_per_kv, hd)
+    scores = jnp.einsum("bsgqh,btgh->bgqst", qg, k_cache).astype(jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(hd))
+    k_pos = jnp.arange(s_cache, dtype=jnp.int32)
+    mask = _decode_mask(cfg, k_pos, pos, is_global)
+    scores = jnp.where(mask[None, None, None, None, :], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bgqst,btgh->bsgqh", w, v_cache).reshape(b, 1, h * hd)
+    return jnp.einsum("bsk,kd->bsd", out, p["wo"]), k_cache, v_cache
+
+
+def decode_step(
+    cfg: ModelConfig,
+    shd: ShardingConfig,
+    params: Params,
+    cache: Dict[str, Any],
+    tokens: jax.Array,                    # (B, 1) the newest token ids
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    """One autoregressive step: logits for the next token + updated cache.
+    This is the paper's ``act()`` inference at LM scale."""
+    freqs = L.rope_freqs(cfg)
+    pos = cache["pos"]
+    x = L.embed(cfg, shd, params["embed"], tokens)
+    b = x.shape[0]
+
+    if cfg.family == "ssm":
+        new_blocks = []
+        for bp, blk in zip(params["blocks"], cache["blocks"]):
+            h = L.apply_norm(cfg, bp["norm"], x)
+            if "slstm" in blk:
+                y, st = X.slstm_decode_step(cfg, shd, bp["slstm"], h, blk["slstm"])
+                new_blocks.append({"slstm": st})
+            else:
+                y, st = X.mlstm_decode_step(cfg, shd, bp["mlstm"], h, blk["mlstm"])
+                new_blocks.append({"mlstm": st})
+            x = x + y
+            h2 = L.apply_norm(cfg, bp["mlp"]["norm"], x)
+            x = x + L.mlp(cfg, shd, bp["mlp"]["w"], h2)
+        cache = dict(cache, pos=pos + 1, blocks=new_blocks)
+        x = L.apply_norm(cfg, params["final_norm"], x)
+        return L.unembed(cfg, shd, params["embed"], x), cache
+
+    if cfg.family == "audio":
+        return _whisper_decode(cfg, shd, params, cache, x, freqs)
+
+    sub, n_units = unit_structure(cfg)
+    flags = _global_flags(cfg, n_units, sub)
+    attn_per_unit = sum(1 for k in sub if k in ("attn", "hybrid"))
+    kr = cache["k"].reshape((n_units, attn_per_unit) + cache["k"].shape[1:])
+    vr = cache["v"].reshape((n_units, attn_per_unit) + cache["v"].shape[1:])
+
+    def unit(x, inp):
+        p_u, flag_row, kc_u, vc_u, ssm_u = inp
+        fi = 0
+        new_k, new_v, new_ssm = [], [], ssm_u
+        for kind in sub:
+            hdn = L.apply_norm(
+                cfg, p_u[kind]["norm"] if kind != "hybrid" else p_u["hybrid"]["norm"], x)
+            if kind == "attn":
+                y, nk, nv = _attn_decode(cfg, shd, p_u["attn"]["w"], hdn,
+                                         kc_u[fi], vc_u[fi], pos, freqs,
+                                         flag_row[fi],
+                                         use_rope=cfg.family != "audio")
+                new_k.append(nk); new_v.append(nv); fi += 1
+                x = x + y
+            elif kind == "hybrid":
+                ya, nk, nv = _attn_decode(cfg, shd, p_u["hybrid"]["attn"], hdn,
+                                          kc_u[fi], vc_u[fi], pos, freqs,
+                                          flag_row[fi])
+                ys, new_ssm = M.mamba_decode_step(cfg, shd, p_u["hybrid"]["ssm"],
+                                                  hdn, ssm_u)
+                ya = L.apply_norm(cfg, p_u["hybrid"]["norm_attn"], ya)
+                ys = L.apply_norm(cfg, p_u["hybrid"]["norm_ssm"], ys)
+                new_k.append(nk); new_v.append(nv); fi += 1
+                x = x + 0.5 * (ya + ys)
+            elif kind == "mlp":
+                x = x + L.mlp(cfg, shd, p_u["mlp"]["w"], hdn)
+            elif kind == "moe":
+                y, _ = MOE.moe(cfg, shd, p_u["moe"]["w"], hdn)
+                x = x + y
+        return x, (jnp.stack(new_k), jnp.stack(new_v), new_ssm)
+
+    ssm = cache.get("ssm")
+    if ssm is None:
+        ssm = jnp.zeros((n_units, 1), jnp.float32)  # dummy xs
+    x, (nk, nv, nssm) = _maybe_scan(cfg, unit, x, (params["units"], flags, kr, vr, ssm))
+    cache = dict(cache,
+                 pos=pos + 1,
+                 k=nk.reshape(cache["k"].shape),
+                 v=nv.reshape(cache["v"].shape))
+    if cfg.family == "hybrid":
+        cache["ssm"] = nssm
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    return L.unembed(cfg, shd, params["embed"], x), cache
+
+
+def _whisper_decode(cfg, shd, params, cache, x, freqs):
+    pos = cache["pos"]
+    b = x.shape[0]
+    pos_b = jnp.broadcast_to(pos, (b, 1)).astype(jnp.int32)
+
+    def unit(x, inp):
+        p_u, kc, vc, ck, cv = inp
+        h = L.apply_norm(cfg, p_u["attn"]["norm"], x)
+        y, nk, nv = _attn_decode(cfg, shd, p_u["attn"]["w"], h, kc, vc, pos,
+                                 freqs, True, use_rope=False)
+        x = x + y
+        h = L.apply_norm(cfg, p_u["cross"]["norm"], x)
+        x = x + L.mha(cfg, shd, p_u["cross"]["w"], h, pos_b, freqs, True,
+                      kv_override=(ck, cv), causal=False)
+        h = L.apply_norm(cfg, p_u["mlp"]["norm"], x)
+        x = x + L.mlp(cfg, shd, p_u["mlp"]["w"], h)
+        return x, (nk, nv)
+
+    x, (nk, nv) = _maybe_scan(
+        cfg, unit, x,
+        (params["dec_units"], cache["k"], cache["v"], cache["cross_k"], cache["cross_v"]),
+    )
+    cache = dict(cache, pos=pos + 1, k=nk, v=nv)
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    return L.unembed(cfg, shd, params["embed"], x), cache
+
+
+def prefill(
+    cfg: ModelConfig,
+    shd: ShardingConfig,
+    params: Params,
+    tokens: jax.Array,
+    max_len: int,
+    extra_embeds: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Process a full prompt, returning logits and a primed cache.
+
+    Implementation: full forward capturing per-layer K/V (and final SSM /
+    xLSTM states), written into a fresh ``init_cache`` buffer.  At LM
+    scale this is the actor's episode bootstrap.
+    """
+    freqs = L.rope_freqs(cfg)
+    b = tokens.shape[0]
+    cache = init_cache(cfg, shd, b, max_len)
+
+    if cfg.family == "audio":
+        logits = _whisper_forward(cfg, shd, params, tokens, extra_embeds, freqs)
+        # prime cross K/V from the encoder output
+        enc = extra_embeds.astype(jnp.dtype(cfg.dtype)) + params["enc_pos"][None]
+        se = enc.shape[1]
+        pos_e = jnp.broadcast_to(jnp.arange(se, dtype=jnp.int32), (b, se))
+        enc = _scan_units(cfg, shd, params, enc, pos_e, freqs,
+                          units_key="enc_units", sub=("attn_nc", "mlp"),
+                          n_units=cfg.encoder_layers)
+        enc = L.apply_norm(cfg, params["enc_norm"], enc)
+        kv, hd = cfg.num_kv_heads, cfg.hd
+
+        def one(p_u):
+            k = jnp.einsum("bsd,dk->bsk", enc, p_u["cross"]["w"]["wk"]).reshape(b, se, kv, hd)
+            v = jnp.einsum("bsd,dk->bsk", enc, p_u["cross"]["w"]["wv"]).reshape(b, se, kv, hd)
+            return k, v
+
+        ck, cv = jax.vmap(one)(params["dec_units"])
+        # decoder self K/V for the prompt (cross-attention included)
+        sk, sv = _capture_self_kv(cfg, shd, params["dec_units"], tokens, params,
+                                  freqs, (ck, cv))
+        cache = dict(cache, cross_k=ck.astype(cache["cross_k"].dtype),
+                     cross_v=cv.astype(cache["cross_v"].dtype))
+        cache["k"] = jax.lax.dynamic_update_slice(
+            cache["k"], sk.astype(cache["k"].dtype), (0, 0, 0, 0, 0))
+        cache["v"] = jax.lax.dynamic_update_slice(
+            cache["v"], sv.astype(cache["v"].dtype), (0, 0, 0, 0, 0))
+        cache["pos"] = jnp.asarray(tokens.shape[1], jnp.int32)
+        return logits, cache
+
+    # decoder-only families: replay the prompt through decode-like capture
+    logits = forward(cfg, shd, params, tokens, extra_embeds)
+    s = logits.shape[1]
+    if cfg.family != "ssm":
+        x = L.embed(cfg, shd, params["embed"], tokens)
+        if cfg.family == "vlm" and extra_embeds is not None:
+            x = jnp.concatenate([extra_embeds.astype(x.dtype), x], axis=1)
+        sk, sv, ssm = _capture_kv_states(cfg, shd, params, x, freqs)
+        cache["k"] = jax.lax.dynamic_update_slice(
+            cache["k"], sk.astype(cache["k"].dtype), (0, 0, 0, 0, 0))
+        cache["v"] = jax.lax.dynamic_update_slice(
+            cache["v"], sv.astype(cache["v"].dtype), (0, 0, 0, 0, 0))
+        if ssm is not None:
+            cache["ssm"] = ssm
+        cache["pos"] = jnp.asarray(x.shape[1], jnp.int32)
+    else:
+        # xLSTM: run block-by-block capturing final recurrent states
+        x = L.embed(cfg, shd, params["embed"], tokens)
+        states = []
+        for i, bp in enumerate(params["blocks"]):
+            h = L.apply_norm(cfg, bp["norm"], x)
+            if "slstm" in bp:
+                y, st = _slstm_prefill(cfg, shd, bp["slstm"], h)
+                states.append({"slstm": st})
+            else:
+                y, st = _mlstm_prefill(cfg, shd, bp["mlstm"], h)
+                states.append({"mlstm": st})
+            x = x + y
+            h2 = L.apply_norm(cfg, bp["mlp"]["norm"], x)
+            x = x + L.mlp(cfg, shd, bp["mlp"]["w"], h2)
+        cache["blocks"] = states
+        cache["pos"] = jnp.asarray(tokens.shape[1], jnp.int32)
+    return logits, cache
+
+
+def _capture_kv_states(cfg, shd, params, x, freqs):
+    """Run the unit scan, emitting per-attn-sublayer K/V (+ final ssm)."""
+    sub, n_units = unit_structure(cfg)
+    flags = _global_flags(cfg, n_units, sub)
+    b, s, _ = x.shape
+    kv, hd = cfg.num_kv_heads, cfg.hd
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def unit(x, inp):
+        p_u, flag_row = inp
+        fi = 0
+        ks, vs, ssm_f = [], [], None
+        for kind in sub:
+            h = L.apply_norm(
+                cfg, p_u[kind]["norm"] if kind != "hybrid" else p_u["hybrid"]["norm"], x)
+            if kind in ("attn", "hybrid"):
+                w = p_u["attn"]["w"] if kind == "attn" else p_u["hybrid"]["attn"]
+                k = jnp.einsum("bsd,dk->bsk", h, w["wk"]).reshape(b, s, kv, hd)
+                v = jnp.einsum("bsd,dk->bsk", h, w["wv"]).reshape(b, s, kv, hd)
+                if "bk" in w:
+                    k, v = k + w["bk"].reshape(kv, hd), v + w["bv"].reshape(kv, hd)
+                if cfg.family != "audio":
+                    k = L.apply_rope(k, positions, freqs)
+                ks.append(k); vs.append(v)
+            if kind == "hybrid":
+                ssm_f = _mamba_final_state(cfg, shd, p_u["hybrid"]["ssm"], h)
+            x = _apply_sub(cfg, shd, kind, p_u, x, positions, freqs,
+                           flag_row[fi] if kind in ("attn", "hybrid") else True)
+            if kind in ("attn", "hybrid"):
+                fi += 1
+        if ssm_f is None:
+            ssm_f = jnp.zeros((1,), jnp.float32)
+        return x, (jnp.stack(ks), jnp.stack(vs), ssm_f)
+
+    _, (ks, vs, ssm) = _maybe_scan(cfg, unit, x, (params["units"], flags))
+    n_attn = ks.shape[1]
+    ks = ks.reshape((n_units * n_attn,) + ks.shape[2:])
+    vs = vs.reshape((n_units * n_attn,) + vs.shape[2:])
+    return ks, vs, (ssm if cfg.family == "hybrid" else None)
+
+
+def _capture_self_kv(cfg, shd, dec_units, tokens, params, freqs, cross_kvs):
+    """Whisper decoder prompt replay capturing per-layer self K/V."""
+    x = L.embed(cfg, shd, params["embed"], tokens)
+    b, s, _ = x.shape
+    kv, hd = cfg.num_kv_heads, cfg.hd
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def unit(x, inp):
+        p_u, ck, cv = inp
+        h = L.apply_norm(cfg, p_u["attn"]["norm"], x)
+        k = jnp.einsum("bsd,dk->bsk", h, p_u["attn"]["w"]["wk"]).reshape(b, s, kv, hd)
+        v = jnp.einsum("bsd,dk->bsk", h, p_u["attn"]["w"]["wv"]).reshape(b, s, kv, hd)
+        x = _apply_sub(cfg, shd, "attn", p_u, x, positions, freqs, True)
+        x = _apply_sub(cfg, shd, "cross", p_u, x, positions, freqs, True, (ck, cv))
+        x = _apply_sub(cfg, shd, "mlp", p_u, x, positions, freqs, True)
+        return x, (k, v)
+
+    _, (ks, vs) = _maybe_scan(cfg, unit, x, (dec_units, *cross_kvs))
+    return ks, vs
+
+
+def _mamba_final_state(cfg, shd, p, x):
+    """Final SSM state after processing x — via the chunked scan carry."""
+    return M.mamba_prefill_state(cfg, shd, p, x)
+
+
+def _mlstm_prefill(cfg, shd, p, x):
+    y = X.mlstm_forward(cfg, shd, p, x)
+    st = X.mlstm_prefill_state(cfg, p, x)
+    return y, st
+
+
+def _slstm_prefill(cfg, shd, p, x):
+    y = X.slstm_forward(cfg, shd, p, x)
+    st = X.slstm_prefill_state(cfg, p, x)
+    return y, st

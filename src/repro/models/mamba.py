@@ -1,0 +1,155 @@
+"""Selective SSM (Mamba-2 / SSD form) for the Hymba hybrid heads.
+
+Chunked "state-space dual" algorithm: scalar per-head decay a_t, input
+projection B_t, readout C_t, state size N (= cfg.ssm_state):
+
+    h_t = exp(a_t) · h_{t-1} + B_t ⊗ x_t         (h: (H, P, N))
+    y_t = C_t · h_t
+
+Training uses chunk-parallel form (intra-chunk masked quadratic + inter-
+chunk state scan) so the materialized state is (B, S/Q, H, P, N) at chunk
+boundaries only — the memory-feasible adaptation for 4k–500k contexts.
+Decoding is the O(1) recurrence.
+
+Note (DESIGN.md): Hymba's Mamba-1 (diagonal per-channel A) is simplified
+to Mamba-2's scalar-per-head A — the SSD parallel form requires it, and
+it is the TPU-native (matmul-friendly) variant of the same insight.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig, ShardingConfig
+from repro.models.layers import Params, dense_init, dp, shard
+
+CHUNK = 128
+
+
+def mamba_heads(cfg: ModelConfig) -> Tuple[int, int]:
+    """(num_heads, head_dim) of the SSM branch — mirrors attention heads."""
+    d_inner = cfg.ssm_expand * cfg.d_model
+    h = cfg.num_heads
+    return h, d_inner // h
+
+
+def mamba_init(cfg: ModelConfig, key) -> Params:
+    dt = jnp.dtype(cfg.dtype)
+    d = cfg.d_model
+    h, p_dim = mamba_heads(cfg)
+    n = cfg.ssm_state
+    d_inner = h * p_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "w_x": dense_init(ks[0], d, d_inner, dt),       # value path
+        "w_z": dense_init(ks[1], d, d_inner, dt),       # gate path
+        "w_B": dense_init(ks[2], d, h * n, dt),
+        "w_C": dense_init(ks[3], d, h * n, dt),
+        "w_dt": dense_init(ks[4], d, h, dt),            # per-head step size
+        "A_log": jnp.zeros((h,), jnp.float32),          # a = -exp(A_log)·softplus(dt)
+        "w_out": dense_init(ks[5], d_inner, d, dt),
+    }
+
+
+def _proj(cfg, p, x):
+    b, s, d = x.shape
+    h, pd = mamba_heads(cfg)
+    n = cfg.ssm_state
+    xv = jnp.einsum("bsd,di->bsi", x, p["w_x"]).reshape(b, s, h, pd)
+    z = jnp.einsum("bsd,di->bsi", x, p["w_z"]).reshape(b, s, h, pd)
+    bm = jnp.einsum("bsd,di->bsi", x, p["w_B"]).reshape(b, s, h, n)
+    cm = jnp.einsum("bsd,di->bsi", x, p["w_C"]).reshape(b, s, h, n)
+    dt_ = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", x, p["w_dt"]).astype(jnp.float32)
+    )
+    a = -jnp.exp(p["A_log"])[None, None] * dt_          # (B,S,H) log-decay ≤ 0
+    return xv, z, bm, cm, dt_, a
+
+
+def mamba_scan(
+    cfg: ModelConfig, shd: ShardingConfig, p: Params, x: jax.Array,
+    return_state: bool = False,
+):
+    """Training/prefill path — chunked SSD. x: (B, S, d) → (B, S, d)."""
+    b, s, d = x.shape
+    h, pd = mamba_heads(cfg)
+    n = cfg.ssm_state
+    q = min(CHUNK, s)
+    assert s % q == 0, (s, q)
+    nc = s // q
+
+    xv, z, bm, cm, dt_, a = _proj(cfg, p, x)
+    xv = xv * dt_[..., None]                            # fold Δt into input
+    # reshape to chunks
+    ch = lambda t: t.reshape(b, nc, q, *t.shape[2:])
+    xv, bm, cm, a = ch(xv.astype(jnp.float32)), ch(bm.astype(jnp.float32)), ch(cm.astype(jnp.float32)), ch(a)
+
+    acs = jnp.cumsum(a, axis=2)                         # (B,NC,Q,H) within-chunk
+    # --- intra-chunk (masked quadratic in Q) ---
+    decay = acs[:, :, :, None, :] - acs[:, :, None, :, :]   # (B,NC,Qq,Qk,H)
+    iota = jnp.arange(q)
+    causal = (iota[:, None] >= iota[None, :])[None, None, :, :, None]
+    gm = jnp.where(causal, jnp.exp(decay), 0.0)              # (B,NC,Q,Q,H)
+    scores = jnp.einsum("bcqhn,bckhn->bcqkh", cm, bm) * gm
+    y_intra = jnp.einsum("bcqkh,bckhp->bcqhp", scores, xv)
+
+    # --- chunk states + inter-chunk scan ---
+    tail = acs[:, :, -1:, :] - acs                      # (B,NC,Q,H) decay to chunk end
+    st = jnp.einsum("bcqhn,bcqhp,bcqh->bchnp", bm, xv, jnp.exp(tail))
+    chunk_decay = jnp.exp(acs[:, :, -1, :])             # (B,NC,H)
+
+    def step(carry, inp):
+        st_c, dec = inp
+        new = carry * dec[:, :, None, None] + st_c
+        return new, carry                                # emit state BEFORE chunk
+
+    init = jnp.zeros((b, h, n, pd), jnp.float32)
+    final_state, prev_states = jax.lax.scan(
+        step,
+        init,
+        (st.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (B,NC,H,N,P)
+
+    y_inter = jnp.einsum("bcqhn,bchnp,bcqh->bcqhp", cm, prev_states, jnp.exp(acs))
+    y = (y_intra + y_inter).reshape(b, s, h, pd)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).reshape(b, s, h, pd)
+    y = shard(y, shd, dp(shd), None, shd.tp, None)
+    out = jnp.einsum("bsi,id->bsd", y.reshape(b, s, h * pd).astype(x.dtype), p["w_out"])
+    if return_state:
+        return out, final_state
+    return out
+
+
+def mamba_prefill_state(cfg, shd, p, x):
+    """Final (B,H,N,P) state after processing x (prefill priming)."""
+    _, st = mamba_scan(cfg, shd, p, x, return_state=True)
+    return st
+
+
+def mamba_decode_init(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    h, pd = mamba_heads(cfg)
+    return jnp.zeros((batch, h, cfg.ssm_state, pd), dtype)
+
+
+def mamba_decode_step(
+    cfg: ModelConfig, shd: ShardingConfig, p: Params,
+    x: jax.Array,            # (B, 1, d)
+    state: jax.Array,        # (B, H, N, P)
+) -> Tuple[jax.Array, jax.Array]:
+    b = x.shape[0]
+    h, pd = mamba_heads(cfg)
+    xv, z, bm, cm, dt_, a = _proj(cfg, p, x)
+    xv = (xv * dt_[..., None]).astype(jnp.float32)[:, 0]   # (B,H,P)
+    bm, cm, a = bm.astype(jnp.float32)[:, 0], cm.astype(jnp.float32)[:, 0], a[:, 0]
+    new_state = state * jnp.exp(a)[:, :, None, None] + jnp.einsum(
+        "bhn,bhp->bhnp", bm, xv
+    )
+    y = jnp.einsum("bhn,bhnp->bhp", cm, new_state)
+    y = y * jax.nn.silu(z.astype(jnp.float32)[:, 0])
+    out = jnp.einsum("bsi,id->bsd", y.reshape(b, 1, h * pd).astype(x.dtype), p["w_out"])
+    return out, new_state

@@ -1,0 +1,92 @@
+"""Adam/AdamW with configurable state dtype (ZeRO-1-style sharded states).
+
+Optimizer state inherits the parameter sharding (params are already FSDP
+× TP sharded at pod scale — see backbone.param_specs), which *is* ZeRO-1:
+each device holds only its shard of m/v.  For ≥8B-param archs the m/v
+dtype drops to bf16 (``state_dtype``) so params+grads+states fit a 16 GB
+v5e HBM (budgeted in EXPERIMENTS.md §Dry-run).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip: float = 1.0          # global-norm clip; 0 disables
+    state_dtype: Optional[str] = None  # None → f32 m/v; "bfloat16" for ZeRO-lite
+
+
+class AdamState(NamedTuple):
+    count: jax.Array
+    m: Pytree
+    v: Pytree
+
+
+def init(params: Pytree, cfg: AdamConfig) -> AdamState:
+    dt = jnp.dtype(cfg.state_dtype) if cfg.state_dtype else None
+
+    def zeros(p):
+        return jnp.zeros(p.shape, dt or jnp.promote_types(p.dtype, jnp.float32))
+
+    return AdamState(
+        count=jnp.zeros((), jnp.int32),
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+    )
+
+
+def global_norm(tree: Pytree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def update(
+    grads: Pytree, state: AdamState, params: Pytree, cfg: AdamConfig
+) -> Tuple[Pytree, AdamState, jax.Array]:
+    """Returns (new_params, new_state, pre-clip grad norm)."""
+    gnorm = global_norm(grads)
+    if cfg.grad_clip > 0:
+        scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+
+    count = state.count + 1
+    b1c = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        gf = g.astype(jnp.float32)
+        m_new = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * gf
+        v_new = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * jnp.square(gf)
+        step = cfg.lr * (m_new / b1c) / (jnp.sqrt(v_new / b2c) + cfg.eps)
+        if cfg.weight_decay:
+            step = step + cfg.lr * cfg.weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - step
+        return p_new.astype(p.dtype), m_new.astype(m.dtype), v_new.astype(v.dtype)
+
+    out = jax.tree.map(upd, grads, state.m, state.v, params)
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, AdamState(count, new_m, new_v), gnorm
+
+
+def ema_update(target: Pytree, online: Pytree, tau: float) -> Pytree:
+    """Polyak target-network update (DQN/DDPG/TD3/SAC targets)."""
+    return jax.tree.map(
+        lambda t, o: (t.astype(jnp.float32) * (1 - tau)
+                      + o.astype(jnp.float32) * tau).astype(t.dtype),
+        target, online,
+    )

@@ -1,0 +1,70 @@
+"""int8 error-feedback gradient compression for the cross-pod reduce.
+
+Beyond-paper distributed-optimization trick (system-prompt requirement):
+within a pod, gradients reduce in bf16/f32 over the fast 2-D ICI mesh;
+*across* pods (the slow inter-pod links) each leaf is quantized to int8
+with a per-leaf scale and the quantization error is fed back into the
+next step (EF-SGD, Karimireddy et al. 2019 semantics) so compression
+noise doesn't bias convergence.
+
+Functional API — the error-feedback buffer is explicit state:
+
+    comp, err = compress(grads, err)        # int8 payload + new error
+    grads_hat = decompress(comp)            # dequantize after the reduce
+
+The cross-pod reduce itself is a ``psum`` of the *dequantized* values
+over the 'pod' axis (2 pods → one hop); the wire format is the int8
+payload, 4× smaller than f32.  On a real fleet the payload rides the
+collective; under GSPMD we model it by quantize→psum→dequantize, which
+preserves the numerics exactly (tests assert the EF contraction).
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+class CompressedLeaf(NamedTuple):
+    q: jax.Array       # int8 payload
+    scale: jax.Array   # f32 per-leaf scale
+
+
+def init_error(params: Pytree) -> Pytree:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress(grads: Pytree, err: Pytree) -> Tuple[Pytree, Pytree]:
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+        deq = q.astype(jnp.float32) * scale
+        return CompressedLeaf(q, scale), gf - deq
+
+    flat, treedef = jax.tree.flatten(grads)
+    eflat = jax.tree.leaves(err)
+    comps, new_err = zip(*[one(g, e) for g, e in zip(flat, eflat)])
+    return (jax.tree.unflatten(treedef, comps),
+            jax.tree.unflatten(treedef, new_err))
+
+
+def decompress(comp: Pytree) -> Pytree:
+    return jax.tree.map(
+        lambda c: c.q.astype(jnp.float32) * c.scale,
+        comp,
+        is_leaf=lambda x: isinstance(x, CompressedLeaf),
+    )
+
+
+def compressed_psum(grads: Pytree, err: Pytree, axis_name: str
+                    ) -> Tuple[Pytree, Pytree]:
+    """EF-int8 all-reduce over ``axis_name`` (call inside shard_map)."""
+    comp, new_err = compress(grads, err)
+    deq = decompress(comp)
+    reduced = jax.tree.map(lambda g: jax.lax.pmean(g, axis_name), deq)
+    return reduced, new_err

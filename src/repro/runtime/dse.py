@@ -1,0 +1,79 @@
+"""Design-space exploration (paper §V-D, Eq. 5 + Fig. 12).
+
+Given profiled throughput curves f_a(x) (data collection vs parallelism)
+and f_l(x) (data consumption vs parallelism) and a total resource budget
+M, pick (x_a, x_l) with x_a + x_l ≤ M such that
+
+    f_a(x_a) ≈ update_interval × f_l(x_l)
+
+by the paper's exhaustive O(M²) search.  On this host the resource axis
+is "parallel env/learner lanes" (vmap width); on a pod it is the
+actor/learner device-group split — same equation, profiled the same way.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class DSEResult:
+    x_actor: int
+    x_learner: int
+    actor_throughput: float
+    learner_throughput: float
+    ratio: float                 # realized collection/consumption ratio
+    target_ratio: float
+
+
+def profile_curve(run_at: Callable[[int], float], xs: List[int]) -> Dict[int, float]:
+    """run_at(x) → measured throughput (items/s) at parallelism x."""
+    return {x: run_at(x) for x in xs}
+
+
+def _interp(curve: Dict[int, float], x: int) -> float:
+    xs = sorted(curve)
+    if x in curve:
+        return curve[x]
+    lo = max([v for v in xs if v <= x], default=xs[0])
+    hi = min([v for v in xs if v >= x], default=xs[-1])
+    if lo == hi:
+        return curve[lo]
+    w = (x - lo) / (hi - lo)
+    return curve[lo] * (1 - w) + curve[hi] * w
+
+
+def solve(
+    actor_curve: Dict[int, float],
+    learner_curve: Dict[int, float],
+    total: int,
+    update_interval: float = 1.0,
+) -> DSEResult:
+    """Exhaustive O(M²) search of Eq. 5 (paper §VI-G)."""
+    best = None
+    for xa in range(1, total):
+        for xl in range(1, total - xa + 1):
+            fa = _interp(actor_curve, xa)
+            fl = _interp(learner_curve, xl)
+            err = abs(fa - update_interval * fl) / max(fa, 1e-9)
+            score = (err, -(fa + fl))      # match ratio, then maximize work
+            if best is None or score < best[0]:
+                best = (score, DSEResult(xa, xl, fa, fl,
+                                         fa / max(fl, 1e-9), update_interval))
+    return best[1]
+
+
+def measure_throughput(fn: Callable[[], None], items_per_call: int,
+                       warmup: int = 2, iters: int = 5) -> float:
+    """Wall-clock items/s of a jitted callable (block_until_ready inside)."""
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    dt = time.perf_counter() - t0
+    return items_per_call * iters / dt

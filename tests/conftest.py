@@ -1,0 +1,9 @@
+import os
+
+# Tests must see the real single-device CPU (the 512-device flag is
+# dry-run-only, set inside launch/dryrun.py before any jax import).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,108 @@
+"""Agent learning tests: DQN solves CartPole via the full lazy-write loop
+(the paper's end-to-end pipeline); continuous agents improve on Pendulum;
+all learners produce finite TD priorities."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.agents.ddpg import DDPGConfig, make_ddpg
+from repro.agents.dqn import DQNConfig, make_dqn
+from repro.agents.sac import SACConfig, make_sac
+from repro.agents.td3 import TD3Config, make_td3
+from repro.core.replay import PrioritizedReplay, ReplayConfig
+from repro.envs.classic import make_vec
+from repro.runtime import loop
+
+
+def transition_example(spec):
+    return {
+        "obs": jnp.zeros((spec.obs_dim,), jnp.float32),
+        "action": (jnp.zeros((), jnp.int32) if spec.discrete
+                   else jnp.zeros((spec.action_dim,), jnp.float32)),
+        "reward": jnp.zeros(()),
+        "next_obs": jnp.zeros((spec.obs_dim,), jnp.float32),
+        "done": jnp.zeros(()),
+    }
+
+
+@pytest.mark.slow
+def test_dqn_learns_cartpole():
+    spec, v_reset, v_step = make_vec("cartpole", 8)
+    agent = make_dqn(spec, DQNConfig())
+    replay = PrioritizedReplay(ReplayConfig(capacity=20_000, fanout=128),
+                               transition_example(spec))
+    cfg = loop.LoopConfig(batch_size=64, warmup=500, epsilon=0.15)
+    state, hist = loop.train(agent, replay, v_reset, v_step, cfg, n_envs=8,
+                             iterations=2600, key=jax.random.PRNGKey(0))
+    final = float(hist["mean_episode_return"][-1])
+    assert final > 60.0, final  # random policy scores ~10
+
+
+@pytest.mark.parametrize("make_agent,cfg", [
+    (make_ddpg, DDPGConfig()),
+    (make_td3, TD3Config()),
+    (make_sac, SACConfig()),
+])
+def test_continuous_agents_learn_step(make_agent, cfg):
+    spec, v_reset, v_step = make_vec("pendulum", 4)
+    agent = make_agent(spec, cfg)
+    st = agent.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    batch = {
+        "obs": jnp.asarray(rng.normal(size=(32, 3)).astype(np.float32)),
+        "action": jnp.asarray(rng.uniform(-2, 2, (32, 1)).astype(np.float32)),
+        "reward": jnp.asarray(rng.uniform(-10, 0, 32).astype(np.float32)),
+        "next_obs": jnp.asarray(rng.normal(size=(32, 3)).astype(np.float32)),
+        "done": jnp.zeros((32,)),
+    }
+    is_w = jnp.ones((32,))
+    losses = []
+    for _ in range(20):
+        st, metrics, td = agent.learn(st, batch, is_w)
+        losses.append(float(metrics["loss"]))
+        assert np.isfinite(np.asarray(td)).all() and (np.asarray(td) >= 0).all()
+    assert losses[-1] < losses[0]  # fits the fixed batch
+
+    # act path produces in-range actions
+    obs = jnp.asarray(rng.normal(size=(4, 3)).astype(np.float32))
+    a = agent.act(st, obs, jax.random.PRNGKey(1), 0.1)
+    assert a.shape == (4, 1)
+    assert (np.abs(np.asarray(a)) <= 2.0 + 1e-5).all()
+
+
+def test_ddqn_differs_from_dqn():
+    spec, _, _ = make_vec("cartpole", 2)
+    a1 = make_dqn(spec, DQNConfig(double_q=False))
+    a2 = make_dqn(spec, DQNConfig(double_q=True))
+    s1, s2 = a1.init(jax.random.PRNGKey(3)), a2.init(jax.random.PRNGKey(3))
+    rng = np.random.default_rng(1)
+    batch = {
+        "obs": jnp.asarray(rng.normal(size=(16, 4)).astype(np.float32)),
+        "action": jnp.asarray(rng.integers(0, 2, 16).astype(np.int32)),
+        "reward": jnp.ones((16,)),
+        "next_obs": jnp.asarray(rng.normal(size=(16, 4)).astype(np.float32)),
+        "done": jnp.zeros((16,)),
+    }
+    # push target/online apart so DDQN's decoupled argmax matters
+    for _ in range(5):
+        s1, _, td1 = a1.learn(s1, batch, jnp.ones((16,)))
+        s2, _, td2 = a2.learn(s2, batch, jnp.ones((16,)))
+    assert not np.allclose(np.asarray(td1), np.asarray(td2))
+
+
+def test_priorities_flow_into_buffer():
+    spec, v_reset, v_step = make_vec("cartpole", 4)
+    agent = make_dqn(spec, DQNConfig())
+    replay = PrioritizedReplay(ReplayConfig(capacity=512, fanout=8),
+                               transition_example(spec))
+    cfg = loop.LoopConfig(batch_size=32, warmup=64, epsilon=0.3)
+    step = loop.make_parallel_step(agent, replay, v_step, cfg, 4)
+    st = loop.init_loop_state(agent, replay, v_reset, jax.random.PRNGKey(0), 4)
+    before = float(replay.total_priority(st.replay))
+    for _ in range(40):
+        st, m = jax.jit(step)(st)
+    after = float(replay.total_priority(st.replay))
+    assert int(st.replay.count) == 160
+    assert after != before and np.isfinite(after)

@@ -1,0 +1,133 @@
+"""Pallas kernel ↔ pure-jnp oracle allclose sweeps (interpret mode on CPU).
+
+Sweeps shapes (capacities around block boundaries, batch sizes around
+SAMPLE/UPDATE/GATHER blocks) and dtypes per the deliverable-(c) spec."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import sumtree
+from repro.kernels import ops, ref
+from repro.kernels import gather as kgather
+
+
+def mk(capacity, fanout=128, seed=0, low=0.01, high=2.0):
+    spec = sumtree.make_spec(capacity, fanout)
+    rng = np.random.default_rng(seed)
+    pri = rng.uniform(low, high, capacity).astype(np.float32)
+    return spec, sumtree.build(spec, jnp.asarray(pri)), rng
+
+
+@pytest.mark.parametrize("capacity", [100, 1000, 16384, 131072])
+@pytest.mark.parametrize("batch", [1, 64, 128, 300, 512])
+def test_sample_kernel_matches_ref(capacity, batch):
+    spec, tree, rng = mk(capacity, seed=capacity + batch)
+    u = jnp.asarray(rng.uniform(0, 1, batch).astype(np.float32))
+    ri, rp = ref.sumtree_sample_ref(spec, tree, u)
+    ki, kp = ops.sumtree_sample(spec, tree, u)
+    ri_, ki_ = np.asarray(ri), np.asarray(ki)
+    agree = ri_ == ki_
+    assert agree.mean() > 0.99
+    # disagreements must be fp ties: adjacent leaves with CDF gap ≈ eps·total
+    if not agree.all():
+        leaves = np.asarray(sumtree.leaves(spec, tree))
+        cdf = np.cumsum(leaves)
+        gap = np.abs(cdf[ri_[~agree]] - cdf[ki_[~agree]])
+        assert (gap <= 2e-5 * cdf[-1] + np.maximum(
+            leaves[ri_[~agree]], leaves[ki_[~agree]])).all()
+    match_pri = np.asarray(rp)[agree]
+    np.testing.assert_allclose(match_pri, np.asarray(kp)[agree],
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("fanout", [128, 256])
+def test_sample_kernel_fanouts(fanout):
+    spec, tree, rng = mk(2000, fanout=fanout, seed=fanout)
+    u = jnp.asarray(rng.uniform(0, 1, 256).astype(np.float32))
+    ri, _ = ref.sumtree_sample_ref(spec, tree, u)
+    ki, _ = ops.sumtree_sample(spec, tree, u)
+    assert (np.asarray(ri) == np.asarray(ki)).all()
+
+
+@pytest.mark.parametrize("capacity", [100, 4096, 100_000])
+@pytest.mark.parametrize("batch", [1, 17, 128, 257])
+def test_update_kernel_matches_ref(capacity, batch):
+    spec, tree, rng = mk(capacity, seed=capacity * 7 + batch)
+    idx = jnp.asarray(rng.integers(0, capacity, batch).astype(np.int32))
+    val = jnp.asarray(rng.uniform(0, 5, batch).astype(np.float32))
+    rt = ref.sumtree_update_ref(spec, tree, idx, val)
+    kt = ops.sumtree_update(spec, tree, idx, val)
+    np.testing.assert_allclose(np.asarray(rt), np.asarray(kt),
+                               rtol=1e-4, atol=2e-3)
+    assert sumtree.check_invariant(spec, kt)
+
+
+def test_update_kernel_cross_block_duplicates():
+    """Duplicates spanning grid blocks must resolve sequentially
+    (last-writer-wins across the whole batch)."""
+    spec, tree, rng = mk(1000, seed=9)
+    b = 3 * 128
+    idx = np.full(b, 42, np.int32)
+    idx[::3] = rng.integers(0, 1000, len(idx[::3]))
+    val = rng.uniform(0, 5, b).astype(np.float32)
+    rt = ref.sumtree_update_ref(spec, tree, jnp.asarray(idx), jnp.asarray(val))
+    kt = ops.sumtree_update(spec, tree, jnp.asarray(idx), jnp.asarray(val))
+    np.testing.assert_allclose(np.asarray(rt), np.asarray(kt),
+                               rtol=1e-4, atol=2e-3)
+
+
+def test_update_then_sample_kernel_pipeline():
+    spec, tree, rng = mk(8192, seed=11)
+    for it in range(3):
+        idx = jnp.asarray(rng.integers(0, 8192, 128).astype(np.int32))
+        val = jnp.asarray(rng.uniform(0, 4, 128).astype(np.float32))
+        tree = ops.sumtree_update(spec, tree, idx, val)
+    u = jnp.asarray(rng.uniform(0, 1, 128).astype(np.float32))
+    ki, kp = ops.sumtree_sample(spec, tree, u)
+    ri, rp = ref.sumtree_sample_ref(spec, tree, u)
+    assert (np.asarray(ki) == np.asarray(ri)).all()
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int32])
+@pytest.mark.parametrize("n,f,b", [(777, 5, 99), (512, 128, 128), (2048, 33, 1)])
+def test_gather_kernel_matches_ref(dtype, n, f, b):
+    rng = np.random.default_rng(n + f + b)
+    if dtype == jnp.int32:
+        storage = jnp.asarray(rng.integers(0, 150_000, (n, f)), jnp.int32)
+    else:
+        storage = jnp.asarray(rng.normal(size=(n, f)).astype(np.float32)).astype(dtype)
+    idx = jnp.asarray(rng.integers(0, n, b).astype(np.int32))
+    got = ops.prioritized_gather(storage, idx)
+    want = ref.gather_rows_ref(storage, idx)
+    if dtype == jnp.int32:
+        assert (np.asarray(got) == np.asarray(want)).all()
+    else:
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32),
+            rtol=1e-2 if dtype == jnp.bfloat16 else 1e-6)
+
+
+def test_gather_kernel_rank3():
+    rng = np.random.default_rng(0)
+    storage = jnp.asarray(rng.normal(size=(300, 4, 7)).astype(np.float32))
+    idx = jnp.asarray(rng.integers(0, 300, 50).astype(np.int32))
+    got = ops.prioritized_gather(storage, idx)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(storage[idx]),
+                               rtol=1e-6)
+
+
+def test_vmem_budget_fallback():
+    """Above the VMEM budget the ops must fall back to the XLA path and
+    still be exact."""
+    big = ops.KERNEL_TREE_BYTE_BUDGET // 4 + 100_000
+    spec = sumtree.make_spec(big, 128)
+    assert not ops.kernel_path_ok(spec)
+    rng = np.random.default_rng(1)
+    pri = rng.uniform(0.01, 1, big).astype(np.float32)
+    tree = sumtree.build(spec, jnp.asarray(pri))
+    u = jnp.asarray(rng.uniform(0, 1, 64).astype(np.float32))
+    ki, _ = ops.sumtree_sample(spec, tree, u)
+    ri, _ = ref.sumtree_sample_ref(spec, tree, u)
+    assert (np.asarray(ki) == np.asarray(ri)).all()

@@ -1,0 +1,62 @@
+"""End-to-end behaviour tests for the paper's system: the full parallel
+actors + lazy-write buffer + parallel learners pipeline improves a policy
+and survives a checkpoint/restart cycle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.agents.dqn import DQNConfig, make_dqn
+from repro.checkpoint.manager import CheckpointManager
+from repro.core.replay import PrioritizedReplay, ReplayConfig
+from repro.envs.classic import make_vec
+from repro.runtime import loop
+
+
+def _example(spec):
+    return {
+        "obs": jnp.zeros((spec.obs_dim,), jnp.float32),
+        "action": jnp.zeros((), jnp.int32),
+        "reward": jnp.zeros(()),
+        "next_obs": jnp.zeros((spec.obs_dim,), jnp.float32),
+        "done": jnp.zeros(()),
+    }
+
+
+def test_full_pipeline_improves_policy():
+    """Paper Alg. 1 + §V: after training through the fused parallel_step,
+    the policy must beat the random baseline (CartPole random ≈ 10)."""
+    spec, v_reset, v_step = make_vec("cartpole", 8)
+    agent = make_dqn(spec, DQNConfig())
+    replay = PrioritizedReplay(ReplayConfig(capacity=20_000, fanout=128),
+                               _example(spec))
+    cfg = loop.LoopConfig(batch_size=64, warmup=400, epsilon=0.2)
+    state, hist = loop.train(agent, replay, v_reset, v_step, cfg, n_envs=8,
+                             iterations=1400, key=jax.random.PRNGKey(1))
+    final = float(hist["mean_episode_return"][-1])
+    assert final > 30.0, final
+
+
+def test_checkpoint_restart_resumes_exactly(tmp_path):
+    """Fault tolerance: save mid-training, clobber the state, restore —
+    the agent parameters and step counter come back bit-exact."""
+    spec, v_reset, v_step = make_vec("cartpole", 4)
+    agent = make_dqn(spec, DQNConfig())
+    replay = PrioritizedReplay(ReplayConfig(capacity=1024, fanout=8),
+                               _example(spec))
+    cfg = loop.LoopConfig(batch_size=32, warmup=64, epsilon=0.2)
+    step = jax.jit(loop.make_parallel_step(agent, replay, v_step, cfg, 4))
+    st = loop.init_loop_state(agent, replay, v_reset, jax.random.PRNGKey(2), 4)
+    for _ in range(30):
+        st, _ = step(st)
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    mgr.save(30, st.agent)
+    restored_step, restored = mgr.restore_latest(st.agent)
+    assert restored_step == 30
+    for a, b in zip(jax.tree.leaves(st.agent.params),
+                    jax.tree.leaves(restored.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # training continues from the restored state
+    st2 = st._replace(agent=restored)
+    st2, metrics = step(st2)
+    assert np.isfinite(float(metrics["loss"]))
