@@ -2,8 +2,21 @@
 
 The paper scales CPU cores; the JAX adaptation scales vectorized actor
 lanes (the same resource axis the DSE allocates).  Reports env-steps/s
-per algorithm at 1/2/4/8/16 lanes and derived speedup vs 1 lane."""
+per algorithm at 1/2/4/8/16 lanes and derived speedup vs 1 lane, through
+the FusedExecutor.
 
+A second mode sweeps *runtime shards*: ``--shards 1,2,4`` re-launches
+this script in subprocesses with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (the flag must be
+set before jax initializes) and times the ShardedExecutor — DQN through
+the sharded replay + psum'd learner — at each shard count.
+"""
+
+import argparse
+import functools
+import os
+import subprocess
+import sys
 import time
 
 import jax
@@ -15,6 +28,7 @@ from repro.agents.sac import SACConfig, make_sac
 from repro.core.replay import PrioritizedReplay, ReplayConfig
 from repro.envs.classic import make_vec
 from repro.runtime import loop
+from repro.runtime.executors import FusedExecutor
 
 
 def example(spec):
@@ -35,32 +49,51 @@ ALGOS = {
 }
 
 
+def _time_executor(ex, iters: int) -> float:
+    """env-steps/s of a warmed executor over ``iters`` iterations."""
+    st = ex.init(jax.random.PRNGKey(0))
+    st, _ = ex.run_chunk(st)
+    jax.block_until_ready(st.obs)
+    n_chunks = max(1, iters // ex.scan_chunk)
+    t0 = time.perf_counter()
+    for _ in range(n_chunks):
+        st, _ = ex.run_chunk(st)
+    jax.block_until_ready(st.obs)
+    dt = time.perf_counter() - t0
+    return ex.n_envs * ex.scan_chunk * n_chunks / dt
+
+
 def throughput(algo: str, n_envs: int, iters: int = 120) -> float:
     env_name, mk = ALGOS[algo]
-    spec, v_reset, v_step = make_vec(env_name, n_envs)
+    env_fn = functools.partial(make_vec, env_name)
+    spec, _, _ = env_fn(1)
     agent = mk(spec)
     replay = PrioritizedReplay(ReplayConfig(capacity=50_000, fanout=128),
                                example(spec))
     cfg = loop.LoopConfig(batch_size=64, warmup=64, epsilon=0.1)
-    step = loop.make_parallel_step(agent, replay, v_step, cfg, n_envs)
-    st = loop.init_loop_state(agent, replay, v_reset, jax.random.PRNGKey(0),
-                              n_envs)
+    ex = FusedExecutor(agent, replay, env_fn, cfg, n_envs, scan_chunk=20)
+    return _time_executor(ex, iters)
 
-    @jax.jit
-    def chunk(st):
-        def body(s, _):
-            s, _m = step(s)
-            return s, None
-        s, _ = jax.lax.scan(body, st, None, length=20)
-        return s
 
-    st = chunk(st)
-    jax.block_until_ready(st.obs)
-    t0 = time.perf_counter()
-    for _ in range(iters // 20):
-        st = chunk(st)
-    jax.block_until_ready(st.obs)
-    return n_envs * 20 * (iters // 20) / (time.perf_counter() - t0)
+def sharded_throughput(n_shards: int, n_envs: int = 16, iters: int = 120
+                       ) -> float:
+    """ShardedExecutor env-steps/s at ``n_shards`` (run inside a process
+    whose forced device count ≥ n_shards)."""
+    from repro.core.distributed import (ShardedPrioritizedReplay,
+                                        ShardedReplayConfig)
+    from repro.launch.mesh import data_mesh
+    from repro.runtime.executors import ShardedExecutor
+
+    env_fn = functools.partial(make_vec, "cartpole")
+    spec, _, _ = env_fn(1)
+    agent = ALGOS["dqn"][1](spec)
+    replay = ShardedPrioritizedReplay(
+        ShardedReplayConfig(capacity_per_shard=50_000 // n_shards, fanout=128),
+        example(spec))
+    cfg = loop.LoopConfig(batch_size=64, warmup=64, epsilon=0.1)
+    ex = ShardedExecutor(agent, replay, env_fn, cfg, n_envs,
+                         data_mesh(n_shards), scan_chunk=20)
+    return _time_executor(ex, iters)
 
 
 def run(csv=True):
@@ -77,5 +110,46 @@ def run(csv=True):
     return rows
 
 
+def run_shard_sweep(shard_counts, csv=True):
+    """Sweep --xla_force_host_platform_device_count via subprocesses."""
+    rows = []
+    base = None
+    script = os.path.abspath(__file__)
+    root = os.path.dirname(os.path.dirname(script))
+    for n in shard_counts:
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = (
+            f"{env.get('XLA_FLAGS', '')} "
+            f"--xla_force_host_platform_device_count={n}").strip()
+        src = os.path.join(root, "src")
+        env["PYTHONPATH"] = (f"{src}:{env['PYTHONPATH']}"
+                             if env.get("PYTHONPATH") else src)
+        r = subprocess.run(
+            [sys.executable, script, "--_sharded-worker", str(n)],
+            capture_output=True, text=True, timeout=1200, env=env, cwd=root)
+        out = [l for l in r.stdout.splitlines() if l.startswith("STEPS_PER_S=")]
+        if not out:
+            raise RuntimeError(f"shard worker {n} failed:\n{r.stdout}\n{r.stderr}")
+        t = float(out[-1].split("=")[1])
+        base = base or t
+        rows.append((f"fig10/sharded_{n}shards", 1e6 / t, t / base))
+    if csv:
+        for name, us, derived in rows:
+            print(f"{name},{us:.2f},{derived:.2f}")
+    return rows
+
+
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--shards", default="",
+                    help="comma-separated shard counts, e.g. 1,2,4 — "
+                         "benchmarks the ShardedExecutor per count")
+    ap.add_argument("--_sharded-worker", type=int, default=0,
+                    help=argparse.SUPPRESS)
+    args = ap.parse_args()
+    if args._sharded_worker:
+        print(f"STEPS_PER_S={sharded_throughput(args._sharded_worker):.2f}")
+    elif args.shards:
+        run_shard_sweep([int(x) for x in args.shards.split(",")])
+    else:
+        run()

@@ -9,6 +9,7 @@ and derived speedup at matched learn ratio (update_interval=1), plus a
 convergence check (CartPole return) for the derived column.
 """
 
+import functools
 import time
 
 import jax
@@ -18,6 +19,7 @@ from repro.agents.dqn import DQNConfig, make_dqn
 from repro.core.replay import PrioritizedReplay, ReplayConfig
 from repro.envs.classic import make_vec
 from repro.runtime import loop
+from repro.runtime.executors import FusedExecutor
 
 
 def transition_example(spec):
@@ -30,34 +32,29 @@ def transition_example(spec):
     }
 
 
-def throughput(n_envs: int, iters: int = 200, fused_scan: bool = True) -> float:
-    spec, v_reset, v_step = make_vec("cartpole", n_envs)
+def _make_executor(n_envs: int, scan_chunk: int = 20) -> FusedExecutor:
+    env_fn = functools.partial(make_vec, "cartpole")
+    spec, _, _ = env_fn(1)
     agent = make_dqn(spec, DQNConfig())
     replay = PrioritizedReplay(ReplayConfig(capacity=50_000, fanout=128),
                                transition_example(spec))
     cfg = loop.LoopConfig(batch_size=64, warmup=128, epsilon=0.1)
-    step = loop.make_parallel_step(agent, replay, v_step, cfg, n_envs)
-    st = loop.init_loop_state(agent, replay, v_reset, jax.random.PRNGKey(0),
-                              n_envs)
+    return FusedExecutor(agent, replay, env_fn, cfg, n_envs,
+                         scan_chunk=scan_chunk)
 
+
+def throughput(n_envs: int, iters: int = 200, fused_scan: bool = True) -> float:
+    try:
+        from benchmarks.fig10_scalability import _time_executor
+    except ImportError:  # run directly as a script: benchmarks/ is sys.path[0]
+        from fig10_scalability import _time_executor
+
+    ex = _make_executor(n_envs)
     if fused_scan:
-        @jax.jit
-        def chunk(st):
-            def body(s, _):
-                s, m = step(s)
-                return s, None
-            s, _ = jax.lax.scan(body, st, None, length=20)
-            return s
-        st = chunk(st)
-        jax.block_until_ready(st.obs)
-        t0 = time.perf_counter()
-        for _ in range(iters // 20):
-            st = chunk(st)
-        jax.block_until_ready(st.obs)
-        dt = time.perf_counter() - t0
-        return n_envs * 20 * (iters // 20) / dt
+        return _time_executor(ex, iters)
     # sequential baseline: python-stepped, one env transition per call
-    jstep = jax.jit(step)
+    st = ex.init(jax.random.PRNGKey(0))
+    jstep = jax.jit(ex.step)
     st, _ = jstep(st)
     jax.block_until_ready(st.obs)
     t0 = time.perf_counter()

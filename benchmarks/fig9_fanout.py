@@ -15,26 +15,23 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import sumtree
+from repro.core.tree_ops import get_tree_ops
 
 THREADS = 4
 ROUNDS = 50            # jitted rounds; each round = sample+update batch
 BATCH = THREADS * 25   # ops in flight per round
 
 
-def bench_tree(capacity: int, fanout: int, use_kernel: bool = False) -> float:
-    """Returns seconds per (sample+update) op."""
+def bench_tree(capacity: int, fanout: int, backend: str = "xla") -> float:
+    """Returns seconds per (sample+update) op through a TreeOps backend."""
     spec = sumtree.make_spec(capacity, fanout)
     rng = np.random.default_rng(0)
     pri = jnp.asarray(rng.uniform(0.1, 2.0, capacity).astype(np.float32))
     tree = sumtree.build(spec, pri)
 
-    if use_kernel:
-        from repro.kernels import ops as kops
-        sample_fn = lambda t, u: kops.sumtree_sample(spec, t, u)
-        update_fn = lambda t, i, v: kops.sumtree_update(spec, t, i, v)
-    else:
-        sample_fn = lambda t, u: sumtree.sample(spec, t, u)
-        update_fn = lambda t, i, v: sumtree.update(spec, t, i, v)
+    ops = get_tree_ops(backend)
+    sample_fn = lambda t, u: ops.sample(spec, t, u)
+    update_fn = lambda t, i, v: ops.update(spec, t, i, v)
 
     @jax.jit
     def round_(tree, key):

@@ -1,18 +1,16 @@
 """Quickstart: the paper end-to-end on a laptop — parallel actors +
-parallel learners + K-ary-sum-tree prioritized replay, DQN on CartPole.
+parallel learners + K-ary-sum-tree prioritized replay, DQN on CartPole,
+through the executor API (runtime/executors.py).
 
     PYTHONPATH=src python examples/quickstart.py [--iterations 3000]
+
+    # sharded runtime: 4 replay/learner shards on forced host devices
+    PYTHONPATH=src python examples/quickstart.py --shards 4
 """
 
 import argparse
-
-import jax
-import jax.numpy as jnp
-
-from repro.agents.dqn import DQNConfig, make_dqn
-from repro.core.replay import PrioritizedReplay, ReplayConfig
-from repro.envs.classic import make_vec
-from repro.runtime import loop
+import functools
+import os
 
 
 def main():
@@ -21,27 +19,69 @@ def main():
     ap.add_argument("--n-envs", type=int, default=8, help="parallel actors")
     ap.add_argument("--fanout", type=int, default=128,
                     help="sum-tree K (paper Fig. 9 sweep)")
-    ap.add_argument("--use-kernels", action="store_true",
-                    help="route buffer ops through the Pallas kernels")
+    ap.add_argument("--backend", choices=("xla", "pallas"), default="xla",
+                    help="TreeOps backend for buffer ops")
+    ap.add_argument("--update-interval", type=int, default=1,
+                    help="env steps per learn (paper ratio)")
+    ap.add_argument("--shards", type=int, default=0,
+                    help="run the ShardedExecutor over this many "
+                         "host-platform device shards (0 = fused)")
     args = ap.parse_args()
 
-    spec, v_reset, v_step = make_vec("cartpole", args.n_envs)
+    if args.shards:
+        # must be set before the first jax import; append so a user's
+        # existing XLA_FLAGS are kept
+        flag = f"--xla_force_host_platform_device_count={args.shards}"
+        existing = os.environ.get("XLA_FLAGS", "")
+        if "xla_force_host_platform_device_count" not in existing:
+            os.environ["XLA_FLAGS"] = f"{existing} {flag}".strip()
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.agents.dqn import DQNConfig, make_dqn
+    from repro.core.distributed import (ShardedPrioritizedReplay,
+                                        ShardedReplayConfig)
+    from repro.core.replay import PrioritizedReplay, ReplayConfig
+    from repro.envs.classic import make_vec
+    from repro.launch.mesh import data_mesh
+    from repro.runtime.executors import FusedExecutor, ShardedExecutor
+    from repro.runtime.loop import LoopConfig
+
+    env_fn = functools.partial(make_vec, "cartpole")
+    spec, _, _ = env_fn(1)
     agent = make_dqn(spec, DQNConfig(double_q=True))
-    replay = PrioritizedReplay(
-        ReplayConfig(capacity=50_000, fanout=args.fanout,
-                     use_kernels=args.use_kernels),
-        {
-            "obs": jnp.zeros((spec.obs_dim,), jnp.float32),
-            "action": jnp.zeros((), jnp.int32),
-            "reward": jnp.zeros(()),
-            "next_obs": jnp.zeros((spec.obs_dim,), jnp.float32),
-            "done": jnp.zeros(()),
-        },
-    )
-    cfg = loop.LoopConfig(batch_size=64, warmup=500, epsilon=0.15)
-    state, hist = loop.train(agent, replay, v_reset, v_step, cfg,
-                             n_envs=args.n_envs, iterations=args.iterations,
-                             key=jax.random.PRNGKey(0), log_every=256)
+    example = {
+        "obs": jnp.zeros((spec.obs_dim,), jnp.float32),
+        "action": jnp.zeros((), jnp.int32),
+        "reward": jnp.zeros(()),
+        "next_obs": jnp.zeros((spec.obs_dim,), jnp.float32),
+        "done": jnp.zeros(()),
+    }
+    cfg = LoopConfig(batch_size=64, warmup=500, epsilon=0.15,
+                     update_interval=args.update_interval)
+
+    if args.shards:
+        mesh = data_mesh(args.shards)
+        replay = ShardedPrioritizedReplay(
+            ShardedReplayConfig(capacity_per_shard=50_000 // args.shards,
+                                fanout=args.fanout, backend=args.backend),
+            example)
+        ex = ShardedExecutor(agent, replay, env_fn, cfg, args.n_envs, mesh)
+        print(f"sharded executor: {args.shards} shards × "
+              f"{ex.n_envs_local} envs, batch/shard "
+              f"{cfg.batch_size // args.shards}")
+    else:
+        replay = PrioritizedReplay(
+            ReplayConfig(capacity=50_000, fanout=args.fanout,
+                         backend=args.backend), example)
+        ex = FusedExecutor(agent, replay, env_fn, cfg, args.n_envs)
+        print("fused executor (single jit program)")
+    print(f"ratio schedule: {ex.schedule} "
+          f"(realized {ex.schedule.realized_ratio:.1f} env steps per learn)")
+
+    state, hist = ex.train(args.iterations, jax.random.PRNGKey(0),
+                           log_every=256)
     print(f"\nfinal mean episode return: "
           f"{float(hist['mean_episode_return'][-1]):.1f} "
           f"(CartPole solved ≈ 475; random ≈ 10)")

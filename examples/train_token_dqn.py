@@ -4,6 +4,11 @@ paper pipeline — parallel actors collecting trajectory segments into the
 prioritized replay buffer, the learner sampling with PER weights,
 priorities updated from TD errors, checkpointing every N steps.
 
+The collection/consumption ratio is governed by the same
+``RatioSchedule`` the executors use (runtime/loop.py): ``--update-interval``
+is honored in collected segments per learner update, and the buffer's
+tree ops dispatch through the TreeOps backend (``--backend pallas``).
+
     PYTHONPATH=src python examples/train_token_dqn.py --steps 300
 """
 
@@ -21,6 +26,7 @@ from repro.core.replay import PrioritizedReplay, ReplayConfig
 from repro.envs.token_mdp import TokenMDPSpec, make
 from repro.models.config import ModelConfig, NO_SHARDING
 from repro.optim import adam
+from repro.runtime.loop import LoopConfig, RatioSchedule
 
 # ~100M params: 8L × d512 × vocab 8192 GQA backbone
 CFG_100M = ModelConfig(
@@ -39,6 +45,11 @@ def main():
     ap.add_argument("--small", action="store_true", help="tiny debug model")
     ap.add_argument("--ckpt-dir", default="/tmp/token_dqn_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--update-interval", type=int, default=32,
+                    help="collected segments per learner update")
+    ap.add_argument("--learns-per-step", type=int, default=1)
+    ap.add_argument("--backend", choices=("xla", "pallas"), default="xla",
+                    help="TreeOps backend for buffer ops")
     args = ap.parse_args()
 
     cfg = CFG_100M
@@ -64,8 +75,16 @@ def main():
         "rewards": jnp.zeros((args.seq,), jnp.float32),
         "dones": jnp.zeros((args.seq,), jnp.float32),
     }
-    replay = PrioritizedReplay(ReplayConfig(capacity=4096, fanout=128), example)
+    replay = PrioritizedReplay(
+        ReplayConfig(capacity=4096, fanout=128, backend=args.backend), example)
     rst = replay.init()
+    schedule = RatioSchedule.from_config(
+        LoopConfig(update_interval=args.update_interval,
+                   learns_per_step=args.learns_per_step),
+        env_steps_per_iter=args.n_envs)
+    print(f"ratio schedule: learn every {schedule.period} collect(s), "
+          f"{schedule.learns} update(s) per event "
+          f"({schedule.realized_ratio:.0f} segments per update)")
 
     @jax.jit
     def collect(params, env_state, obs, key):
@@ -102,14 +121,20 @@ def main():
         print(f"resumed from checkpoint step {start}")
 
     t0 = time.time()
-    for it in range(int(state.step), args.steps):
+    metrics = {"loss": float("nan")}
+    # checkpoints are labeled by collect iteration, which (with a ratio
+    # schedule) is no longer equal to state.step (learner-update count)
+    for it in range(start or 0, args.steps):
         key, kc, ks = jax.random.split(key, 3)
         env_state, obs, seg = collect(state.params, env_state, obs, kc)
         rst = replay.insert(rst, seg)
-        idx, items, w = replay.sample(rst, ks, args.batch)
-        batch = dict(items, is_weights=w)
-        state, metrics, tds = train_step(state, batch)
-        rst = replay.update_priorities(rst, idx, tds)
+        if it % schedule.period == 0:
+            for j in range(schedule.learns):
+                idx, items, w = replay.sample(
+                    rst, jax.random.fold_in(ks, j), args.batch)
+                batch = dict(items, is_weights=w)
+                state, metrics, tds = train_step(state, batch)
+                rst = replay.update_priorities(rst, idx, tds)
         if it % 20 == 0:
             r = float(jnp.mean(seg["rewards"]))
             print(f"step {it:4d} loss {float(metrics['loss']):.4f} "

@@ -7,7 +7,7 @@ Alg. 1 lines 17-18)."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, NamedTuple, Tuple
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax
 
@@ -24,13 +24,25 @@ class AgentState(NamedTuple):
 
 @dataclasses.dataclass(frozen=True)
 class Agent:
-    """act/learn function bundle; see dqn.py etc. for constructors."""
+    """act/learn function bundle; see dqn.py etc. for constructors.
+
+    ``grads``/``apply_grads`` are an optional two-phase split of ``learn``
+    (``learn ≡ apply_grads(state, *grads(state, batch, is_w))``) exposing
+    the gradient pytree so a sharded learner can pmean it between the two
+    phases (paper §V-B parameter-server reduce; runtime/learner.py).
+    Agents that don't provide the split still run sharded via a
+    parameter-average fallback.
+    """
 
     name: str
     init: Callable[[jax.Array], AgentState]
     act: Callable[..., jax.Array]          # (state, obs, rng, explore) → action
     learn: Callable[..., Tuple[AgentState, Dict[str, jax.Array], jax.Array]]
     # learn(state, batch, is_weights) → (state', metrics, |td|)
+    grads: Optional[Callable] = None
+    # grads(state, batch, is_weights) → (grad_pytree, aux)
+    apply_grads: Optional[Callable] = None
+    # apply_grads(state, grad_pytree, aux) → (state', metrics, |td|)
 
 
 def mlp_init(key, sizes, dtype=None):

@@ -42,8 +42,11 @@ def make_dqn(spec: EnvSpec, cfg: DQNConfig) -> Agent:
         take_rnd = jax.random.uniform(jax.random.fold_in(rng, 1), greedy.shape) < epsilon
         return jnp.where(take_rnd, rnd, greedy)
 
-    def learn(state: AgentState, batch, is_w
-              ) -> Tuple[AgentState, Dict[str, jax.Array], jax.Array]:
+    def grads_fn(state: AgentState, batch, is_w):
+        """TD-loss gradients only — no optimizer step, no collectives.
+
+        The sharded learner pmeans the returned pytree across shards
+        before ``apply_fn`` (paper §V-B push/aggregate/pull)."""
         obs, act_, rew = batch["obs"], batch["action"], batch["reward"]
         nobs, done = batch["next_obs"], batch["done"]
 
@@ -62,14 +65,24 @@ def make_dqn(spec: EnvSpec, cfg: DQNConfig) -> Agent:
             return jnp.mean(is_w * jnp.square(td)), td
 
         (loss, td), grads = jax.value_and_grad(loss_fn, has_aux=True)(state.params)
+        return grads, {"loss": loss, "td": td, "q_mean": jnp.mean(td + tgt)}
+
+    def apply_fn(state: AgentState, grads, aux
+                 ) -> Tuple[AgentState, Dict[str, jax.Array], jax.Array]:
         new_params, new_opt, gnorm = adam.update(grads, state.opt, state.params, cfg.opt)
         new_target = adam.ema_update(state.target, new_params, cfg.tau)
-        metrics = {"loss": loss, "grad_norm": gnorm, "q_mean": jnp.mean(td + tgt)}
+        metrics = {"loss": aux["loss"], "grad_norm": gnorm, "q_mean": aux["q_mean"]}
         return (
             AgentState(new_params, new_target, new_opt, state.step + 1),
             metrics,
-            jnp.abs(td),
+            jnp.abs(aux["td"]),
         )
 
+    def learn(state: AgentState, batch, is_w
+              ) -> Tuple[AgentState, Dict[str, jax.Array], jax.Array]:
+        grads, aux = grads_fn(state, batch, is_w)
+        return apply_fn(state, grads, aux)
+
     return Agent(name="ddqn" if cfg.double_q else "dqn",
-                 init=init, act=act, learn=learn)
+                 init=init, act=act, learn=learn,
+                 grads=grads_fn, apply_grads=apply_fn)

@@ -39,7 +39,8 @@ class ShardedReplayConfig:
     fanout: int = 128
     alpha: float = 0.6
     eps: float = 1e-6
-    use_kernels: bool = False
+    backend: str = "xla"        # TreeOps backend: "xla" | "pallas"
+    use_kernels: bool = False   # legacy alias for backend="pallas"
     axis_names: Tuple[str, ...] = ("data",)
 
 
@@ -54,6 +55,7 @@ class ShardedPrioritizedReplay:
                 fanout=config.fanout,
                 alpha=config.alpha,
                 eps=config.eps,
+                backend=config.backend,
                 use_kernels=config.use_kernels,
             ),
             example_item,

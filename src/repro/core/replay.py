@@ -31,7 +31,7 @@ from typing import Any, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import sumtree
+from repro.core import sumtree, tree_ops
 from repro.core.sumtree import SumTreeSpec
 
 Pytree = Any
@@ -55,7 +55,12 @@ class ReplayConfig:
     fanout: int = sumtree.DEFAULT_FANOUT
     alpha: float = 0.6          # priority exponent
     eps: float = 1e-6           # priority floor
-    use_kernels: bool = False   # route tree ops through Pallas kernels
+    backend: str = "xla"        # TreeOps backend: "xla" | "pallas"
+    use_kernels: bool = False   # legacy alias for backend="pallas"
+
+    @property
+    def tree_backend(self) -> str:
+        return "pallas" if self.use_kernels else self.backend
 
 
 class PrioritizedReplay:
@@ -70,11 +75,7 @@ class PrioritizedReplay:
         self.config = config
         self.spec: SumTreeSpec = sumtree.make_spec(config.capacity, config.fanout)
         self._example = jax.tree.map(jnp.asarray, example_item)
-        if config.use_kernels:
-            from repro.kernels import ops as kernel_ops  # lazy import
-            self._kops = kernel_ops
-        else:
-            self._kops = None
+        self.ops: tree_ops.TreeOps = tree_ops.get_tree_ops(config.tree_backend)
 
     # -- state ------------------------------------------------------------
 
@@ -91,17 +92,13 @@ class PrioritizedReplay:
             max_priority=jnp.ones((), jnp.float32),
         )
 
-    # -- tree-op dispatch (pure jnp vs Pallas kernels) ---------------------
+    # -- tree-op dispatch (TreeOps backend protocol, DESIGN.md §4.2) -------
 
     def _tree_update(self, tree, idx, vals):
-        if self._kops is not None:
-            return self._kops.sumtree_update(self.spec, tree, idx, vals)
-        return sumtree.update(self.spec, tree, idx, vals)
+        return self.ops.update(self.spec, tree, idx, vals)
 
     def _tree_sample(self, tree, u):
-        if self._kops is not None:
-            return self._kops.sumtree_sample(self.spec, tree, u)
-        return sumtree.sample(self.spec, tree, u)
+        return self.ops.sample(self.spec, tree, u)
 
     # -- insertion (lazy writing, paper Alg. 3 INSERT) ---------------------
 
@@ -167,16 +164,17 @@ class PrioritizedReplay:
         tot = state.tree[0] if global_total is None else global_total
         cnt = state.count if global_count is None else global_count
         prob = pri / jnp.maximum(tot, 1e-12)
-        w = (jnp.maximum(cnt, 1).astype(jnp.float32) * prob) ** (-beta)
+        w = (jnp.maximum(cnt, 1).astype(jnp.float32)
+             * jnp.maximum(prob, 1e-12)) ** (-beta)
+        # fp tail rounding in the inverse-CDF descent can clamp a draw onto
+        # a zero-priority leaf (in-flight or unfilled slot); its weight must
+        # be 0, not 0**(-β) = inf, or one such draw NaNs the whole learn.
+        w = jnp.where(pri > 0, w, 0.0)
         w = w / jnp.maximum(jnp.max(w), 1e-12)
         return idx, items, w
 
     def _gather(self, storage: Pytree, idx: jax.Array) -> Pytree:
-        if self._kops is not None:
-            return jax.tree.map(
-                lambda buf: self._kops.prioritized_gather(buf, idx), storage
-            )
-        return jax.tree.map(lambda buf: buf[idx], storage)
+        return jax.tree.map(lambda buf: self.ops.gather(buf, idx), storage)
 
     # -- priority maintenance ----------------------------------------------
 
@@ -186,8 +184,16 @@ class PrioritizedReplay:
     def update_priorities(
         self, state: ReplayState, idx: jax.Array, td_errors: jax.Array
     ) -> ReplayState:
-        """Write-after-read tolerated (paper §IV-D3)."""
-        pri = self.priorities_from_td(td_errors)
+        """Write-after-read tolerated (paper §IV-D3).
+
+        Indices whose current priority is zero (an in-flight or unfilled
+        slot hit by an fp-tail draw — see ``sample``) are skipped: a
+        legitimately sampled slot always has priority > 0, and writing a
+        fresh priority to a dead slot would make its garbage storage
+        sampleable until the FIFO head wraps back around to it.
+        """
+        cur = self.get_priority(state, idx)
+        pri = jnp.where(cur > 0, self.priorities_from_td(td_errors), 0.0)
         tree = self._tree_update(state.tree, idx, pri)
         return dataclasses.replace(
             state,

@@ -1,0 +1,90 @@
+"""Sum-tree op backends (DESIGN.md §4.2): one protocol, two impls.
+
+The replay buffer (single-shard and sharded alike) dispatches its three
+hot tree/storage operations through a ``TreeOps`` object instead of
+branching on ``use_kernels`` at every call site:
+
+  * ``xla``    — the pure-jnp reference path (core/sumtree.py + take);
+  * ``pallas`` — the Pallas kernels (kernels/ops.py), which themselves
+    fall back to XLA above the VMEM working-set budget.
+
+Both backends implement identical batched semantics (last-writer-wins
+update, exact inverse-CDF sample), so they are interchangeable inside
+jit, vmap, scan and shard_map.
+"""
+
+from __future__ import annotations
+
+from typing import Protocol, Tuple, runtime_checkable
+
+import jax
+
+from repro.core import sumtree
+from repro.core.sumtree import SumTreeSpec
+
+
+@runtime_checkable
+class TreeOps(Protocol):
+    """Backend protocol for batched sum-tree + storage ops."""
+
+    name: str
+
+    def update(self, spec: SumTreeSpec, tree: jax.Array, idx: jax.Array,
+               values: jax.Array) -> jax.Array:
+        """Batched priority SET (duplicate indices: last writer wins)."""
+        ...
+
+    def sample(self, spec: SumTreeSpec, tree: jax.Array, u: jax.Array
+               ) -> Tuple[jax.Array, jax.Array]:
+        """Batched inverse-CDF descent → (leaf_idx, leaf_priority)."""
+        ...
+
+    def gather(self, storage: jax.Array, idx: jax.Array) -> jax.Array:
+        """out[i] = storage[idx[i]] for one storage leaf."""
+        ...
+
+
+class XlaTreeOps:
+    """Pure-jnp reference backend."""
+
+    name = "xla"
+
+    def update(self, spec, tree, idx, values):
+        return sumtree.update(spec, tree, idx, values)
+
+    def sample(self, spec, tree, u):
+        return sumtree.sample(spec, tree, u)
+
+    def gather(self, storage, idx):
+        return storage[idx]
+
+
+class PallasTreeOps:
+    """Pallas-kernel backend (interpret mode on CPU, Mosaic on TPU)."""
+
+    name = "pallas"
+
+    def __init__(self):
+        from repro.kernels import ops as kernel_ops  # lazy: pallas import
+        self._kops = kernel_ops
+
+    def update(self, spec, tree, idx, values):
+        return self._kops.sumtree_update(spec, tree, idx, values)
+
+    def sample(self, spec, tree, u):
+        return self._kops.sumtree_sample(spec, tree, u)
+
+    def gather(self, storage, idx):
+        return self._kops.prioritized_gather(storage, idx)
+
+
+_BACKENDS = {"xla": XlaTreeOps, "pallas": PallasTreeOps}
+
+
+def get_tree_ops(backend: str) -> TreeOps:
+    try:
+        return _BACKENDS[backend]()
+    except KeyError:
+        raise ValueError(
+            f"unknown tree-ops backend {backend!r}; expected one of "
+            f"{sorted(_BACKENDS)}") from None

@@ -15,6 +15,34 @@ import numpy as np
 from repro.models.config import ShardingConfig
 
 
+def use_mesh(mesh):
+    """Version-compatible "make this the ambient mesh" context manager.
+
+    JAX has renamed this three times: ``jax.sharding.use_mesh`` (0.5.x),
+    ``jax.set_mesh`` (0.6+), and on older releases the ``Mesh`` object is
+    itself the context manager.  Callers write ``with use_mesh(m):``
+    regardless of the installed version.
+    """
+    if hasattr(jax.sharding, "use_mesh"):
+        return jax.sharding.use_mesh(mesh)
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
+def data_mesh(n_shards: Optional[int] = None, axis: str = "data"):
+    """1-D mesh over ``n_shards`` devices for the sharded replay/learner
+    data path (defaults to all visible devices)."""
+    devices = jax.devices()
+    n = n_shards or len(devices)
+    if len(devices) < n:
+        raise RuntimeError(
+            f"data mesh needs {n} devices, found {len(devices)} — set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count before any "
+            "jax import to force host-platform shards.")
+    return jax.sharding.Mesh(np.asarray(devices[:n]).reshape(n), (axis,))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")

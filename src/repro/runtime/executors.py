@@ -1,0 +1,247 @@
+"""Executor layer: one training-loop API, two runtime backends.
+
+An executor owns the composed actor/learner step program (runtime/loop.py)
+and drives it through chunked ``lax.scan``:
+
+  * ``FusedExecutor``   — the single-jit path: all actors, the buffer and
+    the learners live in one XLA program on the default device.  This is
+    the paper's single-node regime (and the previous ``loop.train``).
+
+  * ``ShardedExecutor`` — the whole step runs inside ``shard_map`` over a
+    mesh data axis: each shard owns E/D envs and one replay shard
+    (``ShardedPrioritizedReplay``: local K-ary tree + storage), actors
+    insert locally, learners sample locally with globally-corrected PER
+    weights (one scalar psum), and gradients are pmean'd before the
+    optimizer step (runtime/learner.make_sharded_learn) so the replicated
+    agent state stays in lockstep.  This is the paper's parallel
+    actors + parallel learners architecture mapped onto a device mesh
+    (DESIGN.md §3).
+
+Both executors realize the same ``RatioSchedule``, so a 1-shard
+``ShardedExecutor`` reproduces ``FusedExecutor`` metrics exactly from the
+same seed (asserted in tests/test_executors.py).
+
+Typical use::
+
+    env_fn = functools.partial(make_vec, "cartpole")
+    ex = FusedExecutor(agent, replay, env_fn, cfg, n_envs=8)
+    state, history = ex.train(iterations=2000, key=jax.random.PRNGKey(0))
+
+    mesh = data_mesh(4)
+    srb = ShardedPrioritizedReplay(ShardedReplayConfig(...), example)
+    ex = ShardedExecutor(agent, srb, env_fn, cfg, n_envs=8, mesh=mesh)
+    state, history = ex.train(iterations=2000, key=jax.random.PRNGKey(0))
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec
+
+from repro.agents.base import Agent
+from repro.core.distributed import ShardedPrioritizedReplay
+from repro.core.replay import PrioritizedReplay
+from repro.runtime.learner import make_sharded_learn
+from repro.runtime.loop import (METRIC_KEYS, LoopConfig, LoopState,
+                                RatioSchedule, init_loop_state, make_step)
+
+Pytree = Any
+
+
+class Executor:
+    """Common chunked-scan driver; subclasses provide init() and _chunk."""
+
+    schedule: RatioSchedule
+    scan_chunk: int
+
+    def init(self, key: jax.Array) -> LoopState:
+        raise NotImplementedError
+
+    def run_chunk(self, state: LoopState):
+        """(state) → (state, per-iteration metrics of shape (scan_chunk,))."""
+        raise NotImplementedError
+
+    def run(self, state: LoopState, iterations: int, log_every: int = 0
+            ) -> Tuple[LoopState, Dict[str, jax.Array]]:
+        history = []
+        done_iters = 0
+        while done_iters < iterations:
+            state, metrics = self.run_chunk(state)
+            done_iters += self.scan_chunk
+            last = jax.tree.map(lambda x: x[-1], metrics)
+            history.append(last)
+            if log_every and done_iters % log_every < self.scan_chunk:
+                print(f"iter={done_iters} "
+                      f"return={float(last['mean_episode_return']):.1f} "
+                      f"loss={float(last['loss']):.4f} "
+                      f"buffer={int(last['buffer_size'])} "
+                      f"learns={int(last['learn_steps'])}")
+        return state, jax.tree.map(lambda *xs: jnp.stack(xs), *history)
+
+    def train(self, iterations: int, key: jax.Array, log_every: int = 0
+              ) -> Tuple[LoopState, Dict[str, jax.Array]]:
+        return self.run(self.init(key), iterations, log_every)
+
+
+class FusedExecutor(Executor):
+    """Single-jit fused path (the paper's single-node regime)."""
+
+    def __init__(
+        self,
+        agent: Agent,
+        replay: PrioritizedReplay,
+        env_fn: Callable[[int], tuple],
+        cfg: LoopConfig,
+        n_envs: int,
+        scan_chunk: int = 64,
+    ):
+        self.agent = agent
+        self.replay = replay
+        self.cfg = cfg
+        self.n_envs = n_envs
+        self.scan_chunk = scan_chunk
+        self.spec, self._v_reset, self._v_step = env_fn(n_envs)
+        self.schedule = RatioSchedule.from_config(cfg, n_envs)
+        self.step = make_step(agent, replay, self._v_step, cfg, n_envs,
+                              schedule=self.schedule)
+
+        @jax.jit
+        def chunk(state):
+            def body(s, _):
+                return self.step(s)
+            return jax.lax.scan(body, state, None, length=scan_chunk)
+
+        self._chunk = chunk
+
+    def init(self, key: jax.Array) -> LoopState:
+        return init_loop_state(self.agent, self.replay, self._v_reset, key,
+                               self.n_envs)
+
+    def run_chunk(self, state: LoopState):
+        return self._chunk(state)
+
+
+class ShardedExecutor(Executor):
+    """shard_map path: per-shard actors + replay shard, pmean'd learners.
+
+    ``n_envs`` is the *global* env count; each of the mesh's D data-axis
+    shards runs ``n_envs / D`` envs and holds one replay shard.  The
+    learner batch is ``cfg.batch_size / D`` per shard (global batch
+    preserved under the gradient pmean).
+    """
+
+    def __init__(
+        self,
+        agent: Agent,
+        replay: ShardedPrioritizedReplay,
+        env_fn: Callable[[int], tuple],
+        cfg: LoopConfig,
+        n_envs: int,
+        mesh: Mesh,
+        scan_chunk: int = 64,
+    ):
+        (self._axis,) = replay.config.axis_names  # single data axis for now
+        n_shards = mesh.shape[self._axis]
+        if n_envs % n_shards:
+            raise ValueError(f"n_envs={n_envs} not divisible by "
+                             f"{n_shards} shards")
+        if cfg.batch_size % n_shards:
+            raise ValueError(f"batch_size={cfg.batch_size} not divisible by "
+                             f"{n_shards} shards")
+        self.agent = agent
+        self.replay = replay
+        self.cfg = cfg
+        self.mesh = mesh
+        self.n_shards = n_shards
+        self.n_envs = n_envs
+        self.n_envs_local = n_envs // n_shards
+        self.scan_chunk = scan_chunk
+        self.spec, self._v_reset, self._v_step = env_fn(self.n_envs_local)
+        self.schedule = RatioSchedule.from_config(cfg, n_envs)
+
+        axis = self._axis
+        learn_fn = make_sharded_learn(
+            agent, replay, batch_per_shard=cfg.batch_size // n_shards,
+            beta=cfg.beta)
+        self.step = make_step(
+            agent, replay, self._v_step, cfg, self.n_envs_local,
+            schedule=self.schedule,
+            learn_fn=learn_fn,
+            shard_id=lambda: jax.lax.axis_index(axis),
+            mean_across=lambda x: jax.lax.pmean(x, axis),
+            sum_across=lambda x: jax.lax.psum(x, axis),
+        )
+
+        specs = self._state_specs()
+        metric_specs = {k: PartitionSpec() for k in METRIC_KEYS}
+
+        def chunk_local(gstate):
+            state = self._local_state(gstate)
+
+            def body(s, _):
+                return self.step(s)
+
+            state, metrics = jax.lax.scan(body, state, None, length=scan_chunk)
+            return self._global_state(state), metrics
+
+        self._chunk = jax.jit(shard_map(
+            chunk_local, mesh=mesh, in_specs=(specs,),
+            out_specs=(specs, metric_specs), check_rep=False))
+
+        def init_local(key):
+            sid = jax.lax.axis_index(axis)
+            st = init_loop_state(agent, replay, self._v_reset, key,
+                                 self.n_envs_local, shard_id=sid)
+            return self._global_state(st)
+
+        self._init = jax.jit(shard_map(
+            init_local, mesh=mesh, in_specs=(PartitionSpec(),),
+            out_specs=specs, check_rep=False))
+
+    # -- per-shard ↔ global state layout ----------------------------------
+    #
+    # Replay-shard leaves (tree, storage, head, count, max_priority) gain a
+    # leading shard axis in the global representation: local (…) ↔ global
+    # (D, …), so rank-0 per-shard scalars stay addressable under a
+    # PartitionSpec("data") without replication lies.  Env-side leaves
+    # already carry the env axis, which concatenates across shards to the
+    # global env count.  Agent params / rng / counters are replicated.
+
+    def _local_state(self, gstate: LoopState) -> LoopState:
+        return gstate._replace(
+            replay=jax.tree.map(lambda x: x[0], gstate.replay))
+
+    def _global_state(self, state: LoopState) -> LoopState:
+        return state._replace(
+            replay=jax.tree.map(lambda x: x[None], state.replay))
+
+    def _state_specs(self) -> LoopState:
+        key_shape = jax.ShapeDtypeStruct((2,), jnp.uint32)
+        shapes = jax.eval_shape(
+            lambda k: init_loop_state(self.agent, self.replay, self._v_reset,
+                                      k, self.n_envs_local),
+            key_shape)
+        rep = lambda tree: jax.tree.map(lambda _: PartitionSpec(), tree)
+        shard = lambda tree: jax.tree.map(
+            lambda _: PartitionSpec(self._axis), tree)
+        return LoopState(
+            agent=rep(shapes.agent),
+            replay=shard(shapes.replay),
+            env_state=shard(shapes.env_state),
+            obs=PartitionSpec(self._axis),
+            rng=PartitionSpec(),
+            env_steps=PartitionSpec(),
+            episode_return=PartitionSpec(self._axis),
+            last_return=PartitionSpec(self._axis),
+            learn_steps=PartitionSpec(),
+        )
+
+    def init(self, key: jax.Array) -> LoopState:
+        return self._init(key)
+
+    def run_chunk(self, state: LoopState):
+        return self._chunk(state)

@@ -8,9 +8,10 @@ Two execution styles:
     parameter server on a torus *is* reduce-scatter + all-gather.
 
   * **shard_map (explicit)**: ``sharded_learn`` runs one learner per
-    data-device with an explicit ``psum`` — used by the sharded-replay
-    path where each learner samples from its local buffer shard, and by
-    the cross-pod int8 error-feedback reduce (optim/compress.py).
+    data-device with an explicit gradient ``pmean`` — used by the
+    sharded-replay path where each learner samples from its local buffer
+    shard.  (The cross-pod int8 error-feedback reduce in
+    optim/compress.py is a future extension of this path; ROADMAP.)
 
 An async-PS variant applies gradients with bounded staleness: actors
 never block on the learner (the lazy-write invariant) and a learner
@@ -20,53 +21,83 @@ shard that misses ``max_staleness`` rounds is dropped from the reduce
 
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.agents.base import Agent
 from repro.core.distributed import ShardedPrioritizedReplay
-from repro.optim import adam, compress
 
 Pytree = Any
 
 
-def psum_gradients(grads: Pytree, axes: Tuple[str, ...]) -> Pytree:
+def pmean_gradients(grads: Pytree, axes: Tuple[str, ...]) -> Pytree:
+    """Shard-average the gradient pytree (psum / axis size).  The mean —
+    not the raw sum — keeps the effective learning rate independent of
+    the shard count."""
     out = grads
     for ax in axes:
         out = jax.tree.map(lambda g: jax.lax.pmean(g, ax), out)
     return out
 
 
+def _pmean_inexact(tree: Pytree, axes: Tuple[str, ...]) -> Pytree:
+    """pmean only float leaves (opt-state step counters stay int)."""
+    def avg(x):
+        if not jnp.issubdtype(x.dtype, jnp.inexact):
+            return x
+        out = x
+        for ax in axes:
+            out = jax.lax.pmean(out, ax)
+        return out
+    return jax.tree.map(avg, tree)
+
+
 def make_sharded_learn(
-    agent_learn: Callable,
+    agent: Agent,
     replay: ShardedPrioritizedReplay,
-    mesh: Mesh,
     batch_per_shard: int,
     beta: float = 0.4,
-    compress_cross_pod: bool = False,
 ):
-    """shard_map learner: local PER sample → local grads → psum → update.
+    """Per-shard learner call: local PER sample → local grads → pmean →
+    update (paper §V-B parameter-server adaptation).
 
-    agent_learn(agent_state, items, is_w) must return
-    (agent_state', metrics, td) and itself do NO collectives — the
-    reduction happens here, once, over all data axes (and optionally
-    int8-compressed over the 'pod' axis).
+    Returns ``sharded_learn(agent_state, replay_state, rng) →
+    (agent_state', replay_state', loss)`` — the same signature as the
+    fused ``make_learner_step`` — to be invoked *inside* ``shard_map``
+    over ``replay.config.axis_names``:
+
+      * the PER sample is local to the shard's tree/storage, with
+        importance weights against the psum'd global distribution
+        (``ShardedPrioritizedReplay.sample``);
+      * agents exposing the ``grads``/``apply_grads`` split get the exact
+        data-parallel reduction: grads are pmean'd across shards before
+        the optimizer step, so replicated params stay bit-identical;
+      * agents without the split fall back to a local ``learn`` followed
+        by a parameter/target/opt pmean (gossip-average; identical result
+        at 1 shard, approximate beyond);
+      * priority write-back stays local (write-after-read, §IV-D3).
     """
-    from jax.experimental.shard_map import shard_map
-
     axes = replay.config.axis_names
 
-    def _local(agent_state, replay_state, rng, err):
+    def sharded_learn(agent_state, replay_state, rng):
         idx, items, is_w = replay.sample(replay_state, rng, batch_per_shard, beta)
-        agent_state, metrics, td = agent_learn(agent_state, items, is_w)
+        if agent.grads is not None and agent.apply_grads is not None:
+            grads, aux = agent.grads(agent_state, items, is_w)
+            grads = pmean_gradients(grads, axes)
+            agent_state, metrics, td = agent.apply_grads(agent_state, grads, aux)
+        else:
+            agent_state, metrics, td = agent.learn(agent_state, items, is_w)
+            agent_state = agent_state._replace(
+                params=_pmean_inexact(agent_state.params, axes),
+                target=_pmean_inexact(agent_state.target, axes),
+                opt=_pmean_inexact(agent_state.opt, axes),
+            )
         replay_state = replay.update_priorities(replay_state, idx, td)
-        return agent_state, replay_state, metrics, err
+        return agent_state, replay_state, metrics["loss"]
 
-    return _local, axes
+    return sharded_learn
 
 
 def staleness_weights(ages: jax.Array, max_staleness: int) -> jax.Array:

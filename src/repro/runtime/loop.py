@@ -1,6 +1,6 @@
-"""The paper's training loop (Alg. 1) with lazy-write overlap (§IV-D2).
+"""The paper's training loop (Alg. 1) as composable actor/learner programs.
 
-``parallel_step`` is one fused iteration:
+The fused iteration keeps the lazy-write overlap (§IV-D2):
 
     1. ACTORS   — ε-greedy act on E vectorized envs, env step           (§V-A)
     2. INSERT-BEGIN — zero in-flight slot priorities (lazy write phase 1)
@@ -13,16 +13,29 @@ invisible by construction), so XLA schedules the transition DMA
 concurrently with learner compute — the same overlap the paper's lock
 split buys on a multicore CPU.
 
-``update_interval`` (actor steps per learn) matches the paper's desired
-collection/consumption ratio; the DSE (dse.py) chooses parallelism so
-the realized ratio hits it.
+The loop is built from three pieces (DESIGN.md §3):
+
+  * ``make_actor_step``   — one vectorized env interaction producing a
+    batch of transitions (the paper's parallel actors);
+  * ``make_learner_step`` — one PER sample → TD update → priority
+    write-back (the paper's parallel learners);
+  * ``RatioSchedule``     — the collection/consumption ratio.  The
+    paper's ``update_interval`` (env steps per learn) is *honored*: with
+    E envs per iteration and ratio U, the schedule runs round(E/U)
+    learner calls per iteration (U < E) or one learner call every
+    round(U/E) iterations (U ≥ E).  ``learns_per_step`` multiplies the
+    learner calls per event, so both "N actor steps per learn" and
+    "M learns per actor step" are expressible.
+
+``make_step`` composes them into one jit-able program; the executors in
+``runtime/executors.py`` run that program either fused on one device or
+inside ``shard_map`` over a mesh data axis.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -31,6 +44,11 @@ from repro.agents.base import Agent, AgentState
 from repro.core.replay import PrioritizedReplay, ReplayState
 
 Pytree = Any
+
+# keys of the metrics dict every composed step returns (make_step below);
+# the sharded executor derives its shard_map out_specs from this tuple
+METRIC_KEYS = ("loss", "mean_episode_return", "env_steps", "learn_steps",
+               "buffer_size", "epsilon")
 
 
 class LoopState(NamedTuple):
@@ -42,69 +60,170 @@ class LoopState(NamedTuple):
     env_steps: jax.Array
     episode_return: jax.Array     # running per-env return accumulator
     last_return: jax.Array        # most recently finished episode returns
+    learn_steps: jax.Array        # cumulative learner update count
 
 
 @dataclasses.dataclass(frozen=True)
 class LoopConfig:
     batch_size: int = 128
     update_interval: int = 1      # env steps per learn step (paper ratio)
-    learns_per_step: int = 1      # parallel learners per iteration
+    learns_per_step: int = 1      # extra learner calls per learn event
     warmup: int = 1000            # env steps before learning starts
-    epsilon: float = 0.1
+    epsilon: float = 0.1          # exploration at step 0
+    epsilon_final: float = 0.02   # exploration floor after decay
+    epsilon_decay_steps: int = 10_000   # env steps of linear ε decay
     beta: float = 0.4             # PER importance exponent
 
 
-def make_parallel_step(
-    agent: Agent,
-    replay: PrioritizedReplay,
-    v_step: Callable,
-    cfg: LoopConfig,
-    n_envs: int,
-):
-    """Returns jit-able parallel_step(state) → (state, metrics)."""
+@dataclasses.dataclass(frozen=True)
+class RatioSchedule:
+    """Static actor/learner interleave realizing ``update_interval``.
 
-    def parallel_step(state: LoopState) -> Tuple[LoopState, Dict[str, jax.Array]]:
-        rng, k_act, k_env, k_sample = jax.random.split(state.rng, 4)
+    ``period`` iterations separate learn events; each event runs
+    ``learns`` learner calls.  Realized ratio (env steps per learn) is
+    ``period * env_steps_per_iter / learns``.
+    """
 
-        # 1. parallel actors (no weight mutation → no sync; paper §V-A)
-        actions = agent.act(state.agent, state.obs, k_act, cfg.epsilon)
-        env_state, obs_next, rew, done, true_next = v_step(
-            state.env_state, actions, k_env)
-        ep_ret = state.episode_return + rew
-        last_ret = jnp.where(done, ep_ret, state.last_return)
+    period: int               # iterations between learn events (≥ 1)
+    learns: int               # learner calls per event (≥ 1)
+    env_steps_per_iter: int   # global env steps added per iteration
+
+    @property
+    def realized_ratio(self) -> float:
+        return self.period * self.env_steps_per_iter / self.learns
+
+    @classmethod
+    def from_config(cls, cfg: LoopConfig, env_steps_per_iter: int) -> "RatioSchedule":
+        u = max(1, cfg.update_interval)
+        e = env_steps_per_iter
+        if u >= e:
+            return cls(period=max(1, round(u / e)),
+                       learns=max(1, cfg.learns_per_step),
+                       env_steps_per_iter=e)
+        return cls(period=1,
+                   learns=max(1, round(e / u)) * max(1, cfg.learns_per_step),
+                   env_steps_per_iter=e)
+
+
+def epsilon_schedule(cfg: LoopConfig, env_steps: jax.Array) -> jax.Array:
+    """Linear ε decay: cfg.epsilon → cfg.epsilon_final over decay_steps."""
+    frac = jnp.clip(
+        env_steps.astype(jnp.float32) / max(1, cfg.epsilon_decay_steps), 0.0, 1.0
+    )
+    return cfg.epsilon + (cfg.epsilon_final - cfg.epsilon) * frac
+
+
+# -- actor program -----------------------------------------------------------
+
+
+def make_actor_step(agent: Agent, v_step: Callable, n_envs: int):
+    """One parallel-actor interaction: act on E envs, step, package the
+    transition batch (no weight mutation → no sync; paper §V-A)."""
+
+    def actor_step(agent_state, env_state, obs, ep_ret, last_ret,
+                   k_act, k_env, epsilon):
+        actions = agent.act(agent_state, obs, k_act, epsilon)
+        env_state, obs_next, rew, done, true_next = v_step(env_state, actions, k_env)
+        ep_ret = ep_ret + rew
+        last_ret = jnp.where(done, ep_ret, last_ret)
         ep_ret = jnp.where(done, 0.0, ep_ret)
-
         transitions = {
-            "obs": state.obs,
+            "obs": obs,
             "action": actions,
             "reward": rew,
             "next_obs": true_next,
             "done": done.astype(jnp.float32),
         }
+        return env_state, obs_next, ep_ret, last_ret, transitions
+
+    return actor_step
+
+
+# -- learner program ---------------------------------------------------------
+
+
+def make_learner_step(agent: Agent, replay, cfg: LoopConfig):
+    """One parallel-learner call: PER sample → TD update → priority
+    write-back (write-after-read tolerated, §IV-D3).
+
+    ``replay`` may be a ``PrioritizedReplay`` or any object with the same
+    sample/update_priorities signature (e.g. the sharded buffer, whose
+    ``sample`` computes importance weights against psum'd global stats).
+    The sharded gradient-psum variant lives in ``runtime/learner.py``.
+    """
+
+    def learner_step(agent_state, replay_state, rng):
+        idx, items, is_w = replay.sample(replay_state, rng, cfg.batch_size, cfg.beta)
+        agent_state, metrics, td = agent.learn(agent_state, items, is_w)
+        replay_state = replay.update_priorities(replay_state, idx, td)
+        return agent_state, replay_state, metrics["loss"]
+
+    return learner_step
+
+
+# -- composed step -----------------------------------------------------------
+
+
+def make_step(
+    agent: Agent,
+    replay,
+    v_step: Callable,
+    cfg: LoopConfig,
+    n_envs: int,
+    *,
+    schedule: Optional[RatioSchedule] = None,
+    learn_fn: Optional[Callable] = None,
+    shard_id: Union[int, Callable[[], jax.Array]] = 0,
+    mean_across: Optional[Callable] = None,
+    sum_across: Optional[Callable] = None,
+):
+    """Compose actor + learner programs into one jit-able parallel_step.
+
+    ``n_envs`` is the *local* env count (per shard); ``schedule`` carries
+    the global env steps per iteration.  ``shard_id`` feeds the per-shard
+    rng fold (a callable so ``lax.axis_index`` can be read inside
+    ``shard_map``); ``mean_across``/``sum_across`` reduce reported metrics
+    over shards (identity when fused).
+    """
+    schedule = schedule or RatioSchedule.from_config(cfg, n_envs)
+    actor_step = make_actor_step(agent, v_step, n_envs)
+    learn_fn = learn_fn or make_learner_step(agent, replay, cfg)
+    mean_across = mean_across or (lambda x: x)
+    sum_across = sum_across or (lambda x: x)
+
+    def step(state: LoopState) -> Tuple[LoopState, Dict[str, jax.Array]]:
+        rng_next, k = jax.random.split(state.rng)
+        sid = shard_id() if callable(shard_id) else shard_id
+        k = jax.random.fold_in(k, sid)
+        k_act, k_env, k_sample = jax.random.split(k, 3)
+
+        # 1. parallel actors
+        eps = epsilon_schedule(cfg, state.env_steps)
+        env_state, obs_next, ep_ret, last_ret, transitions = actor_step(
+            state.agent, state.env_state, state.obs,
+            state.episode_return, state.last_return, k_act, k_env, eps)
 
         # 2. lazy write, phase 1: in-flight slots become unsampleable
         replay_state, slots = replay.insert_begin(state.replay, n_envs)
 
-        # 3. parallel learners on the phase-1 tree state
-        can_learn = state.env_steps >= cfg.warmup
+        # 3. parallel learners on the phase-1 tree state, at the scheduled
+        #    collection/consumption ratio
+        it = state.env_steps // schedule.env_steps_per_iter
+        can_learn = (state.env_steps >= cfg.warmup) & (it % schedule.period == 0)
 
         def do_learn(args):
             agent_state, rstate = args
-            metrics = None
-            for i in range(cfg.learns_per_step):
+            loss = jnp.zeros(())
+            for i in range(schedule.learns):
                 ki = jax.random.fold_in(k_sample, i)
-                idx, items, is_w = replay.sample(
-                    rstate, ki, cfg.batch_size, cfg.beta)
-                agent_state, metrics, td = agent.learn(agent_state, items, is_w)
-                # 4. priority update (write-after-read tolerated, §IV-D3)
-                rstate = replay.update_priorities(rstate, idx, td)
-            return agent_state, rstate, metrics["loss"]
+                agent_state, rstate, loss = learn_fn(agent_state, rstate, ki)
+            return agent_state, rstate, loss, state.learn_steps + schedule.learns
 
         def skip_learn(args):
             agent_state, rstate = args
-            return agent_state, rstate, jnp.zeros(())
+            return agent_state, rstate, jnp.zeros(()), state.learn_steps
 
-        agent_state, replay_state, loss = jax.lax.cond(
+        agent_state, replay_state, loss, learn_steps = jax.lax.cond(
             can_learn, do_learn, skip_learn, (state.agent, replay_state))
 
         # 5. lazy write, phase 3: storage write + P_max restore
@@ -115,31 +234,50 @@ def make_parallel_step(
             replay=replay_state,
             env_state=env_state,
             obs=obs_next,
-            rng=rng,
-            env_steps=state.env_steps + n_envs,
+            rng=rng_next,
+            env_steps=state.env_steps + schedule.env_steps_per_iter,
             episode_return=ep_ret,
             last_return=last_ret,
+            learn_steps=learn_steps,
         )
         metrics = {
-            "loss": loss,
-            "mean_episode_return": jnp.mean(last_ret),
+            "loss": mean_across(loss),
+            "mean_episode_return": mean_across(jnp.mean(last_ret)),
             "env_steps": new_state.env_steps,
-            "buffer_size": replay_state.count,
+            "learn_steps": learn_steps,
+            "buffer_size": sum_across(replay_state.count),
+            "epsilon": eps,
         }
+        assert set(metrics) == set(METRIC_KEYS)
         return new_state, metrics
 
-    return parallel_step
+    return step
+
+
+def make_parallel_step(
+    agent: Agent,
+    replay: PrioritizedReplay,
+    v_step: Callable,
+    cfg: LoopConfig,
+    n_envs: int,
+):
+    """Returns jit-able parallel_step(state) → (state, metrics) — the
+    fused single-device composition (compat wrapper over ``make_step``)."""
+    return make_step(agent, replay, v_step, cfg, n_envs)
 
 
 def init_loop_state(
     agent: Agent,
-    replay: PrioritizedReplay,
+    replay,
     v_reset: Callable,
     key: jax.Array,
     n_envs: int,
+    shard_id: Union[int, jax.Array] = 0,
 ) -> LoopState:
+    """Initial state.  ``shard_id`` decorrelates per-shard env resets while
+    agent params (from the unfolded key) stay replicated across shards."""
     k1, k2, k3 = jax.random.split(key, 3)
-    env_state, obs = v_reset(k1)
+    env_state, obs = v_reset(jax.random.fold_in(k1, shard_id))
     return LoopState(
         agent=agent.init(k2),
         replay=replay.init(),
@@ -149,6 +287,7 @@ def init_loop_state(
         env_steps=jnp.zeros((), jnp.int32),
         episode_return=jnp.zeros((n_envs,)),
         last_return=jnp.zeros((n_envs,)),
+        learn_steps=jnp.zeros((), jnp.int32),
     )
 
 
@@ -164,27 +303,11 @@ def train(
     log_every: int = 0,
     scan_chunk: int = 64,
 ) -> Tuple[LoopState, Dict[str, jax.Array]]:
-    """Run the full loop; iterations are chunked through lax.scan."""
-    step = make_parallel_step(agent, replay, v_step, cfg, n_envs)
-    state = init_loop_state(agent, replay, v_reset, key, n_envs)
+    """Run the full fused loop — a thin wrapper over ``FusedExecutor``
+    for callers that already hold (v_reset, v_step) instead of an env
+    factory."""
+    from repro.runtime.executors import FusedExecutor  # lazy: avoid cycle
 
-    @jax.jit
-    def chunk(state):
-        def body(s, _):
-            s, m = step(s)
-            return s, m
-        return jax.lax.scan(body, state, None, length=scan_chunk)
-
-    history = []
-    done_iters = 0
-    while done_iters < iterations:
-        state, metrics = chunk(state)
-        done_iters += scan_chunk
-        last = jax.tree.map(lambda x: x[-1], metrics)
-        history.append(last)
-        if log_every and done_iters % log_every < scan_chunk:
-            print(f"iter={done_iters} "
-                  f"return={float(last['mean_episode_return']):.1f} "
-                  f"loss={float(last['loss']):.4f} "
-                  f"buffer={int(last['buffer_size'])}")
-    return state, jax.tree.map(lambda *xs: jnp.stack(xs), *history)
+    ex = FusedExecutor(agent, replay, lambda _n: (None, v_reset, v_step),
+                       cfg, n_envs, scan_chunk=scan_chunk)
+    return ex.train(iterations, key, log_every)

@@ -19,6 +19,7 @@ SCRIPT = textwrap.dedent("""
     from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
     from repro.core.distributed import ShardedPrioritizedReplay, ShardedReplayConfig
+    from repro.launch.mesh import use_mesh
 
     assert jax.device_count() == 8
     mesh = Mesh(np.asarray(jax.devices()).reshape(8), ("data",))
@@ -48,7 +49,7 @@ SCRIPT = textwrap.dedent("""
     state_shapes = jax.eval_shape(init_fn)
     state_specs = specs_like(state_shapes)
 
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         sm_init = shard_map(init_fn, mesh=mesh, in_specs=(),
                             out_specs=state_specs, check_rep=False)
         state = sm_init()
