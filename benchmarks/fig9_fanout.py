@@ -1,13 +1,31 @@
-"""Fig. 9 — K-ary sum tree throughput vs binary tree, fanout sweep.
+"""Fig. 9 — K-ary sum tree throughput vs binary tree, fanout sweep,
+plus the runtime-backend fan-out sweep (``--executor``).
 
-Reproduces the paper's experiment: "4 threads, each running sampling and
-priority update on the shared replay buffer 1000 times" → here, batched
-ops of the same total volume (4×1000 interleaved sample+update rounds),
-jitted, against buffer sizes 1e3/1e4/1e5.  Speedup = binary-tree time /
-K-ary time; the paper finds an optimal K per buffer size (cacheline
-effect) — on TPU-lane layout the optimum sits at K=128/256 (DESIGN.md §2).
+Tree mode (default) reproduces the paper's experiment: "4 threads, each
+running sampling and priority update on the shared replay buffer 1000
+times" → here, batched ops of the same total volume (4×1000 interleaved
+sample+update rounds), jitted, against buffer sizes 1e3/1e4/1e5.
+Speedup = binary-tree time / K-ary time; the paper finds an optimal K
+per buffer size (cacheline effect) — on TPU-lane layout the optimum sits
+at K=128/256 (DESIGN.md §2).
+
+Executor mode sweeps the third runtime backend (DESIGN.md §5)::
+
+    # fused async: publish-interval sweep vs the synchronous baseline
+    python benchmarks/fig9_fanout.py --executor async
+
+    # sharded async: staleness-weighted reduce, max-staleness sweep
+    python benchmarks/fig9_fanout.py --executor async --shards 4 \\
+        --max-staleness 0,1,3
+
+reporting env-steps/s per (publish_interval, max_staleness) point and
+the speedup over the synchronous executor at the same shard count
+(``max_staleness`` only shapes the sharded gradient reduce — without
+``--shards`` it is inert and the sweep collapses to publish_interval).
 """
 
+import argparse
+import os
 import time
 
 import jax
@@ -66,5 +84,130 @@ def run(csv=True):
     return rows
 
 
+# -- executor fan-out sweep (runtime backends, DESIGN.md §3/§5) --------------
+
+
+def _make_runtime_executor(kind, n_envs, shards, publish_interval,
+                           max_staleness, scan_chunk=20):
+    import functools
+
+    from repro.agents.dqn import DQNConfig, make_dqn
+    from repro.core.replay import PrioritizedReplay, ReplayConfig
+    from repro.envs.classic import make_vec
+    from repro.runtime.executors import (AsyncExecutor, FusedExecutor,
+                                         ShardedExecutor)
+    from repro.runtime.loop import LoopConfig
+
+    env_fn = functools.partial(make_vec, "cartpole")
+    spec, _, _ = env_fn(1)
+    agent = make_dqn(spec, DQNConfig())
+    example = {
+        "obs": jnp.zeros((spec.obs_dim,), jnp.float32),
+        "action": jnp.zeros((), jnp.int32),
+        "reward": jnp.zeros(()),
+        "next_obs": jnp.zeros((spec.obs_dim,), jnp.float32),
+        "done": jnp.zeros(()),
+    }
+    cfg = LoopConfig(batch_size=64, warmup=64, epsilon=0.1)
+    if shards:
+        from repro.core.distributed import (ShardedPrioritizedReplay,
+                                            ShardedReplayConfig)
+        from repro.launch.mesh import data_mesh
+
+        replay = ShardedPrioritizedReplay(
+            ShardedReplayConfig(capacity_per_shard=50_000 // shards,
+                                fanout=128), example)
+        mesh = data_mesh(shards)
+        if kind == "async":
+            return AsyncExecutor(agent, replay, env_fn, cfg, n_envs,
+                                 publish_interval=publish_interval,
+                                 max_staleness=max_staleness, mesh=mesh,
+                                 scan_chunk=scan_chunk)
+        return ShardedExecutor(agent, replay, env_fn, cfg, n_envs, mesh,
+                               scan_chunk=scan_chunk)
+    replay = PrioritizedReplay(ReplayConfig(capacity=50_000, fanout=128),
+                               example)
+    if kind == "async":
+        return AsyncExecutor(agent, replay, env_fn, cfg, n_envs,
+                             publish_interval=publish_interval,
+                             max_staleness=max_staleness,
+                             scan_chunk=scan_chunk)
+    return FusedExecutor(agent, replay, env_fn, cfg, n_envs,
+                         scan_chunk=scan_chunk)
+
+
+def _steps_per_s(ex, iters=120):
+    st = ex.init(jax.random.PRNGKey(0))
+    st, _ = ex.run_chunk(st)
+    jax.block_until_ready(st.obs)
+    n_chunks = max(1, iters // ex.scan_chunk)
+    t0 = time.perf_counter()
+    for _ in range(n_chunks):
+        st, _ = ex.run_chunk(st)
+    jax.block_until_ready(st.obs)
+    return ex.n_envs * ex.scan_chunk * n_chunks / (time.perf_counter() - t0)
+
+
+def run_executor_sweep(publish_intervals, max_stalenesses, n_envs=8,
+                       shards=0, csv=True):
+    """Async backend sweep: env-steps/s per (publish_interval,
+    max_staleness) point vs the synchronous executor at equal shards."""
+    tag = f"{shards}shards" if shards else "fused"
+    base_kind = "sharded" if shards else "fused"
+    rows = []
+    base = _steps_per_s(_make_runtime_executor(base_kind, n_envs, shards, 0, 0))
+    rows.append((f"fig9/{base_kind}_sync_{tag}", 1e6 / base, 1.0))
+    if not shards:
+        max_stalenesses = max_stalenesses[:1]   # inert without a reduce
+    for p in publish_intervals:
+        for s in max_stalenesses:
+            t = _steps_per_s(_make_runtime_executor(
+                "async", n_envs, shards, p, s))
+            rows.append((f"fig9/async_p{p}_s{s}_{tag}", 1e6 / t, t / base))
+    if csv:
+        for name, us, derived in rows:
+            print(f"{name},{us:.2f},{derived:.2f}")
+    return rows
+
+
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--executor", choices=("tree", "fused", "async"),
+                    default="tree",
+                    help="tree = the paper's Fig. 9 fanout sweep; "
+                         "fused/async = runtime-backend throughput sweep")
+    ap.add_argument("--publish-interval", default="1,2,4,8",
+                    help="comma list of actor-copy publish intervals")
+    ap.add_argument("--max-staleness", default="0,1,3",
+                    help="comma list of staleness bounds for the sharded "
+                         "async gradient reduce")
+    ap.add_argument("--shards", type=int, default=0,
+                    help="sweep over this many forced host-platform device "
+                         "shards (sharded async backend)")
+    ap.add_argument("--n-envs", type=int, default=8)
+    args = ap.parse_args()
+    if args.shards:
+        # the backend reads XLA_FLAGS at first use, which nothing in this
+        # module triggers at import time — set it before any jax call
+        import re
+
+        existing = os.environ.get("XLA_FLAGS", "")
+        m = re.search(r"--xla_force_host_platform_device_count=(\d+)",
+                      existing)
+        if m and int(m.group(1)) != args.shards:
+            raise SystemExit(
+                f"XLA_FLAGS already pins "
+                f"{m.group(1)} host devices, conflicting with "
+                f"--shards {args.shards}; unset it or make them agree")
+        if not m:
+            flag = f"--xla_force_host_platform_device_count={args.shards}"
+            os.environ["XLA_FLAGS"] = f"{existing} {flag}".strip()
+    if args.executor == "tree":
+        run()
+    else:
+        # --executor fused benchmarks only the synchronous baseline row
+        run_executor_sweep(
+            ([int(x) for x in args.publish_interval.split(",")]
+             if args.executor == "async" else []),
+            [int(x) for x in args.max_staleness.split(",")],
+            n_envs=args.n_envs, shards=args.shards)

@@ -6,6 +6,14 @@ through the executor API (runtime/executors.py).
 
     # sharded runtime: 4 replay/learner shards on forced host devices
     PYTHONPATH=src python examples/quickstart.py --shards 4
+
+    # async runtime: actors act on a 4-iteration-delayed parameter copy
+    PYTHONPATH=src python examples/quickstart.py --executor async \\
+        --publish-interval 4
+
+    # sharded async: staggered shard clocks + staleness-weighted reduce
+    PYTHONPATH=src python examples/quickstart.py --executor async \\
+        --shards 4 --publish-interval 4 --max-staleness 1
 """
 
 import argparse
@@ -26,6 +34,16 @@ def main():
     ap.add_argument("--shards", type=int, default=0,
                     help="run the ShardedExecutor over this many "
                          "host-platform device shards (0 = fused)")
+    ap.add_argument("--executor", choices=("sync", "async"), default="sync",
+                    help="async = actors act on a delayed parameter copy "
+                         "(AsyncExecutor, DESIGN.md §5)")
+    ap.add_argument("--publish-interval", type=int, default=4,
+                    help="iterations between actor-copy republishes "
+                         "(async executor; 1 = synchronous semantics)")
+    ap.add_argument("--max-staleness", type=int, default=1,
+                    help="drop a shard from the gradient reduce once its "
+                         "acting copy ages past this many iterations "
+                         "(sharded async executor)")
     args = ap.parse_args()
 
     if args.shards:
@@ -45,7 +63,8 @@ def main():
     from repro.core.replay import PrioritizedReplay, ReplayConfig
     from repro.envs.classic import make_vec
     from repro.launch.mesh import data_mesh
-    from repro.runtime.executors import FusedExecutor, ShardedExecutor
+    from repro.runtime.executors import (AsyncExecutor, FusedExecutor,
+                                         ShardedExecutor)
     from repro.runtime.loop import LoopConfig
 
     env_fn = functools.partial(make_vec, "cartpole")
@@ -67,16 +86,32 @@ def main():
             ShardedReplayConfig(capacity_per_shard=50_000 // args.shards,
                                 fanout=args.fanout, backend=args.backend),
             example)
-        ex = ShardedExecutor(agent, replay, env_fn, cfg, args.n_envs, mesh)
-        print(f"sharded executor: {args.shards} shards × "
-              f"{ex.n_envs_local} envs, batch/shard "
-              f"{cfg.batch_size // args.shards}")
+        if args.executor == "async":
+            ex = AsyncExecutor(agent, replay, env_fn, cfg, args.n_envs,
+                               publish_interval=args.publish_interval,
+                               max_staleness=args.max_staleness, mesh=mesh)
+            print(f"async sharded executor: {args.shards} shards × "
+                  f"{ex.n_envs_local} envs, publish every "
+                  f"{args.publish_interval} iters, max staleness "
+                  f"{args.max_staleness}")
+        else:
+            ex = ShardedExecutor(agent, replay, env_fn, cfg, args.n_envs,
+                                 mesh)
+            print(f"sharded executor: {args.shards} shards × "
+                  f"{ex.n_envs_local} envs, batch/shard "
+                  f"{cfg.batch_size // args.shards}")
     else:
         replay = PrioritizedReplay(
             ReplayConfig(capacity=50_000, fanout=args.fanout,
                          backend=args.backend), example)
-        ex = FusedExecutor(agent, replay, env_fn, cfg, args.n_envs)
-        print("fused executor (single jit program)")
+        if args.executor == "async":
+            ex = AsyncExecutor(agent, replay, env_fn, cfg, args.n_envs,
+                               publish_interval=args.publish_interval)
+            print(f"async fused executor: actors on a copy republished "
+                  f"every {args.publish_interval} iters")
+        else:
+            ex = FusedExecutor(agent, replay, env_fn, cfg, args.n_envs)
+            print("fused executor (single jit program)")
     print(f"ratio schedule: {ex.schedule} "
           f"(realized {ex.schedule.realized_ratio:.1f} env steps per learn)")
 

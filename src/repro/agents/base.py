@@ -22,6 +22,19 @@ class AgentState(NamedTuple):
     extra: Pytree = ()     # algorithm-specific (e.g. SAC log-alpha, its opt)
 
 
+def default_params_for_acting(state: AgentState) -> Pytree:
+    """The pytree ``act`` reads — every built-in agent acts on
+    ``state.params`` (DQN reads Q-params, the actor-critics their "pi"
+    sub-tree of it), so the whole params pytree is the snapshot unit."""
+    return state.params
+
+
+def default_with_acting_params(state: AgentState, params: Pytree) -> AgentState:
+    """Inverse of ``default_params_for_acting``: substitute a (possibly
+    stale) acting copy back into the state handed to ``act``."""
+    return state._replace(params=params)
+
+
 @dataclasses.dataclass(frozen=True)
 class Agent:
     """act/learn function bundle; see dqn.py etc. for constructors.
@@ -32,6 +45,16 @@ class Agent:
     phases (paper §V-B parameter-server reduce; runtime/learner.py).
     Agents that don't provide the split still run sharded via a
     parameter-average fallback.
+
+    ``params_for_acting``/``with_acting_params`` are the double-buffer
+    contract for async executors: the runtime snapshots
+    ``params_for_acting(state)`` into ``LoopState.actor_params`` every
+    ``publish_interval`` iterations and acts on
+    ``with_acting_params(state, actor_params)``, so actors read a bounded
+    -staleness copy while learners keep updating the fresh params
+    (runtime/loop.py).  The defaults cover every agent whose ``act``
+    reads only ``state.params``; override both together if an agent acts
+    on a different sub-tree.
     """
 
     name: str
@@ -43,6 +66,9 @@ class Agent:
     # grads(state, batch, is_weights) → (grad_pytree, aux)
     apply_grads: Optional[Callable] = None
     # apply_grads(state, grad_pytree, aux) → (state', metrics, |td|)
+    params_for_acting: Callable[[AgentState], Pytree] = default_params_for_acting
+    with_acting_params: Callable[[AgentState, Pytree], AgentState] = \
+        default_with_acting_params
 
 
 def mlp_init(key, sizes, dtype=None):

@@ -74,6 +74,14 @@ class ShardedPrioritizedReplay:
             cnt = jax.lax.psum(cnt, ax)
         return tot, cnt
 
+    def max_across(self, x: jax.Array) -> jax.Array:
+        """Global max over the mesh axes (the importance-weight
+        normalizer must be the max over *all* shards' draws, not the
+        local batch max — one extra scalar collective)."""
+        for ax in self.config.axis_names:
+            x = jax.lax.pmax(x, ax)
+        return x
+
     # -- ops ----------------------------------------------------------------
 
     def insert(self, state: ReplayState, items: Pytree) -> ReplayState:
@@ -93,11 +101,13 @@ class ShardedPrioritizedReplay:
         batch_per_shard: int,
         beta: float | jax.Array = 0.4,
     ) -> Tuple[jax.Array, Pytree, jax.Array]:
-        """Stratified global sample: B/D local draws, global IS weights."""
+        """Stratified global sample: B/D local draws, global IS weights
+        (distribution *and* max-normalizer both psum'd/pmax'd global)."""
         g_tot, g_cnt = self.global_stats(state)
         return self.local.sample(
             state, rng, batch_per_shard, beta,
             global_total=g_tot, global_count=g_cnt,
+            max_across=self.max_across,
         )
 
     def update_priorities(self, state, idx, td_errors) -> ReplayState:

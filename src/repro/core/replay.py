@@ -150,13 +150,18 @@ class PrioritizedReplay:
         beta: float | jax.Array = 0.4,
         global_total: jax.Array | None = None,
         global_count: jax.Array | None = None,
+        max_across=None,
     ) -> Tuple[jax.Array, Pytree, jax.Array]:
         """Prioritized sample of ``batch`` items.
 
         Returns (indices, items, importance_weights).  For a sharded
         buffer, pass the psum'd ``global_total`` / ``global_count`` so the
         importance weights are computed against the *global* distribution
-        (stratified sampling across shards; DESIGN.md §2).
+        (stratified sampling across shards; DESIGN.md §2), and a
+        ``max_across`` reduction (pmax over the mesh axes) so the
+        ``w / max w`` normalization also uses the global max — otherwise
+        each shard rescales its weights by a different local factor and
+        the shards' learner objectives silently diverge.
         """
         u = jax.random.uniform(rng, (batch,))
         idx, pri = self._tree_sample(state.tree, u)
@@ -170,7 +175,10 @@ class PrioritizedReplay:
         # a zero-priority leaf (in-flight or unfilled slot); its weight must
         # be 0, not 0**(-β) = inf, or one such draw NaNs the whole learn.
         w = jnp.where(pri > 0, w, 0.0)
-        w = w / jnp.maximum(jnp.max(w), 1e-12)
+        w_max = jnp.max(w)
+        if max_across is not None:
+            w_max = max_across(w_max)
+        w = w / jnp.maximum(w_max, 1e-12)
         return idx, items, w
 
     def _gather(self, storage: Pytree, idx: jax.Array) -> Pytree:

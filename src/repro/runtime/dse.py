@@ -53,7 +53,20 @@ def solve(
     total: int,
     update_interval: float = 1.0,
 ) -> DSEResult:
-    """Exhaustive O(M²) search of Eq. 5 (paper §VI-G)."""
+    """Exhaustive O(M²) search of Eq. 5 (paper §VI-G).
+
+    Raises ``ValueError`` for an infeasible budget or empty curves — with
+    ``total < 2`` the (x_a ≥ 1, x_l ≥ 1) search space is empty and there
+    is no allocation to return.
+    """
+    if total < 2:
+        raise ValueError(
+            f"total={total}: the DSE needs a resource budget of at least 2 "
+            "(one actor lane + one learner lane, Eq. 5 requires x_a ≥ 1 "
+            "and x_l ≥ 1)")
+    if not actor_curve or not learner_curve:
+        raise ValueError("actor_curve and learner_curve must be non-empty "
+                         "profiled throughput curves")
     best = None
     for xa in range(1, total):
         for xl in range(1, total - xa + 1):

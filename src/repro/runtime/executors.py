@@ -1,4 +1,4 @@
-"""Executor layer: one training-loop API, two runtime backends.
+"""Executor layer: one training-loop API, three runtime backends.
 
 An executor owns the composed actor/learner step program (runtime/loop.py)
 and drives it through chunked ``lax.scan``:
@@ -17,9 +17,25 @@ and drives it through chunked ``lax.scan``:
     actors + parallel learners architecture mapped onto a device mesh
     (DESIGN.md §3).
 
-Both executors realize the same ``RatioSchedule``, so a 1-shard
+  * ``AsyncExecutor``   — the bounded-staleness path (DESIGN.md §5):
+    actors act on a *delayed* parameter copy, double-buffered in
+    ``LoopState.actor_params`` and republished from the fresh learner
+    params every ``publish_interval`` iterations, while learners keep
+    updating the fresh params — the paper's "actors never block on
+    learners" decoupling (§IV-D) realized inside a deterministic program.
+    Without a mesh it wraps the fused program; with a mesh the shard
+    publish ticks are staggered and each shard's gradient contribution is
+    scaled by ``staleness_weights(age, max_staleness)`` with the reduce
+    weight renormalized — a shard past the bound is dropped from the
+    reduce (runtime/learner.py).  At ``publish_interval=1,
+    max_staleness=0`` it reproduces the synchronous executors
+    trajectory-exactly (tests/test_async_executor.py).
+
+All executors realize the same ``RatioSchedule``, so a 1-shard
 ``ShardedExecutor`` reproduces ``FusedExecutor`` metrics exactly from the
-same seed (asserted in tests/test_executors.py).
+same seed (asserted in tests/test_executors.py), and ``Executor.run``
+performs exactly the requested number of iterations (full chunks plus an
+exact-length tail chunk, one cached jit per tail length).
 
 Typical use::
 
@@ -31,11 +47,16 @@ Typical use::
     srb = ShardedPrioritizedReplay(ShardedReplayConfig(...), example)
     ex = ShardedExecutor(agent, srb, env_fn, cfg, n_envs=8, mesh=mesh)
     state, history = ex.train(iterations=2000, key=jax.random.PRNGKey(0))
+
+    ex = AsyncExecutor(agent, srb, env_fn, cfg, n_envs=8, mesh=mesh,
+                       publish_interval=4, max_staleness=1)
+    state, history = ex.train(iterations=2000, key=jax.random.PRNGKey(0))
 """
 
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Tuple
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -53,7 +74,8 @@ Pytree = Any
 
 
 class Executor:
-    """Common chunked-scan driver; subclasses provide init() and _chunk."""
+    """Common chunked-scan driver; subclasses provide init() and
+    _build_chunk(length)."""
 
     schedule: RatioSchedule
     scan_chunk: int
@@ -61,20 +83,42 @@ class Executor:
     def init(self, key: jax.Array) -> LoopState:
         raise NotImplementedError
 
-    def run_chunk(self, state: LoopState):
-        """(state) → (state, per-iteration metrics of shape (scan_chunk,))."""
+    def _build_chunk(self, length: int) -> Callable:
+        """Compile (state) → (state, per-iteration metrics of shape
+        (length,)) scanning the step ``length`` times."""
         raise NotImplementedError
+
+    def run_chunk(self, state: LoopState, length: Optional[int] = None):
+        """(state) → (state, per-iteration metrics of shape (length,)).
+
+        Compiled programs are cached per distinct ``length`` — the run
+        loop only ever uses ``scan_chunk`` plus one tail length."""
+        length = self.scan_chunk if length is None else length
+        cache = getattr(self, "_chunks", None)
+        if cache is None:
+            cache = self._chunks = {}
+        fn = cache.get(length)
+        if fn is None:
+            fn = cache[length] = self._build_chunk(length)
+        return fn(state)
 
     def run(self, state: LoopState, iterations: int, log_every: int = 0
             ) -> Tuple[LoopState, Dict[str, jax.Array]]:
+        """Run *exactly* ``iterations`` iterations: full ``scan_chunk``
+        chunks plus one exact-length tail chunk (no off-by-chunk
+        overshoot).  ``history`` holds the last iteration's metrics of
+        each chunk."""
+        if iterations < 1:
+            raise ValueError(f"iterations={iterations}: need ≥ 1")
         history = []
         done_iters = 0
         while done_iters < iterations:
-            state, metrics = self.run_chunk(state)
-            done_iters += self.scan_chunk
+            length = min(self.scan_chunk, iterations - done_iters)
+            state, metrics = self.run_chunk(state, length)
+            prev_iters, done_iters = done_iters, done_iters + length
             last = jax.tree.map(lambda x: x[-1], metrics)
             history.append(last)
-            if log_every and done_iters % log_every < self.scan_chunk:
+            if log_every and done_iters // log_every > prev_iters // log_every:
                 print(f"iter={done_iters} "
                       f"return={float(last['mean_episode_return']):.1f} "
                       f"loss={float(last['loss']):.4f} "
@@ -88,7 +132,12 @@ class Executor:
 
 
 class FusedExecutor(Executor):
-    """Single-jit fused path (the paper's single-node regime)."""
+    """Single-jit fused path (the paper's single-node regime).
+
+    ``publish_interval`` is plumbing for ``AsyncExecutor``: > 0 switches
+    the step into double-buffered acting (actors read the delayed
+    ``actor_params`` copy, republished every ``publish_interval``
+    iterations); 0 (the default) is the synchronous loop."""
 
     def __init__(
         self,
@@ -98,31 +147,33 @@ class FusedExecutor(Executor):
         cfg: LoopConfig,
         n_envs: int,
         scan_chunk: int = 64,
+        publish_interval: int = 0,
     ):
         self.agent = agent
         self.replay = replay
         self.cfg = cfg
         self.n_envs = n_envs
         self.scan_chunk = scan_chunk
+        self.publish_interval = publish_interval
+        self._chunks: Dict[int, Callable] = {}
         self.spec, self._v_reset, self._v_step = env_fn(n_envs)
         self.schedule = RatioSchedule.from_config(cfg, n_envs)
         self.step = make_step(agent, replay, self._v_step, cfg, n_envs,
-                              schedule=self.schedule)
+                              schedule=self.schedule,
+                              publish_interval=publish_interval)
 
+    def _build_chunk(self, length: int) -> Callable:
         @jax.jit
         def chunk(state):
             def body(s, _):
                 return self.step(s)
-            return jax.lax.scan(body, state, None, length=scan_chunk)
-
-        self._chunk = chunk
+            return jax.lax.scan(body, state, None, length=length)
+        return chunk
 
     def init(self, key: jax.Array) -> LoopState:
         return init_loop_state(self.agent, self.replay, self._v_reset, key,
-                               self.n_envs)
-
-    def run_chunk(self, state: LoopState):
-        return self._chunk(state)
+                               self.n_envs,
+                               double_buffer=self.publish_interval > 0)
 
 
 class ShardedExecutor(Executor):
@@ -132,6 +183,12 @@ class ShardedExecutor(Executor):
     shards runs ``n_envs / D`` envs and holds one replay shard.  The
     learner batch is ``cfg.batch_size / D`` per shard (global batch
     preserved under the gradient pmean).
+
+    ``publish_interval``/``max_staleness`` are plumbing for
+    ``AsyncExecutor``: with ``publish_interval > 0`` each shard acts on
+    its own delayed parameter copy (publish ticks staggered by shard id,
+    so shard ages differ) and the gradient pmean becomes the bounded-
+    staleness renormalized reduce of ``runtime/learner.py``.
     """
 
     def __init__(
@@ -143,6 +200,8 @@ class ShardedExecutor(Executor):
         n_envs: int,
         mesh: Mesh,
         scan_chunk: int = 64,
+        publish_interval: int = 0,
+        max_staleness: Optional[int] = None,
     ):
         (self._axis,) = replay.config.axis_names  # single data axis for now
         n_shards = mesh.shape[self._axis]
@@ -160,13 +219,35 @@ class ShardedExecutor(Executor):
         self.n_envs = n_envs
         self.n_envs_local = n_envs // n_shards
         self.scan_chunk = scan_chunk
+        self.publish_interval = publish_interval
+        self.max_staleness = max_staleness
+        self._chunks: Dict[int, Callable] = {}
         self.spec, self._v_reset, self._v_step = env_fn(self.n_envs_local)
         self.schedule = RatioSchedule.from_config(cfg, n_envs)
+
+        if publish_interval and max_staleness is not None:
+            # the staggered publish clock of shard d has fixed phase d mod
+            # P, so at learn ticks (every `period` iterations) its age
+            # cycles over {(d + k·gcd(P, period)) mod P} with minimum
+            # d mod gcd — a shard whose minimum exceeds the bound would be
+            # dropped from EVERY reduce and its replay data never trains
+            g = math.gcd(publish_interval, self.schedule.period)
+            if min(g, n_shards) > max_staleness + 1:
+                raise ValueError(
+                    f"publish_interval={publish_interval} and the learn "
+                    f"period {self.schedule.period} share the factor {g} > "
+                    f"max_staleness+1={max_staleness + 1}: shards whose "
+                    "staggered publish phase exceeds the staleness bound at "
+                    "every learn tick would be permanently dropped from the "
+                    "gradient reduce (their replay data would never train). "
+                    "Pick a publish_interval coprime with the learn period "
+                    "or raise max_staleness.")
 
         axis = self._axis
         learn_fn = make_sharded_learn(
             agent, replay, batch_per_shard=cfg.batch_size // n_shards,
-            beta=cfg.beta)
+            beta=cfg.beta,
+            max_staleness=max_staleness if publish_interval else None)
         self.step = make_step(
             agent, replay, self._v_step, cfg, self.n_envs_local,
             schedule=self.schedule,
@@ -174,56 +255,68 @@ class ShardedExecutor(Executor):
             shard_id=lambda: jax.lax.axis_index(axis),
             mean_across=lambda x: jax.lax.pmean(x, axis),
             sum_across=lambda x: jax.lax.psum(x, axis),
+            publish_interval=publish_interval,
         )
 
-        specs = self._state_specs()
-        metric_specs = {k: PartitionSpec() for k in METRIC_KEYS}
+        self._specs = self._state_specs()
+        self._metric_specs = {k: PartitionSpec() for k in METRIC_KEYS}
 
+        def init_local(key):
+            sid = jax.lax.axis_index(axis)
+            st = init_loop_state(agent, replay, self._v_reset, key,
+                                 self.n_envs_local, shard_id=sid,
+                                 double_buffer=publish_interval > 0)
+            return self._global_state(st)
+
+        self._init = jax.jit(shard_map(
+            init_local, mesh=mesh, in_specs=(PartitionSpec(),),
+            out_specs=self._specs, check_rep=False))
+
+    def _build_chunk(self, length: int) -> Callable:
         def chunk_local(gstate):
             state = self._local_state(gstate)
 
             def body(s, _):
                 return self.step(s)
 
-            state, metrics = jax.lax.scan(body, state, None, length=scan_chunk)
+            state, metrics = jax.lax.scan(body, state, None, length=length)
             return self._global_state(state), metrics
 
-        self._chunk = jax.jit(shard_map(
-            chunk_local, mesh=mesh, in_specs=(specs,),
-            out_specs=(specs, metric_specs), check_rep=False))
-
-        def init_local(key):
-            sid = jax.lax.axis_index(axis)
-            st = init_loop_state(agent, replay, self._v_reset, key,
-                                 self.n_envs_local, shard_id=sid)
-            return self._global_state(st)
-
-        self._init = jax.jit(shard_map(
-            init_local, mesh=mesh, in_specs=(PartitionSpec(),),
-            out_specs=specs, check_rep=False))
+        return jax.jit(shard_map(
+            chunk_local, mesh=self.mesh, in_specs=(self._specs,),
+            out_specs=(self._specs, self._metric_specs), check_rep=False))
 
     # -- per-shard ↔ global state layout ----------------------------------
     #
     # Replay-shard leaves (tree, storage, head, count, max_priority) gain a
     # leading shard axis in the global representation: local (…) ↔ global
     # (D, …), so rank-0 per-shard scalars stay addressable under a
-    # PartitionSpec("data") without replication lies.  Env-side leaves
-    # already carry the env axis, which concatenates across shards to the
-    # global env count.  Agent params / rng / counters are replicated.
+    # PartitionSpec("data") without replication lies.  The async double
+    # buffer (actor_params, params_age) is laid out the same way — each
+    # shard holds its *own* delayed copy at its own age (staggered publish
+    # ticks).  Env-side leaves already carry the env axis, which
+    # concatenates across shards to the global env count.  Agent params /
+    # rng / counters are replicated.
+
+    def _map_sharded_fields(self, state: LoopState, fn) -> LoopState:
+        updates = {"replay": jax.tree.map(fn, state.replay)}
+        if self.publish_interval:
+            updates["actor_params"] = jax.tree.map(fn, state.actor_params)
+            updates["params_age"] = fn(state.params_age)
+        return state._replace(**updates)
 
     def _local_state(self, gstate: LoopState) -> LoopState:
-        return gstate._replace(
-            replay=jax.tree.map(lambda x: x[0], gstate.replay))
+        return self._map_sharded_fields(gstate, lambda x: x[0])
 
     def _global_state(self, state: LoopState) -> LoopState:
-        return state._replace(
-            replay=jax.tree.map(lambda x: x[None], state.replay))
+        return self._map_sharded_fields(state, lambda x: x[None])
 
     def _state_specs(self) -> LoopState:
         key_shape = jax.ShapeDtypeStruct((2,), jnp.uint32)
         shapes = jax.eval_shape(
             lambda k: init_loop_state(self.agent, self.replay, self._v_reset,
-                                      k, self.n_envs_local),
+                                      k, self.n_envs_local,
+                                      double_buffer=self.publish_interval > 0),
             key_shape)
         rep = lambda tree: jax.tree.map(lambda _: PartitionSpec(), tree)
         shard = lambda tree: jax.tree.map(
@@ -238,10 +331,79 @@ class ShardedExecutor(Executor):
             episode_return=PartitionSpec(self._axis),
             last_return=PartitionSpec(self._axis),
             learn_steps=PartitionSpec(),
+            actor_params=shard(shapes.actor_params),
+            params_age=shard(shapes.params_age),
         )
 
     def init(self, key: jax.Array) -> LoopState:
         return self._init(key)
 
-    def run_chunk(self, state: LoopState):
-        return self._chunk(state)
+
+class AsyncExecutor(Executor):
+    """Bounded-staleness backend (DESIGN.md §5): decoupled actor/learner
+    parameter clocks.
+
+    Actors act on a delayed copy of the agent params
+    (``LoopState.actor_params``), republished from the fresh learner
+    params every ``publish_interval`` iterations; learners update the
+    fresh params every scheduled learn event.  Without ``mesh`` this
+    wraps the fused program (``max_staleness`` is inert — there is no
+    cross-shard reduce to weight).  With ``mesh`` the publish ticks are
+    staggered per shard, so shards act at different parameter ages, and
+    each shard's gradient enters the reduce scaled by
+    ``staleness_weights(age, max_staleness)`` with the total weight
+    renormalized — a shard past the bound is dropped, the survivors'
+    realized weights sum to 1 (``runtime/learner.py``).
+
+    At the identity settings ``publish_interval=1, max_staleness=0`` the
+    delayed copy is republished every iteration and this executor
+    reproduces the synchronous ones trajectory-exactly from the same
+    seed (asserted in tests/test_async_executor.py).
+    """
+
+    def __init__(
+        self,
+        agent: Agent,
+        replay,
+        env_fn: Callable[[int], tuple],
+        cfg: LoopConfig,
+        n_envs: int,
+        publish_interval: int = 1,
+        max_staleness: int = 0,
+        mesh: Optional[Mesh] = None,
+        scan_chunk: int = 64,
+    ):
+        if publish_interval < 1:
+            raise ValueError(
+                f"publish_interval={publish_interval}: need ≥ 1 (1 = "
+                "republish every iteration = the synchronous loop)")
+        if max_staleness < 0:
+            raise ValueError(f"max_staleness={max_staleness}: need ≥ 0")
+        if mesh is None:
+            self._impl: Executor = FusedExecutor(
+                agent, replay, env_fn, cfg, n_envs, scan_chunk=scan_chunk,
+                publish_interval=publish_interval)
+        else:
+            self._impl = ShardedExecutor(
+                agent, replay, env_fn, cfg, n_envs, mesh,
+                scan_chunk=scan_chunk, publish_interval=publish_interval,
+                max_staleness=max_staleness)
+            self.n_shards = self._impl.n_shards
+            self.n_envs_local = self._impl.n_envs_local
+        self.agent = agent
+        self.replay = replay
+        self.cfg = cfg
+        self.mesh = mesh
+        self.n_envs = n_envs
+        self.scan_chunk = scan_chunk
+        self.publish_interval = publish_interval
+        self.max_staleness = max_staleness
+        self.spec = self._impl.spec
+        self.step = self._impl.step
+        self.schedule = self._impl.schedule
+
+    def _build_chunk(self, length: int) -> Callable:
+        return self._impl._build_chunk(length)
+
+    def init(self, key: jax.Array) -> LoopState:
+        return self._impl.init(key)

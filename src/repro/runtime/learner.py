@@ -13,15 +13,21 @@ Two execution styles:
     shard.  (The cross-pod int8 error-feedback reduce in
     optim/compress.py is a future extension of this path; ROADMAP.)
 
-An async-PS variant applies gradients with bounded staleness: actors
+The async-PS variant applies gradients with bounded staleness: actors
 never block on the learner (the lazy-write invariant) and a learner
 shard that misses ``max_staleness`` rounds is dropped from the reduce
-(straggler mitigation — the reduce weight renormalizes).
+(straggler mitigation — the reduce weight renormalizes).  That path is
+``make_sharded_learn(..., max_staleness=...)``: each shard's gradient is
+scaled by ``staleness_weights(age, max_staleness)`` and the psum is
+renormalized by the total weight, so the realized reduce weights sum to
+one whenever at least one shard is within the bound
+(``staleness_reduce_weights``) and the update degrades to zero — params
+held, never corrupted — when every shard is stale.
 """
 
 from __future__ import annotations
 
-from typing import Any, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -54,16 +60,34 @@ def _pmean_inexact(tree: Pytree, axes: Tuple[str, ...]) -> Pytree:
     return jax.tree.map(avg, tree)
 
 
+def _weighted_psum(tree: Pytree, scale: jax.Array, axes: Tuple[str, ...]) -> Pytree:
+    """psum of ``leaf * scale`` over ``axes`` (scale is a per-shard scalar)."""
+    def red(x):
+        out = x * scale
+        for ax in axes:
+            out = jax.lax.psum(out, ax)
+        return out
+    return jax.tree.map(red, tree)
+
+
+def _renormalize(w: jax.Array, total: jax.Array) -> jax.Array:
+    """``w / Σw`` with the all-stale clamp — the single renormalization
+    used by both the production reduce (``total`` = psum over the mesh)
+    and the property-testable vector form (``total`` = jnp.sum)."""
+    return w / jnp.maximum(total, 1e-12)
+
+
 def make_sharded_learn(
     agent: Agent,
     replay: ShardedPrioritizedReplay,
     batch_per_shard: int,
     beta: float = 0.4,
+    max_staleness: Optional[int] = None,
 ):
-    """Per-shard learner call: local PER sample → local grads → pmean →
+    """Per-shard learner call: local PER sample → local grads → reduce →
     update (paper §V-B parameter-server adaptation).
 
-    Returns ``sharded_learn(agent_state, replay_state, rng) →
+    Returns ``sharded_learn(agent_state, replay_state, rng, age=None) →
     (agent_state', replay_state', loss)`` — the same signature as the
     fused ``make_learner_step`` — to be invoked *inside* ``shard_map``
     over ``replay.config.axis_names``:
@@ -74,6 +98,13 @@ def make_sharded_learn(
       * agents exposing the ``grads``/``apply_grads`` split get the exact
         data-parallel reduction: grads are pmean'd across shards before
         the optimizer step, so replicated params stay bit-identical;
+      * with ``max_staleness`` set (the async executor's sharded path),
+        the pmean becomes the bounded-staleness weighted reduce: each
+        shard's gradient is scaled by ``staleness_weights(age,
+        max_staleness)`` and the psum renormalized by the total weight —
+        a shard whose acting copy aged past the bound is dropped from
+        the reduce and the surviving weights sum to one (``age`` is the
+        shard's ``LoopState.params_age``);
       * agents without the split fall back to a local ``learn`` followed
         by a parameter/target/opt pmean (gossip-average; identical result
         at 1 shard, approximate beyond);
@@ -81,11 +112,23 @@ def make_sharded_learn(
     """
     axes = replay.config.axis_names
 
-    def sharded_learn(agent_state, replay_state, rng):
+    def reduce_grads(grads, age):
+        if max_staleness is None or age is None:
+            return pmean_gradients(grads, axes)
+        w = staleness_weights(age, max_staleness)
+        total = w
+        for ax in axes:
+            total = jax.lax.psum(total, ax)
+        # renormalized weighted reduce: realized weight of shard d is
+        # w_d / Σw — sums to 1 while any shard is within the bound, and
+        # degrades to an all-zero gradient (params held) when none is
+        return _weighted_psum(grads, _renormalize(w, total), axes)
+
+    def sharded_learn(agent_state, replay_state, rng, age=None):
         idx, items, is_w = replay.sample(replay_state, rng, batch_per_shard, beta)
         if agent.grads is not None and agent.apply_grads is not None:
             grads, aux = agent.grads(agent_state, items, is_w)
-            grads = pmean_gradients(grads, axes)
+            grads = reduce_grads(grads, age)
             agent_state, metrics, td = agent.apply_grads(agent_state, grads, aux)
         else:
             agent_state, metrics, td = agent.learn(agent_state, items, is_w)
@@ -105,3 +148,15 @@ def staleness_weights(ages: jax.Array, max_staleness: int) -> jax.Array:
     (dropped straggler)."""
     w = 1.0 / (1.0 + ages.astype(jnp.float32))
     return jnp.where(ages > max_staleness, 0.0, w)
+
+
+def staleness_reduce_weights(ages: jax.Array, max_staleness: int) -> jax.Array:
+    """Realized per-shard reduce weights of the bounded-staleness reduce:
+    ``staleness_weights`` renormalized by their sum over the shard vector.
+
+    Invariant (property-tested): the weights sum to exactly the gradient
+    scale of a synchronous pmean — 1 — whenever at least one shard is
+    within the bound, and to 0 (update skipped, params held) when every
+    shard is stale."""
+    w = staleness_weights(ages, max_staleness)
+    return _renormalize(w, jnp.sum(w))

@@ -28,8 +28,17 @@ The loop is built from three pieces (DESIGN.md §3):
     "M learns per actor step" are expressible.
 
 ``make_step`` composes them into one jit-able program; the executors in
-``runtime/executors.py`` run that program either fused on one device or
-inside ``shard_map`` over a mesh data axis.
+``runtime/executors.py`` run that program fused on one device, inside
+``shard_map`` over a mesh data axis, or asynchronously: with
+``publish_interval > 0`` the actors act on a *delayed* parameter copy
+(``LoopState.actor_params``, double-buffered and republished from the
+fresh learner params every ``publish_interval`` iterations, staggered by
+shard id) while learners keep updating the fresh ``LoopState.agent`` —
+the paper's "actors never block on learners" decoupling (§IV-D), with
+``LoopState.params_age`` counting iterations since the last publish so
+the sharded reduce can weight shards by staleness
+(runtime/learner.staleness_weights).  ``publish_interval=1`` republishes
+after every iteration, which is exactly the synchronous loop.
 """
 
 from __future__ import annotations
@@ -61,6 +70,9 @@ class LoopState(NamedTuple):
     episode_return: jax.Array     # running per-env return accumulator
     last_return: jax.Array        # most recently finished episode returns
     learn_steps: jax.Array        # cumulative learner update count
+    # async double buffer (empty pytrees on the synchronous executors):
+    actor_params: Pytree = ()     # delayed acting copy of the agent params
+    params_age: Pytree = ()       # int32 iterations since the last publish
 
 
 @dataclasses.dataclass(frozen=True)
@@ -149,10 +161,14 @@ def make_learner_step(agent: Agent, replay, cfg: LoopConfig):
     ``replay`` may be a ``PrioritizedReplay`` or any object with the same
     sample/update_priorities signature (e.g. the sharded buffer, whose
     ``sample`` computes importance weights against psum'd global stats).
-    The sharded gradient-psum variant lives in ``runtime/learner.py``.
+    The sharded gradient-psum variant lives in ``runtime/learner.py``;
+    ``age`` is part of the shared learn-fn signature (the staleness of
+    the caller's acting copy) and is ignored here — only the sharded
+    bounded-staleness reduce consumes it.
     """
 
-    def learner_step(agent_state, replay_state, rng):
+    def learner_step(agent_state, replay_state, rng, age=None):
+        del age  # fused learner: no cross-shard reduce to weight
         idx, items, is_w = replay.sample(replay_state, rng, cfg.batch_size, cfg.beta)
         agent_state, metrics, td = agent.learn(agent_state, items, is_w)
         replay_state = replay.update_priorities(replay_state, idx, td)
@@ -176,6 +192,7 @@ def make_step(
     shard_id: Union[int, Callable[[], jax.Array]] = 0,
     mean_across: Optional[Callable] = None,
     sum_across: Optional[Callable] = None,
+    publish_interval: int = 0,
 ):
     """Compose actor + learner programs into one jit-able parallel_step.
 
@@ -184,6 +201,20 @@ def make_step(
     rng fold (a callable so ``lax.axis_index`` can be read inside
     ``shard_map``); ``mean_across``/``sum_across`` reduce reported metrics
     over shards (identity when fused).
+
+    ``publish_interval=0`` is the synchronous loop: actors act on the
+    fresh ``state.agent``.  ``publish_interval=P ≥ 1`` is the async loop:
+    actors act on ``state.actor_params`` (snapshotted by
+    ``init_loop_state(double_buffer=True)``), and at the end of iteration
+    ``it`` shard ``d`` republishes its acting copy from the fresh learner
+    params iff ``(it + 1 + d) % P == 0`` — the per-shard stagger
+    decorrelates the shard clocks, so under ``shard_map`` the shards
+    carry *different* parameter ages (0..P-1) and the bounded-staleness
+    reduce has real work to do.  ``state.params_age`` is handed to
+    ``learn_fn`` so that reduce can weight this shard's gradient.  At
+    ``P=1`` every shard republishes every iteration and the async loop is
+    the synchronous one (asserted trajectory-exact in
+    tests/test_async_executor.py).
     """
     schedule = schedule or RatioSchedule.from_config(cfg, n_envs)
     actor_step = make_actor_step(agent, v_step, n_envs)
@@ -197,27 +228,34 @@ def make_step(
         k = jax.random.fold_in(k, sid)
         k_act, k_env, k_sample = jax.random.split(k, 3)
 
-        # 1. parallel actors
+        # 1. parallel actors — on the delayed double-buffered copy when
+        #    async, on the fresh learner params when synchronous
+        acting = (agent.with_acting_params(state.agent, state.actor_params)
+                  if publish_interval else state.agent)
         eps = epsilon_schedule(cfg, state.env_steps)
         env_state, obs_next, ep_ret, last_ret, transitions = actor_step(
-            state.agent, state.env_state, state.obs,
+            acting, state.env_state, state.obs,
             state.episode_return, state.last_return, k_act, k_env, eps)
 
         # 2. lazy write, phase 1: in-flight slots become unsampleable
         replay_state, slots = replay.insert_begin(state.replay, n_envs)
 
         # 3. parallel learners on the phase-1 tree state, at the scheduled
-        #    collection/consumption ratio
+        #    collection/consumption ratio — always on the fresh params
         it = state.env_steps // schedule.env_steps_per_iter
         can_learn = (state.env_steps >= cfg.warmup) & (it % schedule.period == 0)
+        age = state.params_age if publish_interval else jnp.zeros((), jnp.int32)
 
         def do_learn(args):
             agent_state, rstate = args
-            loss = jnp.zeros(())
+            loss_sum = jnp.zeros(())
             for i in range(schedule.learns):
                 ki = jax.random.fold_in(k_sample, i)
-                agent_state, rstate, loss = learn_fn(agent_state, rstate, ki)
-            return agent_state, rstate, loss, state.learn_steps + schedule.learns
+                agent_state, rstate, loss = learn_fn(agent_state, rstate, ki,
+                                                     age=age)
+                loss_sum = loss_sum + loss
+            return (agent_state, rstate, loss_sum / schedule.learns,
+                    state.learn_steps + schedule.learns)
 
         def skip_learn(args):
             agent_state, rstate = args
@@ -229,6 +267,17 @@ def make_step(
         # 5. lazy write, phase 3: storage write + P_max restore
         replay_state = replay.insert_commit(replay_state, slots, transitions)
 
+        # 6. async publish: refresh this shard's acting copy from the
+        #    fresh learner params on its (staggered) publish tick
+        if publish_interval:
+            publish = (it + 1 + sid) % publish_interval == 0
+            actor_params = jax.tree.map(
+                lambda fresh, held: jnp.where(publish, fresh, held),
+                agent.params_for_acting(agent_state), state.actor_params)
+            params_age = jnp.where(publish, 0, state.params_age + 1)
+        else:
+            actor_params, params_age = state.actor_params, state.params_age
+
         new_state = LoopState(
             agent=agent_state,
             replay=replay_state,
@@ -239,6 +288,8 @@ def make_step(
             episode_return=ep_ret,
             last_return=last_ret,
             learn_steps=learn_steps,
+            actor_params=actor_params,
+            params_age=params_age,
         )
         metrics = {
             "loss": mean_across(loss),
@@ -273,13 +324,18 @@ def init_loop_state(
     key: jax.Array,
     n_envs: int,
     shard_id: Union[int, jax.Array] = 0,
+    double_buffer: bool = False,
 ) -> LoopState:
     """Initial state.  ``shard_id`` decorrelates per-shard env resets while
-    agent params (from the unfolded key) stay replicated across shards."""
+    agent params (from the unfolded key) stay replicated across shards.
+    ``double_buffer`` fills the async acting copy (``actor_params`` at age
+    0, i.e. identical to the fresh params); the synchronous executors
+    leave both async fields as empty pytrees — no memory overhead."""
     k1, k2, k3 = jax.random.split(key, 3)
     env_state, obs = v_reset(jax.random.fold_in(k1, shard_id))
+    agent_state = agent.init(k2)
     return LoopState(
-        agent=agent.init(k2),
+        agent=agent_state,
         replay=replay.init(),
         env_state=env_state,
         obs=obs,
@@ -288,6 +344,9 @@ def init_loop_state(
         episode_return=jnp.zeros((n_envs,)),
         last_return=jnp.zeros((n_envs,)),
         learn_steps=jnp.zeros((), jnp.int32),
+        actor_params=(agent.params_for_acting(agent_state)
+                      if double_buffer else ()),
+        params_age=jnp.zeros((), jnp.int32) if double_buffer else (),
     )
 
 

@@ -1,0 +1,288 @@
+"""AsyncExecutor (bounded-staleness backend, DESIGN.md §5): identity
+settings reproduce the synchronous executors trajectory-exactly, delayed
+publishing still learns, and the staleness-weighted renormalized reduce
+preserves the gradient scale (hypothesis property) and runs end to end
+on a forced multi-device mesh."""
+
+import functools
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.agents.dqn import DQNConfig, make_dqn
+from repro.core.replay import PrioritizedReplay, ReplayConfig
+from repro.envs.classic import make_vec
+from repro.runtime.executors import AsyncExecutor, FusedExecutor
+from repro.runtime.learner import staleness_reduce_weights, staleness_weights
+from repro.runtime.loop import LoopConfig
+
+
+def transition_example(spec):
+    return {
+        "obs": jnp.zeros((spec.obs_dim,), jnp.float32),
+        "action": jnp.zeros((), jnp.int32),
+        "reward": jnp.zeros(()),
+        "next_obs": jnp.zeros((spec.obs_dim,), jnp.float32),
+        "done": jnp.zeros(()),
+    }
+
+
+def _setup(cfg, capacity=1024):
+    env_fn = functools.partial(make_vec, "cartpole")
+    spec, _, _ = env_fn(1)
+    agent = make_dqn(spec, DQNConfig())
+    mk_replay = lambda: PrioritizedReplay(
+        ReplayConfig(capacity=capacity, fanout=8), transition_example(spec))
+    return env_fn, agent, mk_replay
+
+
+def test_async_identity_reproduces_fused_exactly():
+    """At publish_interval=1, max_staleness=0 the acting copy is
+    republished after every iteration, so the async program must be the
+    synchronous one — metrics and learned params trajectory-exact (bit
+    -exact, not just close) from the same seed."""
+    cfg = LoopConfig(batch_size=32, warmup=8, epsilon=0.2)
+    env_fn, agent, mk_replay = _setup(cfg)
+    fused = FusedExecutor(agent, mk_replay(), env_fn, cfg, n_envs=4,
+                          scan_chunk=16)
+    async_ex = AsyncExecutor(agent, mk_replay(), env_fn, cfg, n_envs=4,
+                             publish_interval=1, max_staleness=0,
+                             scan_chunk=16)
+    assert fused.schedule == async_ex.schedule
+
+    key = jax.random.PRNGKey(7)
+    s1, h1 = fused.train(40, key)
+    s2, h2 = async_ex.train(40, key)
+
+    for k in h1:
+        np.testing.assert_array_equal(np.asarray(h1[k]), np.asarray(h2[k]),
+                                      err_msg=k)
+    for a, b in zip(jax.tree.leaves(s1.agent.params),
+                    jax.tree.leaves(s2.agent.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # the async state actually carries the double buffer, synced at age 0
+    assert int(s2.params_age) == 0
+    for a, b in zip(jax.tree.leaves(s2.actor_params),
+                    jax.tree.leaves(s2.agent.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_async_staleness_delays_acting_copy():
+    """With publish_interval=4 the acting copy is only republished every
+    4th iteration: between publishes it stays bitwise frozen while the
+    learner params move, and params_age cycles 0..3."""
+    cfg = LoopConfig(batch_size=32, warmup=0, epsilon=0.2)
+    env_fn, agent, mk_replay = _setup(cfg)
+    ex = AsyncExecutor(agent, mk_replay(), env_fn, cfg, n_envs=4,
+                       publish_interval=4, scan_chunk=1)
+    state = ex.init(jax.random.PRNGKey(3))
+    ages, frozen = [], []
+    prev_actor = state.actor_params
+    for _ in range(12):
+        state, _ = ex.run_chunk(state)
+        ages.append(int(state.params_age))
+        frozen.append(all(
+            np.array_equal(np.asarray(a), np.asarray(b)) for a, b in
+            zip(jax.tree.leaves(prev_actor), jax.tree.leaves(state.actor_params))))
+        prev_actor = state.actor_params
+    # publish at the end of iterations 3, 7, 11 (it+1 ≡ 0 mod 4)
+    assert ages == [1, 2, 3, 0, 1, 2, 3, 0, 1, 2, 3, 0]
+    # the buffer is untouched except on publish ticks, where the learner
+    # has moved the fresh params away from the held copy
+    for age, untouched in zip(ages, frozen):
+        assert untouched == (age != 0)
+
+
+def test_async_publish4_still_learns_cartpole():
+    """Acting 4 iterations behind the learner must not break learning:
+    DQN/CartPole through AsyncExecutor(publish_interval=4) still beats
+    the random baseline (≈ 10)."""
+    cfg = LoopConfig(batch_size=64, warmup=400, epsilon=0.2)
+    env_fn, agent, mk_replay = _setup(cfg, capacity=20_000)
+    ex = AsyncExecutor(agent, mk_replay(), env_fn, cfg, n_envs=8,
+                       publish_interval=4, scan_chunk=64)
+    state, hist = ex.train(1400, jax.random.PRNGKey(1))
+    final = float(hist["mean_episode_return"][-1])
+    assert final > 30.0, final
+    assert np.isfinite(np.asarray(hist["loss"])).all()
+
+
+def test_async_executor_validates_knobs():
+    cfg = LoopConfig()
+    env_fn, agent, mk_replay = _setup(cfg)
+    with pytest.raises(ValueError, match="publish_interval"):
+        AsyncExecutor(agent, mk_replay(), env_fn, cfg, n_envs=4,
+                      publish_interval=0)
+    with pytest.raises(ValueError, match="max_staleness"):
+        AsyncExecutor(agent, mk_replay(), env_fn, cfg, n_envs=4,
+                      max_staleness=-1)
+
+
+# -- staleness-weighted reduce properties ------------------------------------
+#
+# Property: the realized reduce weights (staleness_weights renormalized
+# by their sum) preserve the gradient scale — they sum to exactly the
+# synchronous pmean's 1 whenever at least one shard is within the bound,
+# stragglers past the bound contribute exactly 0, and an all-stale round
+# degrades to a zero-scale (skipped) update.  Checked by hypothesis when
+# available (CI installs it), and by a seeded sweep regardless.
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - hypothesis is a dev extra
+    given = None
+
+
+def _assert_gradient_scale_preserved(ages, max_staleness):
+    w = np.asarray(staleness_reduce_weights(jnp.asarray(ages), max_staleness))
+    assert (w >= 0).all()
+    alive = np.asarray(ages) <= max_staleness
+    if alive.any():
+        np.testing.assert_allclose(w.sum(), 1.0, rtol=1e-5)
+        assert (w[~alive] == 0).all()
+    else:
+        np.testing.assert_allclose(w.sum(), 0.0, atol=1e-12)
+
+
+if given is not None:
+    @settings(max_examples=200, deadline=None)
+    @given(
+        ages=st.lists(st.integers(min_value=0, max_value=64), min_size=1,
+                      max_size=16),
+        max_staleness=st.integers(min_value=0, max_value=16),
+    )
+    def test_staleness_renormalization_preserves_gradient_scale(
+            ages, max_staleness):
+        _assert_gradient_scale_preserved(ages, max_staleness)
+
+
+def test_staleness_renormalization_seeded_sweep():
+    rng = np.random.default_rng(0)
+    for _ in range(300):
+        n = int(rng.integers(1, 17))
+        ages = rng.integers(0, 65, size=n)
+        _assert_gradient_scale_preserved(ages, int(rng.integers(0, 17)))
+    # pinned corner cases: all alive at age 0, exactly one alive, all stale
+    _assert_gradient_scale_preserved(np.zeros(4, np.int32), 0)
+    _assert_gradient_scale_preserved(np.asarray([0, 5, 5, 5]), 1)
+    _assert_gradient_scale_preserved(np.asarray([3, 4, 5]), 2)
+
+
+def test_staleness_weights_monotone_in_age():
+    """Fresher shards never get a smaller raw weight than staler ones."""
+    rng = np.random.default_rng(1)
+    for _ in range(50):
+        ages = rng.integers(0, 9, size=int(rng.integers(2, 9)))
+        w = np.asarray(staleness_weights(jnp.asarray(ages), max_staleness=8))
+        order = np.argsort(ages)
+        assert (np.diff(w[order]) <= 1e-7).all()
+
+
+# -- sharded async path on a forced 4-device mesh ----------------------------
+
+ASYNC_SHARDED = textwrap.dedent("""
+    import functools, os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.agents.dqn import DQNConfig, make_dqn
+    from repro.core.distributed import (ShardedPrioritizedReplay,
+                                        ShardedReplayConfig)
+    from repro.envs.classic import make_vec
+    from repro.launch.mesh import data_mesh
+    from repro.runtime.executors import AsyncExecutor, ShardedExecutor
+    from repro.runtime.loop import LoopConfig
+
+    assert jax.device_count() == 4
+    env_fn = functools.partial(make_vec, "cartpole")
+    spec, _, _ = env_fn(1)
+    agent = make_dqn(spec, DQNConfig())
+    example = {
+        "obs": jnp.zeros((spec.obs_dim,), jnp.float32),
+        "action": jnp.zeros((), jnp.int32),
+        "reward": jnp.zeros(()),
+        "next_obs": jnp.zeros((spec.obs_dim,), jnp.float32),
+        "done": jnp.zeros(()),
+    }
+    mk_replay = lambda: ShardedPrioritizedReplay(
+        ShardedReplayConfig(capacity_per_shard=1024, fanout=8), example)
+    cfg = LoopConfig(batch_size=64, warmup=32, epsilon=0.2)
+    key = jax.random.PRNGKey(5)
+
+    # identity settings: the async sharded program reproduces the
+    # synchronous sharded one (the staleness-weighted reduce with all
+    # ages 0 IS the pmean, up to reduce-order ulps — so the horizon is
+    # kept short, before fp drift can fork greedy actions)
+    sync = ShardedExecutor(agent, mk_replay(), env_fn, cfg, n_envs=8,
+                           mesh=data_mesh(4), scan_chunk=4)
+    ident = AsyncExecutor(agent, mk_replay(), env_fn, cfg, n_envs=8,
+                          publish_interval=1, max_staleness=0,
+                          mesh=data_mesh(4), scan_chunk=4)
+    s1, h1 = sync.train(12, key)
+    s2, h2 = ident.train(12, key)
+    for k in ("env_steps", "learn_steps", "buffer_size"):
+        np.testing.assert_array_equal(np.asarray(h1[k]), np.asarray(h2[k]),
+                                      err_msg=k)
+    np.testing.assert_allclose(np.asarray(h1["mean_episode_return"]),
+                               np.asarray(h2["mean_episode_return"]),
+                               rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(h1["loss"]),
+                               np.asarray(h2["loss"]), rtol=1e-4, atol=1e-6)
+
+    # bounded staleness: staggered publishes give the 4 shards distinct
+    # parameter ages (global params_age is (4,)), a shard past
+    # max_staleness=1 is dropped from the reduce, and training stays
+    # finite and on-ratio
+    ex = AsyncExecutor(agent, mk_replay(), env_fn, cfg, n_envs=8,
+                       publish_interval=4, max_staleness=1,
+                       mesh=data_mesh(4), scan_chunk=8)
+    state, hist = ex.train(96, key)
+    ages = np.asarray(state.params_age)
+    assert ages.shape == (4,)
+    assert len(set(ages.tolist())) > 1, ages      # staggered shard clocks
+    assert (ages < 4).all(), ages                 # bounded by the interval
+    assert int(hist["env_steps"][-1]) == 96 * 8
+    assert int(hist["learn_steps"][-1]) > 0
+    assert np.isfinite(np.asarray(hist["loss"])).all()
+    assert all(np.isfinite(np.asarray(p)).all()
+               for p in jax.tree.leaves(state.agent.params))
+
+    # aliasing guard: when publish_interval shares a factor with the
+    # learn period larger than max_staleness+1, some shards' staggered
+    # clocks would put them past the bound at EVERY learn tick —
+    # permanently dropped, their replay data never training.  The
+    # executor must refuse that configuration up front.
+    try:
+        AsyncExecutor(agent, mk_replay(), env_fn,
+                      LoopConfig(batch_size=64, update_interval=32),
+                      n_envs=8, publish_interval=4, max_staleness=0,
+                      mesh=data_mesh(4), scan_chunk=8)
+        raise AssertionError("expected ValueError for publish/learn-period "
+                             "aliasing that permanently drops shards")
+    except ValueError as e:
+        assert "permanently dropped" in str(e), e
+    print("ASYNC_SHARDED_OK")
+""")
+
+
+@pytest.mark.slow
+def test_async_sharded_staleness_multidevice():
+    """The sharded async path (staggered publishes + staleness-weighted
+    renormalized gradient reduce) end to end on 4 forced host devices
+    (subprocess: the device-count flag must be set before jax
+    initializes)."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    r = subprocess.run([sys.executable, "-c", ASYNC_SHARDED],
+                       capture_output=True, text=True, timeout=600,
+                       env=env, cwd=root)
+    assert "ASYNC_SHARDED_OK" in r.stdout, r.stdout[-800:] + r.stderr[-2000:]

@@ -63,6 +63,21 @@ def test_dse_solver_matches_ratio():
     assert res4.x_actor > res.x_actor or res4.ratio > res.ratio
 
 
+def test_dse_solver_rejects_infeasible_budget():
+    """Regression: total < 2 used to crash with TypeError ('NoneType' is
+    not subscriptable) because the search space is empty and ``best``
+    stays None — now a clear ValueError."""
+    actor = {1: 100.0}
+    learner = {1: 300.0}
+    for total in (0, 1, -3):
+        with pytest.raises(ValueError, match="total"):
+            dse.solve(actor, learner, total=total)
+    with pytest.raises(ValueError, match="curve"):
+        dse.solve({}, learner, total=4)
+    with pytest.raises(ValueError, match="curve"):
+        dse.solve(actor, {}, total=4)
+
+
 def test_staleness_weights_drop_stragglers():
     ages = jnp.asarray([0, 1, 3, 10])
     w = staleness_weights(ages, max_staleness=4)

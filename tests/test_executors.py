@@ -65,6 +65,61 @@ def test_update_interval_changes_realized_ratio(update_interval, expected_ratio)
     assert env_steps / learn_steps == pytest.approx(expected_ratio)
 
 
+@pytest.mark.parametrize("iterations,scan_chunk", [
+    (10, 16),    # fewer than one chunk
+    (100, 64),   # the ISSUE's example: 1 full chunk + a 36-iter tail
+    (37, 16),    # 2 full chunks + a 5-iter tail
+    (64, 64),    # exactly divisible: no tail
+])
+def test_run_performs_exact_iteration_count(iterations, scan_chunk):
+    """Regression: ``Executor.run(iterations=N)`` used to round N up to
+    the next multiple of ``scan_chunk`` (train(100) with chunk 64 ran
+    128).  Exact N iterations now, for any N/chunk combination."""
+    env_fn = functools.partial(make_vec, "cartpole")
+    spec, _, _ = env_fn(1)
+    agent = make_dqn(spec, DQNConfig())
+    replay = PrioritizedReplay(ReplayConfig(capacity=2048, fanout=8),
+                               transition_example(spec))
+    cfg = LoopConfig(batch_size=32, warmup=0, epsilon=0.3)
+    ex = FusedExecutor(agent, replay, env_fn, cfg, n_envs=4,
+                       scan_chunk=scan_chunk)
+    state, hist = ex.train(iterations, jax.random.PRNGKey(0))
+    assert int(state.env_steps) == iterations * 4
+    assert int(hist["env_steps"][-1]) == iterations * 4
+    # one history entry per chunk, tail included
+    assert hist["env_steps"].shape[0] == -(-iterations // scan_chunk)
+    # learn events happened on every iteration of the exact count
+    assert int(hist["learn_steps"][-1]) == iterations * 4
+
+
+def test_run_log_every_fires_on_boundary_crossings(capsys):
+    """The log condition fires once per crossed ``log_every`` boundary
+    (the old ``done % log_every < scan_chunk`` test mis-fired when the
+    chunk size and log interval were coprime)."""
+    env_fn = functools.partial(make_vec, "cartpole")
+    spec, _, _ = env_fn(1)
+    agent = make_dqn(spec, DQNConfig())
+    replay = PrioritizedReplay(ReplayConfig(capacity=2048, fanout=8),
+                               transition_example(spec))
+    cfg = LoopConfig(batch_size=32, warmup=0, epsilon=0.3)
+    ex = FusedExecutor(agent, replay, env_fn, cfg, n_envs=4, scan_chunk=16)
+    ex.train(32, jax.random.PRNGKey(0), log_every=16)
+    lines = [l for l in capsys.readouterr().out.splitlines()
+             if l.startswith("iter=")]
+    assert [l.split()[0] for l in lines] == ["iter=16", "iter=32"]
+
+
+def test_run_rejects_non_positive_iterations():
+    env_fn = functools.partial(make_vec, "cartpole")
+    spec, _, _ = env_fn(1)
+    agent = make_dqn(spec, DQNConfig())
+    replay = PrioritizedReplay(ReplayConfig(capacity=256, fanout=8),
+                               transition_example(spec))
+    ex = FusedExecutor(agent, replay, env_fn, LoopConfig(), n_envs=4)
+    with pytest.raises(ValueError, match="iterations"):
+        ex.train(0, jax.random.PRNGKey(0))
+
+
 def _pair(cfg, example, env_fn, agent, scan_chunk):
     fused = FusedExecutor(
         agent, PrioritizedReplay(ReplayConfig(capacity=1024, fanout=8), example),

@@ -37,8 +37,9 @@ SCRIPT = textwrap.dedent("""
 
     def sample_fn(state, rng):
         idx, items, w = rb.sample(state, rng[0], batch_per_shard=16, beta=1.0)
+        pri = rb.local.get_priority(state, idx)
         g_tot, g_cnt = rb.global_stats(state)
-        return idx, items, w, g_tot, g_cnt
+        return idx, items, w, pri, g_tot, g_cnt
 
     def specs_like(shapes):
         # per-shard arrays concat over 'data'; rank-0 scalars (head/count/
@@ -68,9 +69,9 @@ SCRIPT = textwrap.dedent("""
         sm_sample = shard_map(sample_fn, mesh=mesh,
                               in_specs=(state_specs, P("data")),
                               out_specs=(P("data"), P("data"), P("data"),
-                                         P(), P()),
+                                         P("data"), P(), P()),
                               check_rep=False)
-        idx, got, w, g_tot, g_cnt = sm_sample(state, rngs)
+        idx, got, w, pri, g_tot, g_cnt = sm_sample(state, rngs)
         # global stats from the psum: full global count across all shards
         np.testing.assert_allclose(float(g_cnt), 256.0)
         assert float(g_tot) > 0
@@ -81,6 +82,18 @@ SCRIPT = textwrap.dedent("""
         # weights computed against the GLOBAL distribution ∈ (0, 1]
         w_ = np.asarray(w)
         assert (w_ > 0).all() and w_.max() <= 1.0 + 1e-6
+        # multi-shard weight parity: every shard normalized by the SAME
+        # (pmax'd) global max — recomputing the PER weights from the
+        # global stats on the host and dividing by the max over ALL
+        # shards' draws must reproduce the shard_map result exactly.
+        # (Before the pmax hook each shard divided by its local batch
+        # max, an inconsistent per-shard scale factor.)
+        pri_ = np.asarray(pri)
+        w_ref = (float(g_cnt) * pri_ / float(g_tot)) ** (-1.0)
+        w_ref = np.where(pri_ > 0, w_ref, 0.0)
+        w_ref = w_ref / w_ref.max()
+        np.testing.assert_allclose(w_, w_ref, rtol=1e-5)
+        np.testing.assert_allclose(w_.max(), 1.0, rtol=1e-6)
     print("SHARDED_REPLAY_OK")
 """)
 
