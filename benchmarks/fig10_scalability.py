@@ -75,25 +75,37 @@ def throughput(algo: str, n_envs: int, iters: int = 120) -> float:
     return _time_executor(ex, iters)
 
 
-def sharded_throughput(n_shards: int, n_envs: int = 16, iters: int = 120
-                       ) -> float:
-    """ShardedExecutor env-steps/s at ``n_shards`` (run inside a process
-    whose forced device count ≥ n_shards)."""
+def _sharded_executor_throughput(mesh_fn, axis_names, n_cells: int,
+                                 compress: bool, n_envs: int,
+                                 iters: int) -> float:
+    """Shared setup for the sharded-throughput workers: DQN/CartPole
+    through a ShardedExecutor over ``mesh_fn()`` with one replay shard
+    per mesh cell (run inside a process whose forced device count ≥ the
+    cell count)."""
     from repro.core.distributed import (ShardedPrioritizedReplay,
                                         ShardedReplayConfig)
-    from repro.launch.mesh import data_mesh
     from repro.runtime.executors import ShardedExecutor
 
     env_fn = functools.partial(make_vec, "cartpole")
     spec, _, _ = env_fn(1)
     agent = ALGOS["dqn"][1](spec)
     replay = ShardedPrioritizedReplay(
-        ShardedReplayConfig(capacity_per_shard=50_000 // n_shards, fanout=128),
-        example(spec))
+        ShardedReplayConfig(capacity_per_shard=50_000 // n_cells, fanout=128,
+                            axis_names=axis_names), example(spec))
     cfg = loop.LoopConfig(batch_size=64, warmup=64, epsilon=0.1)
-    ex = ShardedExecutor(agent, replay, env_fn, cfg, n_envs,
-                         data_mesh(n_shards), scan_chunk=20)
+    ex = ShardedExecutor(agent, replay, env_fn, cfg, n_envs, mesh_fn(),
+                         scan_chunk=20, compress_pod_reduce=compress)
     return _time_executor(ex, iters)
+
+
+def sharded_throughput(n_shards: int, n_envs: int = 16, iters: int = 120
+                       ) -> float:
+    """1-D data-axis ShardedExecutor env-steps/s at ``n_shards``."""
+    from repro.launch.mesh import data_mesh
+
+    return _sharded_executor_throughput(
+        lambda: data_mesh(n_shards), ("data",), n_shards, False, n_envs,
+        iters)
 
 
 def run(csv=True):
@@ -110,33 +122,74 @@ def run(csv=True):
     return rows
 
 
+def pod_sharded_throughput(n_pods: int, n_data: int, compress: bool,
+                           n_envs: int = 16, iters: int = 120) -> float:
+    """Two-axis pod×data ShardedExecutor env-steps/s, optionally with
+    the int8-EF compressed cross-pod reduce."""
+    from repro.launch.mesh import pod_data_mesh
+
+    return _sharded_executor_throughput(
+        lambda: pod_data_mesh(n_pods, n_data), ("pod", "data"),
+        n_pods * n_data, compress, n_envs, iters)
+
+
+def _run_worker(worker_args, n_devices):
+    """Launch this script as a subprocess with the forced device count
+    (the XLA flag must be set before jax initializes) and parse the
+    STEPS_PER_S= line."""
+    script = os.path.abspath(__file__)
+    root = os.path.dirname(os.path.dirname(script))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        f"{env.get('XLA_FLAGS', '')} "
+        f"--xla_force_host_platform_device_count={n_devices}").strip()
+    src = os.path.join(root, "src")
+    env["PYTHONPATH"] = (f"{src}:{env['PYTHONPATH']}"
+                         if env.get("PYTHONPATH") else src)
+    r = subprocess.run([sys.executable, script] + worker_args,
+                       capture_output=True, text=True, timeout=1200,
+                       env=env, cwd=root)
+    out = [l for l in r.stdout.splitlines() if l.startswith("STEPS_PER_S=")]
+    if not out:
+        raise RuntimeError(
+            f"worker {worker_args} failed:\n{r.stdout}\n{r.stderr}")
+    return float(out[-1].split("=")[1])
+
+
 def run_shard_sweep(shard_counts, csv=True):
     """Sweep --xla_force_host_platform_device_count via subprocesses."""
     rows = []
     base = None
-    script = os.path.abspath(__file__)
-    root = os.path.dirname(os.path.dirname(script))
     for n in shard_counts:
-        env = dict(os.environ)
-        env["XLA_FLAGS"] = (
-            f"{env.get('XLA_FLAGS', '')} "
-            f"--xla_force_host_platform_device_count={n}").strip()
-        src = os.path.join(root, "src")
-        env["PYTHONPATH"] = (f"{src}:{env['PYTHONPATH']}"
-                             if env.get("PYTHONPATH") else src)
-        r = subprocess.run(
-            [sys.executable, script, "--_sharded-worker", str(n)],
-            capture_output=True, text=True, timeout=1200, env=env, cwd=root)
-        out = [l for l in r.stdout.splitlines() if l.startswith("STEPS_PER_S=")]
-        if not out:
-            raise RuntimeError(f"shard worker {n} failed:\n{r.stdout}\n{r.stderr}")
-        t = float(out[-1].split("=")[1])
+        t = _run_worker(["--_sharded-worker", str(n)], n)
         base = base or t
         rows.append((f"fig10/sharded_{n}shards", 1e6 / t, t / base))
     if csv:
         for name, us, derived in rows:
             print(f"{name},{us:.2f},{derived:.2f}")
     return rows
+
+
+def shard_pod_points(shard_counts=(1, 2), pod_specs=((2, 1, False),
+                                                     (2, 2, False),
+                                                     (2, 2, True))):
+    """Machine-readable env-steps/s per shard/pod count for
+    BENCH_fig10.json: 1-D data-axis counts plus (n_pods, n_data,
+    compressed) two-axis points, each in its own forced-device
+    subprocess."""
+    points = []
+    for n in shard_counts:
+        t = _run_worker(["--_sharded-worker", str(n)], n)
+        points.append({"backend": "sharded", "shards": n, "pods": 1,
+                       "compressed": False, "env_steps_per_s": round(t, 2)})
+    for n_pods, n_data, compress in pod_specs:
+        t = _run_worker(
+            ["--_pod-worker", f"{n_pods},{n_data},{int(compress)}"],
+            n_pods * n_data)
+        points.append({"backend": "sharded_pod_data", "shards": n_data,
+                       "pods": n_pods, "compressed": bool(compress),
+                       "env_steps_per_s": round(t, 2)})
+    return points
 
 
 if __name__ == "__main__":
@@ -146,9 +199,14 @@ if __name__ == "__main__":
                          "benchmarks the ShardedExecutor per count")
     ap.add_argument("--_sharded-worker", type=int, default=0,
                     help=argparse.SUPPRESS)
+    ap.add_argument("--_pod-worker", default="",
+                    help=argparse.SUPPRESS)   # "n_pods,n_data,compress01"
     args = ap.parse_args()
     if args._sharded_worker:
         print(f"STEPS_PER_S={sharded_throughput(args._sharded_worker):.2f}")
+    elif args._pod_worker:
+        p, d, c = (int(x) for x in args._pod_worker.split(","))
+        print(f"STEPS_PER_S={pod_sharded_throughput(p, d, bool(c)):.2f}")
     elif args.shards:
         run_shard_sweep([int(x) for x in args.shards.split(",")])
     else:

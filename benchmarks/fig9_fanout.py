@@ -170,6 +170,28 @@ def run_executor_sweep(publish_intervals, max_stalenesses, n_envs=8,
     return rows
 
 
+def executor_backend_points(publish_intervals=(1, 2, 4), n_envs=8, iters=120):
+    """Machine-readable env-steps/s per runtime backend (the in-process
+    slice of BENCH_fig9.json — the shard/pod axis rides in fig10's
+    subprocess sweep, since the forced device count must be set before
+    jax initializes)."""
+    points = []
+    base = _steps_per_s(_make_runtime_executor("fused", n_envs, 0, 0, 0),
+                        iters=iters)
+    points.append({"backend": "fused", "shards": 0, "pods": 1,
+                   "publish_interval": 0, "max_staleness": 0,
+                   "n_envs": n_envs, "env_steps_per_s": round(base, 2),
+                   "speedup_vs_sync": 1.0})
+    for p in publish_intervals:
+        t = _steps_per_s(_make_runtime_executor("async", n_envs, 0, p, 0),
+                         iters=iters)
+        points.append({"backend": "async", "shards": 0, "pods": 1,
+                       "publish_interval": p, "max_staleness": 0,
+                       "n_envs": n_envs, "env_steps_per_s": round(t, 2),
+                       "speedup_vs_sync": round(t / base, 3)})
+    return points
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--executor", choices=("tree", "fused", "async"),

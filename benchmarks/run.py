@@ -9,38 +9,89 @@
     roofline — §Roofline table from the dry-run artifacts (if present)
 
 Run: PYTHONPATH=src python -m benchmarks.run [--only fig9,...]
+
+Machine-readable perf trajectory: ``--emit-json DIR`` writes
+
+    BENCH_fig9.json  — env-steps/s per runtime executor backend
+                       (fused + async publish-interval sweep, in-process)
+    BENCH_fig10.json — env-steps/s per shard/pod count (1-D data-axis
+                       counts and 2-D pod×data points with and without
+                       the int8-EF compressed cross-pod reduce; one
+                       forced-device subprocess per point)
+
+so CI and the roadmap can diff throughput across PRs instead of eyeballing
+CSV.  ``--emit-json`` runs only the two executor sweeps (no tree/figure
+suites) unless ``--only`` also names suites.
 """
 
 import argparse
+import json
+import os
 import sys
 import traceback
+
+
+def emit_json(out_dir: str) -> None:
+    from benchmarks import fig9_fanout, fig10_scalability
+
+    os.makedirs(out_dir, exist_ok=True)
+    fig9 = {
+        "figure": "fig9",
+        "metric": "env_steps_per_s",
+        "points": fig9_fanout.executor_backend_points(),
+    }
+    fig10 = {
+        "figure": "fig10",
+        "metric": "env_steps_per_s",
+        "points": fig10_scalability.shard_pod_points(),
+    }
+    for name, payload in (("BENCH_fig9.json", fig9),
+                          ("BENCH_fig10.json", fig10)):
+        path = os.path.join(out_dir, name)
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+        print(f"# wrote {path} ({len(payload['points'])} points)",
+              file=sys.stderr)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset, e.g. fig9,roofline")
+    ap.add_argument("--emit-json", default=None, metavar="DIR",
+                    help="write BENCH_fig9.json / BENCH_fig10.json "
+                         "(env-steps/s per executor backend and shard/pod "
+                         "count) into DIR")
     args = ap.parse_args()
 
-    from benchmarks import (fig8_baseline, fig9_fanout, fig10_scalability,
-                            fig11_plugin, fig12_dse, roofline)
-    suites = {
-        "fig8": fig8_baseline.run,
-        "fig9": fig9_fanout.run,
-        "fig10": fig10_scalability.run,
-        "fig11": fig11_plugin.run,
-        "fig12": fig12_dse.run,
-        "roofline": roofline.run,
-    }
-    chosen = (args.only.split(",") if args.only else list(suites))
-    print("name,us_per_call,derived")
     failed = []
-    for name in chosen:
+    if args.emit_json:
         try:
-            suites[name](csv=True)
+            emit_json(args.emit_json)
         except Exception:  # noqa: BLE001 — keep the harness sweeping
-            failed.append(name)
+            failed.append("emit-json")
             traceback.print_exc()
+
+    if args.only or not args.emit_json:
+        from benchmarks import (fig8_baseline, fig9_fanout, fig10_scalability,
+                                fig11_plugin, fig12_dse, roofline)
+        suites = {
+            "fig8": fig8_baseline.run,
+            "fig9": fig9_fanout.run,
+            "fig10": fig10_scalability.run,
+            "fig11": fig11_plugin.run,
+            "fig12": fig12_dse.run,
+            "roofline": roofline.run,
+        }
+        chosen = (args.only.split(",") if args.only else list(suites))
+        print("name,us_per_call,derived")
+        for name in chosen:
+            try:
+                suites[name](csv=True)
+            except Exception:  # noqa: BLE001 — keep the harness sweeping
+                failed.append(name)
+                traceback.print_exc()
     if failed:
         print(f"# FAILED suites: {failed}", file=sys.stderr)
         sys.exit(1)

@@ -14,6 +14,11 @@ through the executor API (runtime/executors.py).
     # sharded async: staggered shard clocks + staleness-weighted reduce
     PYTHONPATH=src python examples/quickstart.py --executor async \\
         --shards 4 --publish-interval 4 --max-staleness 1
+
+    # pod scale: 2×2 (pod × data) mesh, gradients reduce f32 inside a
+    # pod and cross pods int8-EF-compressed (DESIGN.md §7)
+    PYTHONPATH=src python examples/quickstart.py --pods 2 --shards 2 \\
+        --compress-pod-reduce
 """
 
 import argparse
@@ -33,7 +38,14 @@ def main():
                     help="env steps per learn (paper ratio)")
     ap.add_argument("--shards", type=int, default=0,
                     help="run the ShardedExecutor over this many "
-                         "host-platform device shards (0 = fused)")
+                         "host-platform device shards (0 = fused); with "
+                         "--pods this is the per-pod data-axis extent")
+    ap.add_argument("--pods", type=int, default=0,
+                    help="add a pod axis: a (pods × shards) two-axis mesh "
+                         "(DESIGN.md §7)")
+    ap.add_argument("--compress-pod-reduce", action="store_true",
+                    help="int8 error-feedback compressed gradient reduce "
+                         "across the pod axis (needs --pods)")
     ap.add_argument("--executor", choices=("sync", "async"), default="sync",
                     help="async = actors act on a delayed parameter copy "
                          "(AsyncExecutor, DESIGN.md §5)")
@@ -46,10 +58,16 @@ def main():
                          "(sharded async executor)")
     args = ap.parse_args()
 
-    if args.shards:
+    if args.pods and not args.shards:
+        args.shards = 1                       # pods alone: P×1 mesh
+    if args.compress_pod_reduce and not args.pods:
+        ap.error("--compress-pod-reduce needs --pods (the compressed leg "
+                 "crosses the pod axis)")
+    n_devices = args.shards * max(1, args.pods)
+    if n_devices:
         # must be set before the first jax import; append so a user's
         # existing XLA_FLAGS are kept
-        flag = f"--xla_force_host_platform_device_count={args.shards}"
+        flag = f"--xla_force_host_platform_device_count={n_devices}"
         existing = os.environ.get("XLA_FLAGS", "")
         if "xla_force_host_platform_device_count" not in existing:
             os.environ["XLA_FLAGS"] = f"{existing} {flag}".strip()
@@ -62,7 +80,7 @@ def main():
                                         ShardedReplayConfig)
     from repro.core.replay import PrioritizedReplay, ReplayConfig
     from repro.envs.classic import make_vec
-    from repro.launch.mesh import data_mesh
+    from repro.launch.mesh import data_mesh, pod_data_mesh
     from repro.runtime.executors import (AsyncExecutor, FusedExecutor,
                                          ShardedExecutor)
     from repro.runtime.loop import LoopConfig
@@ -81,25 +99,38 @@ def main():
                      update_interval=args.update_interval)
 
     if args.shards:
-        mesh = data_mesh(args.shards)
+        if args.pods:
+            mesh = pod_data_mesh(args.pods, args.shards)
+            axis_names = ("pod", "data")
+        else:
+            mesh = data_mesh(args.shards)
+            axis_names = ("data",)
+        n_cells = args.shards * max(1, args.pods)
         replay = ShardedPrioritizedReplay(
-            ShardedReplayConfig(capacity_per_shard=50_000 // args.shards,
-                                fanout=args.fanout, backend=args.backend),
+            ShardedReplayConfig(capacity_per_shard=50_000 // n_cells,
+                                fanout=args.fanout, backend=args.backend,
+                                axis_names=axis_names),
             example)
+        mesh_desc = (f"{args.pods}×{args.shards} pod×data cells"
+                     if args.pods else f"{args.shards} shards")
+        reduce_desc = ("f32 intra-pod + int8-EF cross-pod"
+                       if args.compress_pod_reduce else "f32 pmean")
         if args.executor == "async":
             ex = AsyncExecutor(agent, replay, env_fn, cfg, args.n_envs,
                                publish_interval=args.publish_interval,
-                               max_staleness=args.max_staleness, mesh=mesh)
-            print(f"async sharded executor: {args.shards} shards × "
+                               max_staleness=args.max_staleness, mesh=mesh,
+                               compress_pod_reduce=args.compress_pod_reduce)
+            print(f"async sharded executor: {mesh_desc} × "
                   f"{ex.n_envs_local} envs, publish every "
                   f"{args.publish_interval} iters, max staleness "
-                  f"{args.max_staleness}")
+                  f"{args.max_staleness}, reduce {reduce_desc}")
         else:
             ex = ShardedExecutor(agent, replay, env_fn, cfg, args.n_envs,
-                                 mesh)
-            print(f"sharded executor: {args.shards} shards × "
+                                 mesh,
+                                 compress_pod_reduce=args.compress_pod_reduce)
+            print(f"sharded executor: {mesh_desc} × "
                   f"{ex.n_envs_local} envs, batch/shard "
-                  f"{cfg.batch_size // args.shards}")
+                  f"{cfg.batch_size // n_cells}, reduce {reduce_desc}")
     else:
         replay = PrioritizedReplay(
             ReplayConfig(capacity=50_000, fanout=args.fanout,

@@ -35,6 +35,13 @@ Pytree = Any
 
 @dataclasses.dataclass(frozen=True)
 class ShardedReplayConfig:
+    """``axis_names`` may span multiple mesh axes — e.g. the pod-scale
+    ``("pod", "data")`` two-axis executor — in which case every global
+    stat psums/pmaxes over all of them (one shard per mesh *cell*).  The
+    order convention is outer/slow axis first (the executor compresses
+    gradients across ``axis_names[0]``); the buffer itself is
+    order-insensitive, its collectives are all full reductions."""
+
     capacity_per_shard: int
     fanout: int = 128
     alpha: float = 0.6
@@ -48,6 +55,12 @@ class ShardedPrioritizedReplay:
     """Per-shard API; call inside shard_map over ``axis_names``."""
 
     def __init__(self, config: ShardedReplayConfig, example_item: Pytree):
+        if not config.axis_names:
+            raise ValueError("axis_names must name at least one mesh axis")
+        if len(set(config.axis_names)) != len(config.axis_names):
+            raise ValueError(
+                f"duplicate mesh axes in axis_names={config.axis_names}: "
+                "each axis reduces once in the global stats")
         self.config = config
         self.local = PrioritizedReplay(
             ReplayConfig(

@@ -111,7 +111,20 @@ class PrioritizedReplay:
 
         After this returns, sampling from ``state.tree`` can never select
         a slot whose data write is still pending.
+
+        ``batch`` may not exceed the capacity: the FIFO slot allocation
+        would wrap onto duplicate indices and the batched scatter writes
+        into storage have unspecified ordering across duplicates — the
+        surviving item per slot would be backend-dependent.
         """
+        if batch > self.config.capacity:
+            raise ValueError(
+                f"insert batch={batch} exceeds capacity="
+                f"{self.config.capacity}: the FIFO slot allocation would "
+                "wrap onto duplicate indices and the duplicate-index "
+                "scatter writes into storage resolve in unspecified order "
+                "— insert at most `capacity` items per call (or grow the "
+                "buffer)")
         slots = self.insert_slots(state, batch)
         tree = self._tree_update(state.tree, slots, jnp.zeros((batch,), jnp.float32))
         return dataclasses.replace(state, tree=tree), slots

@@ -66,8 +66,15 @@ def _kernel(capacity: int, fanout: int, u_ref, *refs):
         group = group * k + cutoff
 
     leaf = jnp.minimum(group, capacity - 1)
+    # Parity with the XLA path (core/sumtree.py), which re-reads the
+    # priority AFTER clamping: an fp-tail draw whose no-hit clamps cascade
+    # into the leaf-level padding has row_val = 0 (the padding lane), but
+    # the clamped leaf is `capacity - 1`, whose priority is a static
+    # (group, lane) read of the leaf level — `lv` still holds the loop's
+    # last (leaf-level) load, so no second VMEM read of the largest level.
+    clamp_val = lv[(capacity - 1) // k, (capacity - 1) % k]
     out_idx_ref[...] = leaf
-    out_pri_ref[...] = row_val
+    out_pri_ref[...] = jnp.where(group > capacity - 1, clamp_val, row_val)
 
 
 def sumtree_sample_levels(

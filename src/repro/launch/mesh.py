@@ -43,6 +43,32 @@ def data_mesh(n_shards: Optional[int] = None, axis: str = "data"):
     return jax.sharding.Mesh(np.asarray(devices[:n]).reshape(n), (axis,))
 
 
+def pod_data_mesh(n_pods: int, n_data: int, axes: Tuple[str, str] = ("pod", "data")):
+    """2-D ``(pod, data)`` mesh for the two-axis sharded executor.
+
+    The first (outer) axis is the slow inter-pod interconnect — the one
+    the int8 error-feedback compressed reduce crosses
+    (``ShardedExecutor(compress_pod_reduce=True)``); the second is the
+    fast intra-pod data axis where gradients reduce in f32.  Device
+    order is row-major pod-major, matching the executor's flattened
+    shard ids, so a ``pod_data_mesh(P, 1)`` run reproduces a
+    ``data_mesh(P)`` run exactly from the same seed.
+    """
+    if n_pods < 1 or n_data < 1:
+        raise ValueError(f"pod_data_mesh({n_pods}, {n_data}): both axis "
+                         "extents must be ≥ 1")
+    n = n_pods * n_data
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"pod×data mesh ({n_pods}, {n_data}) needs {n} devices, found "
+            f"{len(devices)} — set XLA_FLAGS="
+            "--xla_force_host_platform_device_count before any jax import "
+            "to force host-platform shards.")
+    return jax.sharding.Mesh(
+        np.asarray(devices[:n]).reshape(n_pods, n_data), axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")

@@ -12,11 +12,18 @@ Functional API — the error-feedback buffer is explicit state:
     comp, err = compress(grads, err)        # int8 payload + new error
     grads_hat = decompress(comp)            # dequantize after the reduce
 
-The cross-pod reduce itself is a ``psum`` of the *dequantized* values
-over the 'pod' axis (2 pods → one hop); the wire format is the int8
-payload, 4× smaller than f32.  On a real fleet the payload rides the
-collective; under GSPMD we model it by quantize→psum→dequantize, which
-preserves the numerics exactly (tests assert the EF contraction).
+The cross-pod reduce itself is ``compressed_pmean``: a **mean** of the
+dequantized values over the 'pod' axis.  Mean — not sum — semantics are
+what the hierarchical reduce in ``runtime/learner.py`` composes with:
+``pmean(data) → compressed_pmean(pod)`` equals the global pmean up to
+quantization error, so the effective learning rate never depends on the
+pod count.  (A caller that needs the weighted *sum* across pods — the
+bounded-staleness reduce — multiplies the mean by the static pod count.)
+The wire format is the int8 payload, 4× smaller than f32.  On a real
+fleet the payload rides the collective; under GSPMD we model it by
+quantize→pmean→dequantize, which preserves the numerics exactly (tests
+assert the EF contraction and the scale parity vs an uncompressed
+pmean).
 """
 
 from __future__ import annotations
@@ -48,6 +55,11 @@ def compress(grads: Pytree, err: Pytree) -> Tuple[Pytree, Pytree]:
 
     flat, treedef = jax.tree.flatten(grads)
     eflat = jax.tree.leaves(err)
+    if len(flat) != len(eflat):
+        raise ValueError(
+            f"error-feedback buffer has {len(eflat)} leaves but the "
+            f"gradient pytree has {len(flat)} — initialize it with "
+            "init_error(<gradient-shaped pytree>)")
     comps, new_err = zip(*[one(g, e) for g, e in zip(flat, eflat)])
     return (jax.tree.unflatten(treedef, comps),
             jax.tree.unflatten(treedef, new_err))
@@ -61,9 +73,34 @@ def decompress(comp: Pytree) -> Pytree:
     )
 
 
-def compressed_psum(grads: Pytree, err: Pytree, axis_name: str
-                    ) -> Tuple[Pytree, Pytree]:
-    """EF-int8 all-reduce over ``axis_name`` (call inside shard_map)."""
+def payload_bytes(comp: Pytree) -> int:
+    """Wire bytes of the compressed payload crossing the slow link: one
+    int8 per element plus one f32 scale per leaf."""
+    leaves = jax.tree.leaves(
+        comp, is_leaf=lambda x: isinstance(x, CompressedLeaf))
+    return sum(c.q.size * c.q.dtype.itemsize + c.scale.size * 4
+               for c in leaves if isinstance(c, CompressedLeaf))
+
+
+def raw_bytes(tree: Pytree) -> int:
+    """Bytes of the same pytree reduced uncompressed (f32 on the wire)."""
+    return sum(x.size * 4 for x in jax.tree.leaves(tree))
+
+
+def compressed_pmean(grads: Pytree, err: Pytree, axis_name: str
+                     ) -> Tuple[Pytree, Pytree]:
+    """EF-int8 all-reduce **mean** over ``axis_name`` (call inside
+    shard_map): quantize each shard's contribution to int8 (folding in
+    the carried error), ``pmean`` the dequantized values, and return the
+    new per-shard error buffer.
+
+    Mean semantics are load-bearing: ``compressed_pmean`` over P pods of
+    identical inputs returns those inputs (up to quantization), exactly
+    like ``jax.lax.pmean`` — so swapping it into a reduce never rescales
+    the gradient by the pod count (the old ``compressed_psum`` name
+    promised a sum while computing this mean, silently halving the
+    documented gradient scale at 2 pods).
+    """
     comp, new_err = compress(grads, err)
     deq = decompress(comp)
     reduced = jax.tree.map(lambda g: jax.lax.pmean(g, axis_name), deq)

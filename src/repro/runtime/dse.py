@@ -36,6 +36,14 @@ def profile_curve(run_at: Callable[[int], float], xs: List[int]) -> Dict[int, fl
 
 
 def _interp(curve: Dict[int, float], x: int) -> float:
+    """Linear interpolation *within* the profiled hull.
+
+    Callers must keep ``x`` inside ``[min(curve), max(curve)]`` —
+    ``solve`` clamps its search to the hull, because extrapolating flat
+    beyond the profiled range claims throughput that was never measured
+    (a lane allocation at an unprofiled parallelism level would tie with
+    the hull edge on ratio error and win the ``-(fa + fl)`` tie-break
+    order dependent — the old behavior this replaces)."""
     xs = sorted(curve)
     if x in curve:
         return curve[x]
@@ -53,11 +61,18 @@ def solve(
     total: int,
     update_interval: float = 1.0,
 ) -> DSEResult:
-    """Exhaustive O(M²) search of Eq. 5 (paper §VI-G).
+    """Exhaustive O(M²) search of Eq. 5 (paper §VI-G), clamped to the
+    profiled hull: candidate allocations are restricted to parallelism
+    levels inside ``[min profiled x, max profiled x]`` of each curve, so
+    the solver never returns a lane count whose throughput was never
+    measured (flat extrapolation used to let such points tie the ratio
+    error of the hull edge and be selected by iteration order).
 
     Raises ``ValueError`` for an infeasible budget or empty curves — with
     ``total < 2`` the (x_a ≥ 1, x_l ≥ 1) search space is empty and there
-    is no allocation to return.
+    is no allocation to return, and a budget too small to reach both
+    curves' minimum profiled parallelism has no measured allocation
+    either.
     """
     if total < 2:
         raise ValueError(
@@ -67,9 +82,11 @@ def solve(
     if not actor_curve or not learner_curve:
         raise ValueError("actor_curve and learner_curve must be non-empty "
                          "profiled throughput curves")
+    a_lo, a_hi = min(actor_curve), max(actor_curve)
+    l_lo, l_hi = min(learner_curve), max(learner_curve)
     best = None
-    for xa in range(1, total):
-        for xl in range(1, total - xa + 1):
+    for xa in range(max(1, a_lo), min(total - 1, a_hi) + 1):
+        for xl in range(max(1, l_lo), min(total - xa, l_hi) + 1):
             fa = _interp(actor_curve, xa)
             fl = _interp(learner_curve, xl)
             err = abs(fa - update_interval * fl) / max(fa, 1e-9)
@@ -77,6 +94,13 @@ def solve(
             if best is None or score < best[0]:
                 best = (score, DSEResult(xa, xl, fa, fl,
                                          fa / max(fl, 1e-9), update_interval))
+    if best is None:
+        raise ValueError(
+            f"total={total} cannot reach the profiled hull: the smallest "
+            f"measured allocation is x_a={a_lo} + x_l={l_lo} = "
+            f"{a_lo + l_lo} lanes — profile smaller parallelism levels or "
+            "raise the budget (allocating below the profiled range would "
+            "claim throughput that was never measured)")
     return best[1]
 
 

@@ -7,15 +7,22 @@ and drives it through chunked ``lax.scan``:
     the learners live in one XLA program on the default device.  This is
     the paper's single-node regime (and the previous ``loop.train``).
 
-  * ``ShardedExecutor`` — the whole step runs inside ``shard_map`` over a
-    mesh data axis: each shard owns E/D envs and one replay shard
-    (``ShardedPrioritizedReplay``: local K-ary tree + storage), actors
-    insert locally, learners sample locally with globally-corrected PER
-    weights (one scalar psum), and gradients are pmean'd before the
-    optimizer step (runtime/learner.make_sharded_learn) so the replicated
-    agent state stays in lockstep.  This is the paper's parallel
-    actors + parallel learners architecture mapped onto a device mesh
-    (DESIGN.md §3).
+  * ``ShardedExecutor`` — the whole step runs inside ``shard_map`` over
+    the replay config's mesh axes: each shard owns E/D envs and one
+    replay shard (``ShardedPrioritizedReplay``: local K-ary tree +
+    storage), actors insert locally, learners sample locally with
+    globally-corrected PER weights (one scalar psum), and gradients are
+    pmean'd before the optimizer step
+    (runtime/learner.make_sharded_learn) so the replicated agent state
+    stays in lockstep.  This is the paper's parallel actors + parallel
+    learners architecture mapped onto a device mesh (DESIGN.md §3).
+    The mesh may be 1-D (``("data",)``) or 2-D pod-scale
+    (``("pod", "data")`` via ``launch.mesh.pod_data_mesh``); on the 2-D
+    mesh ``compress_pod_reduce=True`` switches the gradient reduce to
+    the hierarchical form (DESIGN.md §7): f32 pmean over the fast
+    intra-pod ``data`` axis, then the int8 error-feedback compressed
+    mean (``optim/compress.compressed_pmean``) across the slow ``pod``
+    links, with the EF buffer threaded through ``LoopState.ef_error``.
 
   * ``AsyncExecutor``   — the bounded-staleness path (DESIGN.md §5):
     actors act on a *delayed* parameter copy, double-buffered in
@@ -179,10 +186,20 @@ class FusedExecutor(Executor):
 class ShardedExecutor(Executor):
     """shard_map path: per-shard actors + replay shard, pmean'd learners.
 
-    ``n_envs`` is the *global* env count; each of the mesh's D data-axis
-    shards runs ``n_envs / D`` envs and holds one replay shard.  The
-    learner batch is ``cfg.batch_size / D`` per shard (global batch
-    preserved under the gradient pmean).
+    ``n_envs`` is the *global* env count; each of the mesh's D shards
+    (D = the product of the replay config's axis extents — e.g. a 2×2
+    pod×data mesh has D=4) runs ``n_envs / D`` envs and holds one replay
+    shard.  The learner batch is ``cfg.batch_size / D`` per shard
+    (global batch preserved under the gradient pmean).  Shard identity
+    is the *flattened* (pod, data) index — row-major over
+    ``replay.config.axis_names`` — so a 2×1 pod×data mesh reproduces a
+    1-D 2-shard data mesh exactly (same rng folds, same stagger phases).
+
+    ``compress_pod_reduce=True`` (2-D meshes only — the first axis is
+    the slow inter-pod one) swaps the cross-pod leg of the gradient
+    reduce for the int8 error-feedback compressed mean; the per-shard EF
+    buffer rides in ``LoopState.ef_error`` with the same leading-shard-
+    axis layout as the replay shards.
 
     ``publish_interval``/``max_staleness`` are plumbing for
     ``AsyncExecutor``: with ``publish_interval > 0`` each shard acts on
@@ -202,9 +219,31 @@ class ShardedExecutor(Executor):
         scan_chunk: int = 64,
         publish_interval: int = 0,
         max_staleness: Optional[int] = None,
+        compress_pod_reduce: bool = False,
     ):
-        (self._axis,) = replay.config.axis_names  # single data axis for now
-        n_shards = mesh.shape[self._axis]
+        axes = tuple(replay.config.axis_names)
+        missing = [ax for ax in axes if ax not in mesh.shape]
+        if missing:
+            raise ValueError(f"replay axes {missing} not in mesh axes "
+                             f"{tuple(mesh.shape)}")
+        extra = [ax for ax in mesh.shape if ax not in axes]
+        if extra:
+            raise ValueError(
+                f"mesh axes {extra} are not in the replay config's "
+                f"axis_names {axes}: the executor would replicate every "
+                "shard across them (duplicate programs on "
+                f"{math.prod(mesh.shape[ax] for ax in extra)}× the "
+                "devices, no extra capacity or gradient averaging) — "
+                "name every mesh axis in ShardedReplayConfig.axis_names, "
+                "e.g. axis_names=(\"pod\", \"data\") for pod_data_mesh")
+        if compress_pod_reduce and len(axes) < 2:
+            raise ValueError(
+                "compress_pod_reduce needs a multi-axis (pod, data) mesh: "
+                f"with the single axis {axes} there is no slow cross-pod "
+                "link to compress — the intra-pod reduce stays f32")
+        self._axes = axes
+        axis_sizes = tuple(mesh.shape[ax] for ax in axes)
+        n_shards = math.prod(axis_sizes)
         if n_envs % n_shards:
             raise ValueError(f"n_envs={n_envs} not divisible by "
                              f"{n_shards} shards")
@@ -221,6 +260,7 @@ class ShardedExecutor(Executor):
         self.scan_chunk = scan_chunk
         self.publish_interval = publish_interval
         self.max_staleness = max_staleness
+        self.compress_pod_reduce = compress_pod_reduce
         self._chunks: Dict[int, Callable] = {}
         self.spec, self._v_reset, self._v_step = env_fn(self.n_envs_local)
         self.schedule = RatioSchedule.from_config(cfg, n_envs)
@@ -243,18 +283,38 @@ class ShardedExecutor(Executor):
                     "Pick a publish_interval coprime with the learn period "
                     "or raise max_staleness.")
 
-        axis = self._axis
         learn_fn = make_sharded_learn(
             agent, replay, batch_per_shard=cfg.batch_size // n_shards,
             beta=cfg.beta,
-            max_staleness=max_staleness if publish_interval else None)
+            max_staleness=max_staleness if publish_interval else None,
+            compress_axis=axes[0] if compress_pod_reduce else None)
+
+        def flat_shard_id():
+            # row-major flattened (pod, data) index over the mesh axes —
+            # the single integer identity used for rng folds and the
+            # staggered publish clocks
+            sid = jnp.zeros((), jnp.int32)
+            for ax, size in zip(axes, axis_sizes):
+                sid = sid * size + jax.lax.axis_index(ax)
+            return sid
+
+        def mean_across(x):
+            for ax in axes:
+                x = jax.lax.pmean(x, ax)
+            return x
+
+        def sum_across(x):
+            for ax in axes:
+                x = jax.lax.psum(x, ax)
+            return x
+
         self.step = make_step(
             agent, replay, self._v_step, cfg, self.n_envs_local,
             schedule=self.schedule,
             learn_fn=learn_fn,
-            shard_id=lambda: jax.lax.axis_index(axis),
-            mean_across=lambda x: jax.lax.pmean(x, axis),
-            sum_across=lambda x: jax.lax.psum(x, axis),
+            shard_id=flat_shard_id,
+            mean_across=mean_across,
+            sum_across=sum_across,
             publish_interval=publish_interval,
         )
 
@@ -262,10 +322,10 @@ class ShardedExecutor(Executor):
         self._metric_specs = {k: PartitionSpec() for k in METRIC_KEYS}
 
         def init_local(key):
-            sid = jax.lax.axis_index(axis)
             st = init_loop_state(agent, replay, self._v_reset, key,
-                                 self.n_envs_local, shard_id=sid,
-                                 double_buffer=publish_interval > 0)
+                                 self.n_envs_local, shard_id=flat_shard_id(),
+                                 double_buffer=publish_interval > 0,
+                                 ef_buffer=compress_pod_reduce)
             return self._global_state(st)
 
         self._init = jax.jit(shard_map(
@@ -291,18 +351,23 @@ class ShardedExecutor(Executor):
     # Replay-shard leaves (tree, storage, head, count, max_priority) gain a
     # leading shard axis in the global representation: local (…) ↔ global
     # (D, …), so rank-0 per-shard scalars stay addressable under a
-    # PartitionSpec("data") without replication lies.  The async double
-    # buffer (actor_params, params_age) is laid out the same way — each
-    # shard holds its *own* delayed copy at its own age (staggered publish
-    # ticks).  Env-side leaves already carry the env axis, which
-    # concatenates across shards to the global env count.  Agent params /
-    # rng / counters are replicated.
+    # PartitionSpec(axes) without replication lies (on a 2-D mesh the
+    # leading dim is sharded over BOTH axes — P(("pod", "data")) — in the
+    # same row-major order as the flattened shard id).  The async double
+    # buffer (actor_params, params_age) and the EF error buffer are laid
+    # out the same way — each shard holds its *own* delayed copy / error
+    # state (within a pod the EF copies are numerically identical, across
+    # pods they differ).  Env-side leaves already carry the env axis,
+    # which concatenates across shards to the global env count.  Agent
+    # params / rng / counters are replicated.
 
     def _map_sharded_fields(self, state: LoopState, fn) -> LoopState:
         updates = {"replay": jax.tree.map(fn, state.replay)}
         if self.publish_interval:
             updates["actor_params"] = jax.tree.map(fn, state.actor_params)
             updates["params_age"] = fn(state.params_age)
+        if self.compress_pod_reduce:
+            updates["ef_error"] = jax.tree.map(fn, state.ef_error)
         return state._replace(**updates)
 
     def _local_state(self, gstate: LoopState) -> LoopState:
@@ -316,23 +381,27 @@ class ShardedExecutor(Executor):
         shapes = jax.eval_shape(
             lambda k: init_loop_state(self.agent, self.replay, self._v_reset,
                                       k, self.n_envs_local,
-                                      double_buffer=self.publish_interval > 0),
+                                      double_buffer=self.publish_interval > 0,
+                                      ef_buffer=self.compress_pod_reduce),
             key_shape)
+        # leading dim sharded over ALL mesh axes at once (row-major):
+        # P(("pod", "data")) on the 2-D mesh, P(("data",)) ≡ P("data") 1-D
+        dim0 = PartitionSpec(self._axes)
         rep = lambda tree: jax.tree.map(lambda _: PartitionSpec(), tree)
-        shard = lambda tree: jax.tree.map(
-            lambda _: PartitionSpec(self._axis), tree)
+        shard = lambda tree: jax.tree.map(lambda _: dim0, tree)
         return LoopState(
             agent=rep(shapes.agent),
             replay=shard(shapes.replay),
             env_state=shard(shapes.env_state),
-            obs=PartitionSpec(self._axis),
+            obs=dim0,
             rng=PartitionSpec(),
             env_steps=PartitionSpec(),
-            episode_return=PartitionSpec(self._axis),
-            last_return=PartitionSpec(self._axis),
+            episode_return=dim0,
+            last_return=dim0,
             learn_steps=PartitionSpec(),
             actor_params=shard(shapes.actor_params),
             params_age=shard(shapes.params_age),
+            ef_error=shard(shapes.ef_error),
         )
 
     def init(self, key: jax.Array) -> LoopState:
@@ -372,6 +441,7 @@ class AsyncExecutor(Executor):
         max_staleness: int = 0,
         mesh: Optional[Mesh] = None,
         scan_chunk: int = 64,
+        compress_pod_reduce: bool = False,
     ):
         if publish_interval < 1:
             raise ValueError(
@@ -380,6 +450,10 @@ class AsyncExecutor(Executor):
         if max_staleness < 0:
             raise ValueError(f"max_staleness={max_staleness}: need ≥ 0")
         if mesh is None:
+            if compress_pod_reduce:
+                raise ValueError(
+                    "compress_pod_reduce needs a (pod, data) mesh — the "
+                    "fused path has no cross-pod reduce to compress")
             self._impl: Executor = FusedExecutor(
                 agent, replay, env_fn, cfg, n_envs, scan_chunk=scan_chunk,
                 publish_interval=publish_interval)
@@ -387,7 +461,8 @@ class AsyncExecutor(Executor):
             self._impl = ShardedExecutor(
                 agent, replay, env_fn, cfg, n_envs, mesh,
                 scan_chunk=scan_chunk, publish_interval=publish_interval,
-                max_staleness=max_staleness)
+                max_staleness=max_staleness,
+                compress_pod_reduce=compress_pod_reduce)
             self.n_shards = self._impl.n_shards
             self.n_envs_local = self._impl.n_envs_local
         self.agent = agent
@@ -398,6 +473,7 @@ class AsyncExecutor(Executor):
         self.scan_chunk = scan_chunk
         self.publish_interval = publish_interval
         self.max_staleness = max_staleness
+        self.compress_pod_reduce = compress_pod_reduce
         self.spec = self._impl.spec
         self.step = self._impl.step
         self.schedule = self._impl.schedule

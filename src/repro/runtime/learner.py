@@ -10,8 +10,15 @@ Two execution styles:
   * **shard_map (explicit)**: ``sharded_learn`` runs one learner per
     data-device with an explicit gradient ``pmean`` — used by the
     sharded-replay path where each learner samples from its local buffer
-    shard.  (The cross-pod int8 error-feedback reduce in
-    optim/compress.py is a future extension of this path; ROADMAP.)
+    shard.
+
+On a 2-D ``("pod", "data")`` mesh the reduce is **hierarchical**
+(DESIGN.md §7): gradients first reduce in f32 over the fast intra-pod
+``data`` axis, then cross the slow inter-pod ``pod`` links through the
+int8 error-feedback compressed reduce of ``optim/compress.py``
+(``compressed_pmean``).  The EF buffer is explicit state threaded
+through ``LoopState.ef_error`` — identical across the data shards of a
+pod (they compress the same intra-pod partial), differing across pods.
 
 The async-PS variant applies gradients with bounded staleness: actors
 never block on the learner (the lazy-write invariant) and a learner
@@ -22,7 +29,10 @@ scaled by ``staleness_weights(age, max_staleness)`` and the psum is
 renormalized by the total weight, so the realized reduce weights sum to
 one whenever at least one shard is within the bound
 (``staleness_reduce_weights``) and the update degrades to zero — params
-held, never corrupted — when every shard is stale.
+held, never corrupted — when every shard is stale.  Composed with
+compression, the weighted partial sums cross the pod axis as
+``compressed_pmean × n_pods`` (mean × static pod count = the weighted
+sum), so the realized weights still total one.
 """
 
 from __future__ import annotations
@@ -34,6 +44,7 @@ import jax.numpy as jnp
 
 from repro.agents.base import Agent
 from repro.core.distributed import ShardedPrioritizedReplay
+from repro.optim import compress
 
 Pytree = Any
 
@@ -77,44 +88,38 @@ def _renormalize(w: jax.Array, total: jax.Array) -> jax.Array:
     return w / jnp.maximum(total, 1e-12)
 
 
-def make_sharded_learn(
-    agent: Agent,
-    replay: ShardedPrioritizedReplay,
-    batch_per_shard: int,
-    beta: float = 0.4,
+def make_grad_reducer(
+    axes: Tuple[str, ...],
     max_staleness: Optional[int] = None,
+    compress_axis: Optional[str] = None,
 ):
-    """Per-shard learner call: local PER sample → local grads → reduce →
-    update (paper §V-B parameter-server adaptation).
+    """Build the cross-shard gradient reduce used by ``sharded_learn``:
+    ``reduce_grads(grads, age, ef) → (reduced, ef')`` over mesh ``axes``
+    (call inside shard_map, or vmap with axis names in tests).
 
-    Returns ``sharded_learn(agent_state, replay_state, rng, age=None) →
-    (agent_state', replay_state', loss)`` — the same signature as the
-    fused ``make_learner_step`` — to be invoked *inside* ``shard_map``
-    over ``replay.config.axis_names``:
-
-      * the PER sample is local to the shard's tree/storage, with
-        importance weights against the psum'd global distribution
-        (``ShardedPrioritizedReplay.sample``);
-      * agents exposing the ``grads``/``apply_grads`` split get the exact
-        data-parallel reduction: grads are pmean'd across shards before
-        the optimizer step, so replicated params stay bit-identical;
-      * with ``max_staleness`` set (the async executor's sharded path),
-        the pmean becomes the bounded-staleness weighted reduce: each
-        shard's gradient is scaled by ``staleness_weights(age,
-        max_staleness)`` and the psum renormalized by the total weight —
-        a shard whose acting copy aged past the bound is dropped from
-        the reduce and the surviving weights sum to one (``age`` is the
-        shard's ``LoopState.params_age``);
-      * agents without the split fall back to a local ``learn`` followed
-        by a parameter/target/opt pmean (gossip-average; identical result
-        at 1 shard, approximate beyond);
-      * priority write-back stays local (write-after-read, §IV-D3).
+    Plain pmean by default; bounded-staleness renormalized weighted psum
+    with ``max_staleness``; hierarchical f32-intra-pod / int8-EF-cross-
+    pod with ``compress_axis`` (DESIGN.md §7) — composable with both.
     """
-    axes = replay.config.axis_names
+    if compress_axis is not None and compress_axis not in axes:
+        raise ValueError(
+            f"compress_axis={compress_axis!r} is not one of the mesh "
+            f"axes {axes}")
+    fast_axes = tuple(ax for ax in axes if ax != compress_axis)
 
-    def reduce_grads(grads, age):
+    def reduce_grads(grads, age, ef):
+        if compress_axis is not None and not jax.tree.leaves(ef):
+            raise ValueError(
+                "compress_axis is set but no error-feedback buffer was "
+                "passed: thread LoopState.ef_error through the learn fn "
+                "(init_loop_state(..., ef_buffer=True) materializes it)")
         if max_staleness is None or age is None:
-            return pmean_gradients(grads, axes)
+            if compress_axis is None:
+                return pmean_gradients(grads, axes), ef
+            # hierarchical: f32 mean inside the pod, int8-EF mean across
+            # pods — equals the global pmean up to quantization error
+            partial = pmean_gradients(grads, fast_axes)
+            return compress.compressed_pmean(partial, ef, compress_axis)
         w = staleness_weights(age, max_staleness)
         total = w
         for ax in axes:
@@ -122,13 +127,88 @@ def make_sharded_learn(
         # renormalized weighted reduce: realized weight of shard d is
         # w_d / Σw — sums to 1 while any shard is within the bound, and
         # degrades to an all-zero gradient (params held) when none is
-        return _weighted_psum(grads, _renormalize(w, total), axes)
+        wn = _renormalize(w, total)
+        if compress_axis is None:
+            return _weighted_psum(grads, wn, axes), ef
+        # weighted hierarchical reduce: f32 weighted partial sums inside
+        # the pod, then the compressed mean across pods scaled by the
+        # static pod count — mean × P = the cross-pod sum, so the
+        # realized weights still total exactly 1.  An all-stale round
+        # must degrade to an exactly-zero update with the EF buffer held:
+        # the quantizer folds the carried error into zero partials, so
+        # without the gate it would emit ≈ Σ_pods ef_p as a gradient.
+        partial = _weighted_psum(grads, wn, fast_axes)
+        pod_mean, new_ef = compress.compressed_pmean(partial, ef,
+                                                     compress_axis)
+        n_pods = jax.lax.psum(1, compress_axis)
+        alive = total > 0
+        reduced = jax.tree.map(
+            lambda g: jnp.where(alive, g * n_pods, 0.0), pod_mean)
+        ef = jax.tree.map(lambda n, o: jnp.where(alive, n, o), new_ef, ef)
+        return reduced, ef
 
-    def sharded_learn(agent_state, replay_state, rng, age=None):
+    return reduce_grads
+
+
+def make_sharded_learn(
+    agent: Agent,
+    replay: ShardedPrioritizedReplay,
+    batch_per_shard: int,
+    beta: float = 0.4,
+    max_staleness: Optional[int] = None,
+    compress_axis: Optional[str] = None,
+):
+    """Per-shard learner call: local PER sample → local grads → reduce →
+    update (paper §V-B parameter-server adaptation).
+
+    Returns ``sharded_learn(agent_state, replay_state, rng, age=None,
+    ef=None) → (agent_state', replay_state', loss, ef')`` — the same
+    signature as the fused ``make_learner_step`` — to be invoked *inside*
+    ``shard_map`` over ``replay.config.axis_names``:
+
+      * the PER sample is local to the shard's tree/storage, with
+        importance weights against the psum'd global distribution
+        (``ShardedPrioritizedReplay.sample``);
+      * agents exposing the ``grads``/``apply_grads`` split get the exact
+        data-parallel reduction: grads are pmean'd across shards before
+        the optimizer step, so replicated params stay bit-identical;
+      * with ``compress_axis`` set (the 2-D pod×data mesh), the reduce is
+        hierarchical: an f32 pmean over the remaining (fast intra-pod)
+        axes, then the int8 error-feedback ``compressed_pmean`` across
+        ``compress_axis`` — ``ef`` carries the per-shard EF buffer in
+        and the contracted buffer out (``LoopState.ef_error``);
+      * with ``max_staleness`` set (the async executor's sharded path),
+        the pmean becomes the bounded-staleness weighted reduce: each
+        shard's gradient is scaled by ``staleness_weights(age,
+        max_staleness)`` and the psum renormalized by the total weight —
+        a shard whose acting copy aged past the bound is dropped from
+        the reduce and the surviving weights sum to one (``age`` is the
+        shard's ``LoopState.params_age``).  Composed with
+        ``compress_axis``, the weighted partials psum in f32 inside the
+        pod and cross the pod axis as ``compressed_pmean × n_pods`` (the
+        weighted sum, since the weights were renormalized globally);
+      * agents without the split fall back to a local ``learn`` followed
+        by a parameter/target/opt pmean (gossip-average; identical result
+        at 1 shard, approximate beyond) — incompatible with
+        ``compress_axis`` (there is no gradient pytree to compress);
+      * priority write-back stays local (write-after-read, §IV-D3).
+    """
+    axes = replay.config.axis_names
+    if compress_axis is not None and (agent.grads is None
+                                      or agent.apply_grads is None):
+        raise ValueError(
+            f"agent {agent.name!r} has no grads/apply_grads split: the "
+            "compressed cross-pod reduce needs the explicit gradient "
+            "pytree (the parameter-average fallback has nothing to "
+            "quantize)")
+    reduce_grads = make_grad_reducer(axes, max_staleness=max_staleness,
+                                     compress_axis=compress_axis)
+
+    def sharded_learn(agent_state, replay_state, rng, age=None, ef=None):
         idx, items, is_w = replay.sample(replay_state, rng, batch_per_shard, beta)
         if agent.grads is not None and agent.apply_grads is not None:
             grads, aux = agent.grads(agent_state, items, is_w)
-            grads = reduce_grads(grads, age)
+            grads, ef = reduce_grads(grads, age, ef)
             agent_state, metrics, td = agent.apply_grads(agent_state, grads, aux)
         else:
             agent_state, metrics, td = agent.learn(agent_state, items, is_w)
@@ -138,7 +218,7 @@ def make_sharded_learn(
                 opt=_pmean_inexact(agent_state.opt, axes),
             )
         replay_state = replay.update_priorities(replay_state, idx, td)
-        return agent_state, replay_state, metrics["loss"]
+        return agent_state, replay_state, metrics["loss"], ef
 
     return sharded_learn
 

@@ -51,6 +51,7 @@ import jax.numpy as jnp
 
 from repro.agents.base import Agent, AgentState
 from repro.core.replay import PrioritizedReplay, ReplayState
+from repro.optim import compress
 
 Pytree = Any
 
@@ -73,6 +74,10 @@ class LoopState(NamedTuple):
     # async double buffer (empty pytrees on the synchronous executors):
     actor_params: Pytree = ()     # delayed acting copy of the agent params
     params_age: Pytree = ()       # int32 iterations since the last publish
+    # error-feedback buffer of the int8 cross-pod compressed reduce
+    # (runtime/learner.py); an empty pytree whenever the executor's
+    # reduce is uncompressed — 1-D meshes, fused, and plain sharded runs
+    ef_error: Pytree = ()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -162,17 +167,18 @@ def make_learner_step(agent: Agent, replay, cfg: LoopConfig):
     sample/update_priorities signature (e.g. the sharded buffer, whose
     ``sample`` computes importance weights against psum'd global stats).
     The sharded gradient-psum variant lives in ``runtime/learner.py``;
-    ``age`` is part of the shared learn-fn signature (the staleness of
-    the caller's acting copy) and is ignored here — only the sharded
-    bounded-staleness reduce consumes it.
+    ``age`` (the staleness of the caller's acting copy) and ``ef`` (the
+    error-feedback buffer of the compressed cross-pod reduce) are part of
+    the shared learn-fn signature and are passed through unused here —
+    only the sharded reduces consume them.
     """
 
-    def learner_step(agent_state, replay_state, rng, age=None):
+    def learner_step(agent_state, replay_state, rng, age=None, ef=None):
         del age  # fused learner: no cross-shard reduce to weight
         idx, items, is_w = replay.sample(replay_state, rng, cfg.batch_size, cfg.beta)
         agent_state, metrics, td = agent.learn(agent_state, items, is_w)
         replay_state = replay.update_priorities(replay_state, idx, td)
-        return agent_state, replay_state, metrics["loss"]
+        return agent_state, replay_state, metrics["loss"], ef
 
     return learner_step
 
@@ -247,22 +253,23 @@ def make_step(
         age = state.params_age if publish_interval else jnp.zeros((), jnp.int32)
 
         def do_learn(args):
-            agent_state, rstate = args
+            agent_state, rstate, ef = args
             loss_sum = jnp.zeros(())
             for i in range(schedule.learns):
                 ki = jax.random.fold_in(k_sample, i)
-                agent_state, rstate, loss = learn_fn(agent_state, rstate, ki,
-                                                     age=age)
+                agent_state, rstate, loss, ef = learn_fn(
+                    agent_state, rstate, ki, age=age, ef=ef)
                 loss_sum = loss_sum + loss
             return (agent_state, rstate, loss_sum / schedule.learns,
-                    state.learn_steps + schedule.learns)
+                    state.learn_steps + schedule.learns, ef)
 
         def skip_learn(args):
-            agent_state, rstate = args
-            return agent_state, rstate, jnp.zeros(()), state.learn_steps
+            agent_state, rstate, ef = args
+            return agent_state, rstate, jnp.zeros(()), state.learn_steps, ef
 
-        agent_state, replay_state, loss, learn_steps = jax.lax.cond(
-            can_learn, do_learn, skip_learn, (state.agent, replay_state))
+        agent_state, replay_state, loss, learn_steps, ef_error = jax.lax.cond(
+            can_learn, do_learn, skip_learn,
+            (state.agent, replay_state, state.ef_error))
 
         # 5. lazy write, phase 3: storage write + P_max restore
         replay_state = replay.insert_commit(replay_state, slots, transitions)
@@ -290,6 +297,7 @@ def make_step(
             learn_steps=learn_steps,
             actor_params=actor_params,
             params_age=params_age,
+            ef_error=ef_error,
         )
         metrics = {
             "loss": mean_across(loss),
@@ -325,12 +333,17 @@ def init_loop_state(
     n_envs: int,
     shard_id: Union[int, jax.Array] = 0,
     double_buffer: bool = False,
+    ef_buffer: bool = False,
 ) -> LoopState:
     """Initial state.  ``shard_id`` decorrelates per-shard env resets while
     agent params (from the unfolded key) stay replicated across shards.
     ``double_buffer`` fills the async acting copy (``actor_params`` at age
-    0, i.e. identical to the fresh params); the synchronous executors
-    leave both async fields as empty pytrees — no memory overhead."""
+    0, i.e. identical to the fresh params); ``ef_buffer`` fills the
+    zero-initialized error-feedback buffer of the compressed cross-pod
+    reduce (the gradient pytree of agents with the grads/apply_grads
+    split matches ``state.params``, so params is the template).  The
+    synchronous/uncompressed executors leave these fields as empty
+    pytrees — no memory overhead."""
     k1, k2, k3 = jax.random.split(key, 3)
     env_state, obs = v_reset(jax.random.fold_in(k1, shard_id))
     agent_state = agent.init(k2)
@@ -347,6 +360,8 @@ def init_loop_state(
         actor_params=(agent.params_for_acting(agent_state)
                       if double_buffer else ()),
         params_age=jnp.zeros((), jnp.int32) if double_buffer else (),
+        ef_error=(compress.init_error(agent_state.params)
+                  if ef_buffer else ()),
     )
 
 

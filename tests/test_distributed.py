@@ -8,7 +8,7 @@ import pytest
 
 from repro.optim import compress
 from repro.runtime import dse
-from repro.runtime.learner import staleness_weights
+from repro.runtime.learner import make_grad_reducer, staleness_weights
 
 
 def test_int8_ef_compression_contracts():
@@ -50,6 +50,68 @@ def test_compression_ratio():
     assert wire < 1024 * 4 / 3.9   # ≥ 3.9× smaller than f32
 
 
+def test_compressed_pmean_scale_parity_vs_uncompressed():
+    """Regression: the cross-pod reduce computes a *mean* of dequantized
+    values, but its old ``compressed_psum`` name/docstring promised a
+    psum — at 2 pods any caller trusting the documented sum semantics
+    got half the gradient scale.  ``compressed_pmean`` must track the
+    uncompressed ``jax.lax.pmean`` within quantization tolerance — and
+    in particular must NOT be off by the pod-count factor.  (vmap with an
+    axis name runs the real collective without needing devices.)"""
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.normal(size=(2, 32, 32)).astype(np.float32) * 1e-2)
+    err0 = jnp.zeros_like(g)
+
+    def reduce_one(gp, ep):
+        red, new_err = compress.compressed_pmean({"w": gp}, {"w": ep}, "pod")
+        return red["w"], new_err["w"]
+
+    reduced, _ = jax.vmap(reduce_one, axis_name="pod")(g, err0)
+    target = jnp.mean(g, axis=0)
+    # replicated output on both pods, equal to the f32 pmean within the
+    # int8 quantization step (scale = max|g|/127 per pod)
+    np.testing.assert_allclose(np.asarray(reduced[0]), np.asarray(reduced[1]))
+    tol = 2 * float(jnp.max(jnp.abs(g))) / 127.0
+    np.testing.assert_allclose(np.asarray(reduced[0]), np.asarray(target),
+                               atol=tol)
+    # the old documented-psum semantics would be 2× this mean: rule the
+    # scale mismatch out explicitly
+    scale = float(jnp.vdot(reduced[0], target) / jnp.vdot(target, target))
+    assert abs(scale - 1.0) < 0.05, scale
+
+
+def test_compressed_pmean_ef_contraction_through_reduce():
+    """Error feedback through the *actual* collective: summing the
+    compressed_pmean outputs over a gradient stream tracks the summed
+    true pmean (EF-SGD contraction), far better than compressing without
+    the carried error."""
+    rng = np.random.default_rng(1)
+    base = jnp.asarray(rng.normal(size=(2, 16, 16)).astype(np.float32) * 1e-2)
+
+    def reduce_one(gp, ep):
+        red, new_err = compress.compressed_pmean({"w": gp}, {"w": ep}, "pod")
+        return red["w"], new_err["w"]
+
+    vreduce = jax.vmap(reduce_one, axis_name="pod")
+    err = jnp.zeros_like(base)
+    tot_deq = jnp.zeros((16, 16))
+    tot_true = jnp.zeros((16, 16))
+    tot_no_ef = jnp.zeros((16, 16))
+    for i in range(50):
+        gi = base * (1 + 0.02 * i)
+        reduced, err = vreduce(gi, err)
+        tot_deq = tot_deq + reduced[0]
+        tot_true = tot_true + jnp.mean(gi, axis=0)
+        r0, _ = vreduce(gi, jnp.zeros_like(base))
+        tot_no_ef = tot_no_ef + r0[0]
+    rel = float(jnp.linalg.norm(tot_deq - tot_true) /
+                jnp.linalg.norm(tot_true))
+    rel_no_ef = float(jnp.linalg.norm(tot_no_ef - tot_true) /
+                      jnp.linalg.norm(tot_true))
+    assert rel < 2e-3, rel
+    assert rel < rel_no_ef
+
+
 def test_dse_solver_matches_ratio():
     # linear actor scaling, sub-linear learner scaling (paper Fig. 12 shape)
     actor = {x: 100.0 * x for x in range(1, 9)}
@@ -76,6 +138,89 @@ def test_dse_solver_rejects_infeasible_budget():
         dse.solve({}, learner, total=4)
     with pytest.raises(ValueError, match="curve"):
         dse.solve(actor, {}, total=4)
+
+
+def test_dse_solver_stays_on_profiled_hull():
+    """Regression: flat extrapolation below/above the profiled range let
+    ``solve`` return lane counts that were never measured, claiming the
+    nearest profiled point's throughput.  With actor throughput profiled
+    only at x ∈ {2, 4}, the old solver returned x_a=1 (same claimed
+    throughput as x=2, encountered first by iteration order); the search
+    must stay inside each curve's hull."""
+    actor = {2: 200.0, 4: 400.0}
+    learner = {2: 100.0, 4: 200.0}
+    res = dse.solve(actor, learner, total=20, update_interval=1.0)
+    assert 2 <= res.x_actor <= 4, res
+    assert 2 <= res.x_learner <= 4, res
+    # the perfect ratio match inside the hull: f_a(2)=200 = f_l(4)·1? no —
+    # f_a(2)=200 vs f_l(4)=200 ties err=0 with f_a(4)=400 vs … none; the
+    # tie-break maximizes work, so (4, 4) would need f_l=400 (off-hull):
+    # the solver must settle on the measured (2, 4) zero-error point
+    assert (res.x_actor, res.x_learner) == (2, 4)
+    assert res.actor_throughput == 200.0 and res.learner_throughput == 200.0
+    # a budget too small to reach both hulls has no measured allocation
+    with pytest.raises(ValueError, match="hull"):
+        dse.solve({8: 800.0}, {8: 300.0}, total=10)
+
+
+def _run_pod_data_reducer(reducer, grads, ages, ef):
+    """Drive a (pod, data) grad reducer over a (P, D, ...) stack with the
+    real collectives via nested vmap axis names."""
+    def cell(g, age, e):
+        red, e2 = reducer({"w": g}, age, {"w": e})
+        return red["w"], e2["w"]
+    f = jax.vmap(jax.vmap(cell, axis_name="data"), axis_name="pod")
+    return f(grads, ages, ef)
+
+
+def test_hierarchical_compressed_reduce_matches_pmean():
+    """compress_axis='pod' over a 2×2 mesh: the hierarchical reduce (f32
+    pmean over data, int8-EF mean over pod) tracks the global pmean
+    within quantization tolerance, replicated across all 4 cells."""
+    rng = np.random.default_rng(2)
+    g = jnp.asarray(rng.normal(size=(2, 2, 8, 8)).astype(np.float32) * 1e-2)
+    ef = jnp.zeros_like(g)
+    reducer = make_grad_reducer(("pod", "data"), compress_axis="pod")
+    red, _ = _run_pod_data_reducer(reducer, g, jnp.zeros((2, 2), jnp.int32),
+                                   ef)
+    target = jnp.mean(g, axis=(0, 1))
+    tol = 2 * float(jnp.max(jnp.abs(g))) / 127.0
+    for p in range(2):
+        for d in range(2):
+            np.testing.assert_allclose(np.asarray(red[p, d]),
+                                       np.asarray(target), atol=tol)
+
+
+def test_all_stale_compressed_round_zero_update_ef_held():
+    """With every shard past the staleness bound the compressed reduce
+    must return an *exactly* zero gradient and hold the EF buffer —
+    without the gate the quantizer folds the carried error into the zero
+    partials and emits ≈ Σ_pods ef_p as a phantom gradient."""
+    rng = np.random.default_rng(3)
+    g = jnp.asarray(rng.normal(size=(2, 2, 8, 8)).astype(np.float32))
+    ef = jnp.asarray(rng.normal(size=(2, 2, 8, 8)).astype(np.float32) * 1e-3)
+    reducer = make_grad_reducer(("pod", "data"), max_staleness=1,
+                                compress_axis="pod")
+    ages = jnp.full((2, 2), 7, jnp.int32)          # all past the bound
+    red, ef2 = _run_pod_data_reducer(reducer, g, ages, ef)
+    assert float(jnp.max(jnp.abs(red))) == 0.0
+    np.testing.assert_array_equal(np.asarray(ef2), np.asarray(ef))
+    # with one shard alive the reduce is that shard's gradient (weight 1)
+    # within quantization tolerance, and the EF buffer moves again
+    ages = jnp.asarray([[0, 7], [7, 7]], jnp.int32)
+    red, ef3 = _run_pod_data_reducer(reducer, g, ages, ef)
+    tol = 2 * float(jnp.max(jnp.abs(g) + jnp.abs(ef))) / 127.0
+    np.testing.assert_allclose(np.asarray(red[0, 0]), np.asarray(g[0, 0]),
+                               atol=tol)
+    assert not np.array_equal(np.asarray(ef3), np.asarray(ef))
+
+
+def test_grad_reducer_requires_ef_buffer_when_compressing():
+    reducer = make_grad_reducer(("pod", "data"), compress_axis="pod")
+    with pytest.raises(ValueError, match="error-feedback"):
+        reducer({"w": jnp.zeros((4,))}, None, ())
+    with pytest.raises(ValueError, match="axes"):
+        make_grad_reducer(("data",), compress_axis="pod")
 
 
 def test_staleness_weights_drop_stragglers():

@@ -118,6 +118,38 @@ def test_gather_kernel_rank3():
                                rtol=1e-6)
 
 
+def test_sample_kernel_padded_tail_clamp_parity():
+    """Regression: an fp-tail draw whose no-hit clamps cascade into the
+    leaf-level padding used to return the *pre-clamp* cutoff lane's value
+    (the padding zero) while the XLA path re-reads the priority after
+    clamping to ``capacity - 1`` — different (idx, priority) pairs across
+    backends.  The trigger is a tree whose internal sums slightly exceed
+    the leaf sums (real-world source: f32 delta-propagation drift in
+    ``update``): a draw at u → 1 then overshoots every leaf-row cumsum
+    and the clamp lands in padding deterministically."""
+    capacity, fanout = 10, 4
+    spec = sumtree.make_spec(capacity, fanout)
+    assert spec.num_leaves > capacity  # the padded tail exists
+    pri = jnp.asarray(np.linspace(0.5, 1.4, capacity).astype(np.float32))
+    tree = sumtree.build(spec, pri)
+    # bump the root and the last nonzero level-1 parent coherently, so
+    # both backends see the same total while every leaf row undershoots
+    tree = tree.at[0].add(0.05).at[spec.offsets[1] + 2].add(0.05)
+    u = jnp.asarray(np.concatenate([
+        np.full(4, 1.0 - 1e-7, np.float32),          # forced tail clamps
+        np.linspace(0.01, 0.95, 60).astype(np.float32),  # plus normal draws
+    ]))
+    xi, xp = sumtree.sample(spec, tree, u)
+    ki, kp = ops.sumtree_sample(spec, tree, u)
+    np.testing.assert_array_equal(np.asarray(xi), np.asarray(ki))
+    np.testing.assert_allclose(np.asarray(xp), np.asarray(kp),
+                               rtol=1e-5, atol=1e-6)
+    # the tail draws really exercised the clamp: they land on the last
+    # real leaf with its true (re-read) priority, not the padding zero
+    assert (np.asarray(xi)[:4] == capacity - 1).all()
+    assert (np.asarray(kp)[:4] > 0).all()
+
+
 def test_vmem_budget_fallback():
     """Above the VMEM budget the ops must fall back to the XLA path and
     still be exact."""

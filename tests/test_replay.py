@@ -112,6 +112,24 @@ def test_max_priority_tracked():
     assert (pri >= 5.0).all()  # new items enter at P_max (paper §IV-A1)
 
 
+def test_insert_batch_larger_than_capacity_rejected():
+    """Regression: a batch wider than the buffer used to wrap
+    ``insert_slots`` onto duplicate indices and issue duplicate-index
+    scatter writes with unspecified ordering (backend-dependent surviving
+    item).  Now a clear ValueError at the insert_begin boundary — and
+    through the convenience ``insert`` wrapper."""
+    rb = make(capacity=16)
+    st = rb.init()
+    with pytest.raises(ValueError, match="capacity"):
+        rb.insert_begin(st, 17)
+    with pytest.raises(ValueError, match="capacity"):
+        rb.insert(st, items(32))
+    # a full-capacity batch is the legal maximum (every slot distinct)
+    st = rb.insert(st, items(16))
+    assert int(st.count) == 16
+    assert len(np.unique(np.asarray(rb.insert_slots(st, 16)))) == 16
+
+
 def test_kernel_backed_buffer_equivalent():
     rb_j = make(capacity=512)
     rb_k = PrioritizedReplay(
