@@ -1,0 +1,138 @@
+"""Perf-regression gate: diff fresh BENCH json against the committed
+repo-root baselines.
+
+    PYTHONPATH=src python -m benchmarks.compare out/ [--baseline-dir .]
+
+Points are matched on their identity fields (backend, shard/pod counts,
+async knobs — everything except the measured throughput); a fresh point
+slower than its baseline by more than ``THRESHOLD`` fails the gate
+(exit 1).  Missing points on either side are tolerated with a note —
+sweeps grow and shrink across PRs, and a baseline measured on different
+hardware only gates *relative* regressions on matching points.  CI runs
+this as a non-blocking warning step first (``continue-on-error``), so
+the trajectory is visible before the gate has teeth.
+
+THRESHOLD is the one place the tolerance lives — CI, the cron sweep and
+local runs all read it from here (override per-run with --threshold).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Dict, Iterable, List, Tuple
+
+# >30% env-steps/s regression on a matching point fails the gate.
+# Generous on purpose: CI runners are noisy; this catches structural
+# slowdowns (a backend falling off a cliff), not jitter.
+THRESHOLD = 0.30
+
+BENCH_FILES = ("BENCH_fig9.json", "BENCH_fig10.json")
+
+# fields that identify a point (everything but the measurements)
+_MEASUREMENT_FIELDS = {"env_steps_per_s", "speedup_vs_sync"}
+
+
+def point_key(point: dict) -> Tuple:
+    """Identity of a measured point: every non-measurement field,
+    sorted — robust to schema growth (a new identity knob simply makes
+    old points unmatched, which is tolerated)."""
+    return tuple(sorted(
+        (k, v) for k, v in point.items() if k not in _MEASUREMENT_FIELDS))
+
+
+def _load_points(path: str) -> Dict[Tuple, float]:
+    with open(path) as f:
+        payload = json.load(f)
+    return {point_key(p): float(p["env_steps_per_s"])
+            for p in payload.get("points", ())}
+
+
+def compare_points(baseline: Dict[Tuple, float], fresh: Dict[Tuple, float],
+                   threshold: float) -> Tuple[List[str], List[str]]:
+    """Returns (regressions, notes) — regressions non-empty fails the
+    gate."""
+    regressions, notes = [], []
+    for key, base_v in sorted(baseline.items()):
+        label = ", ".join(f"{k}={v}" for k, v in key)
+        if key not in fresh:
+            notes.append(f"baseline-only point (skipped): {label}")
+            continue
+        fresh_v = fresh[key]
+        delta = (fresh_v - base_v) / base_v
+        line = (f"{label}: {base_v:,.0f} → {fresh_v:,.0f} env-steps/s "
+                f"({delta:+.1%})")
+        if delta < -threshold:
+            regressions.append(line)
+        else:
+            notes.append(line)
+    for key in sorted(set(fresh) - set(baseline)):
+        label = ", ".join(f"{k}={v}" for k, v in key)
+        notes.append(f"new point (no baseline): {label}")
+    return regressions, notes
+
+
+def compare_dirs(fresh_dir: str, baseline_dir: str, threshold: float,
+                 files: Iterable[str] = BENCH_FILES) -> int:
+    """Diff every BENCH file present in both dirs; returns the number of
+    regressed points (0 = gate passes)."""
+    total_regressions = 0
+    compared_any = False
+    for name in files:
+        fresh_path = os.path.join(fresh_dir, name)
+        base_path = os.path.join(baseline_dir, name)
+        if not os.path.exists(fresh_path):
+            print(f"-- {name}: no fresh measurement (skipped)")
+            continue
+        if not os.path.exists(base_path):
+            print(f"-- {name}: no committed baseline (skipped)")
+            continue
+        compared_any = True
+        baseline_pts = _load_points(base_path)
+        fresh_pts = _load_points(fresh_path)
+        regressions, notes = compare_points(baseline_pts, fresh_pts,
+                                            threshold)
+        print(f"-- {name} (fail below -{threshold:.0%}):")
+        for line in notes:
+            print(f"   {line}")
+        for line in regressions:
+            print(f"   REGRESSION {line}")
+        matched = len(set(baseline_pts) & set(fresh_pts))
+        if not matched:
+            # an identity-field change (e.g. a new sweep env count) can
+            # de-match every point at once — say so loudly, or a real
+            # regression would sail through a vacuously green gate
+            print(f"   WARNING: 0 matching points between baseline and "
+                  f"fresh {name} — the gate checked nothing; "
+                  "re-commit baselines from a fresh --emit-json run")
+        total_regressions += len(regressions)
+    if not compared_any:
+        print("no BENCH file present on both sides — nothing gated")
+    return total_regressions
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("fresh_dir",
+                    help="directory with freshly emitted BENCH json "
+                         "(benchmarks/run.py --emit-json)")
+    ap.add_argument("--baseline-dir", default=".",
+                    help="directory with the committed baselines "
+                         "(default: repo root)")
+    ap.add_argument("--threshold", type=float, default=THRESHOLD,
+                    help="relative env-steps/s drop that fails "
+                         f"(default {THRESHOLD})")
+    args = ap.parse_args()
+    n = compare_dirs(args.fresh_dir, args.baseline_dir, args.threshold)
+    if n:
+        print(f"FAIL: {n} regressed point(s) beyond "
+              f"-{args.threshold:.0%}", file=sys.stderr)
+        return 1
+    print("perf gate: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -133,7 +133,7 @@ def pod_sharded_throughput(n_pods: int, n_data: int, compress: bool,
         n_pods * n_data, compress, n_envs, iters)
 
 
-def _run_worker(worker_args, n_devices):
+def _run_worker(worker_args, n_devices, n_envs=16, iters=120):
     """Launch this script as a subprocess with the forced device count
     (the XLA flag must be set before jax initializes) and parse the
     STEPS_PER_S= line."""
@@ -146,10 +146,13 @@ def _run_worker(worker_args, n_devices):
     src = os.path.join(root, "src")
     env["PYTHONPATH"] = (f"{src}:{env['PYTHONPATH']}"
                          if env.get("PYTHONPATH") else src)
+    worker_args = worker_args + ["--n-envs", str(n_envs),
+                                 "--iters", str(iters)]
     r = subprocess.run([sys.executable, script] + worker_args,
                        capture_output=True, text=True, timeout=1200,
                        env=env, cwd=root)
-    out = [l for l in r.stdout.splitlines() if l.startswith("STEPS_PER_S=")]
+    out = [line for line in r.stdout.splitlines()
+           if line.startswith("STEPS_PER_S=")]
     if not out:
         raise RuntimeError(
             f"worker {worker_args} failed:\n{r.stdout}\n{r.stderr}")
@@ -172,24 +175,43 @@ def run_shard_sweep(shard_counts, csv=True):
 
 def shard_pod_points(shard_counts=(1, 2), pod_specs=((2, 1, False),
                                                      (2, 2, False),
-                                                     (2, 2, True))):
+                                                     (2, 2, True)),
+                     n_envs=16, iters=120):
     """Machine-readable env-steps/s per shard/pod count for
     BENCH_fig10.json: 1-D data-axis counts plus (n_pods, n_data,
     compressed) two-axis points, each in its own forced-device
     subprocess."""
     points = []
     for n in shard_counts:
-        t = _run_worker(["--_sharded-worker", str(n)], n)
+        t = _run_worker(["--_sharded-worker", str(n)], n,
+                        n_envs=n_envs, iters=iters)
         points.append({"backend": "sharded", "shards": n, "pods": 1,
-                       "compressed": False, "env_steps_per_s": round(t, 2)})
+                       "compressed": False, "n_envs": n_envs,
+                       "env_steps_per_s": round(t, 2)})
     for n_pods, n_data, compress in pod_specs:
         t = _run_worker(
             ["--_pod-worker", f"{n_pods},{n_data},{int(compress)}"],
-            n_pods * n_data)
+            n_pods * n_data, n_envs=n_envs, iters=iters)
         points.append({"backend": "sharded_pod_data", "shards": n_data,
                        "pods": n_pods, "compressed": bool(compress),
+                       "n_envs": n_envs,
                        "env_steps_per_s": round(t, 2)})
     return points
+
+
+def realize_plan(plan, iters=120):
+    """Measured env-steps/s of a planner-chosen config — in-process when
+    the plan needs no mesh, else in a forced-device subprocess (the
+    ``--_plan-worker`` mode) so the device count is set before jax
+    initializes."""
+    if plan.n_devices <= 1:
+        from benchmarks.fig9_fanout import plan_throughput
+        return plan_throughput(plan, iters=iters)
+    spec = (f"{plan.backend},{plan.n_pods},{plan.n_data},"
+            f"{plan.publish_interval},{plan.max_staleness},"
+            f"{int(plan.compress_pod_reduce)}")
+    return _run_worker(["--_plan-worker", spec], plan.n_devices,
+                       n_envs=plan.n_envs, iters=iters)
 
 
 if __name__ == "__main__":
@@ -197,16 +219,32 @@ if __name__ == "__main__":
     ap.add_argument("--shards", default="",
                     help="comma-separated shard counts, e.g. 1,2,4 — "
                          "benchmarks the ShardedExecutor per count")
+    ap.add_argument("--n-envs", type=int, default=16)
+    ap.add_argument("--iters", type=int, default=120)
     ap.add_argument("--_sharded-worker", type=int, default=0,
                     help=argparse.SUPPRESS)
     ap.add_argument("--_pod-worker", default="",
                     help=argparse.SUPPRESS)   # "n_pods,n_data,compress01"
+    ap.add_argument("--_plan-worker", default="",
+                    help=argparse.SUPPRESS)
+    # "backend,n_pods,n_data,publish_interval,max_staleness,compress01"
     args = ap.parse_args()
     if args._sharded_worker:
-        print(f"STEPS_PER_S={sharded_throughput(args._sharded_worker):.2f}")
+        t = sharded_throughput(args._sharded_worker, n_envs=args.n_envs,
+                               iters=args.iters)
+        print(f"STEPS_PER_S={t:.2f}")
     elif args._pod_worker:
         p, d, c = (int(x) for x in args._pod_worker.split(","))
-        print(f"STEPS_PER_S={pod_sharded_throughput(p, d, bool(c)):.2f}")
+        t = pod_sharded_throughput(p, d, bool(c), n_envs=args.n_envs,
+                                   iters=args.iters)
+        print(f"STEPS_PER_S={t:.2f}")
+    elif args._plan_worker:
+        from benchmarks.fig9_fanout import _make_runtime_executor, _steps_per_s
+        backend, p, d, pi, ms, c = args._plan_worker.split(",")
+        ex = _make_runtime_executor(
+            backend, args.n_envs, int(d), int(pi), int(ms),
+            pods=int(p) if int(p) > 1 else 0, compress=bool(int(c)))
+        print(f"STEPS_PER_S={_steps_per_s(ex, iters=args.iters):.2f}")
     elif args.shards:
         run_shard_sweep([int(x) for x in args.shards.split(",")])
     else:

@@ -88,7 +88,15 @@ def run(csv=True):
 
 
 def _make_runtime_executor(kind, n_envs, shards, publish_interval,
-                           max_staleness, scan_chunk=20):
+                           max_staleness, scan_chunk=20, pods=0,
+                           compress=False):
+    """Build any runtime-backend executor for a throughput measurement:
+    ``kind`` ∈ {fused, sharded, async}; ``shards`` is the data-axis
+    extent (0 = no mesh), ``pods`` adds the slow pod axis (needs
+    ``pods × shards`` forced devices), ``compress`` switches the
+    cross-pod reduce to the int8-EF compressed mean.  This is also the
+    generic worker behind ``planner``-chosen configs
+    (fig10_scalability's ``--_plan-worker`` / benchmarks/run.py)."""
     import functools
 
     from repro.agents.dqn import DQNConfig, make_dqn
@@ -112,19 +120,23 @@ def _make_runtime_executor(kind, n_envs, shards, publish_interval,
     if shards:
         from repro.core.distributed import (ShardedPrioritizedReplay,
                                             ShardedReplayConfig)
-        from repro.launch.mesh import data_mesh
+        from repro.launch.mesh import data_mesh, pod_data_mesh
 
+        n_cells = shards * max(1, pods)
+        axis_names = ("pod", "data") if pods else ("data",)
         replay = ShardedPrioritizedReplay(
-            ShardedReplayConfig(capacity_per_shard=50_000 // shards,
-                                fanout=128), example)
-        mesh = data_mesh(shards)
+            ShardedReplayConfig(capacity_per_shard=50_000 // n_cells,
+                                fanout=128, axis_names=axis_names), example)
+        mesh = pod_data_mesh(pods, shards) if pods else data_mesh(shards)
         if kind == "async":
             return AsyncExecutor(agent, replay, env_fn, cfg, n_envs,
                                  publish_interval=publish_interval,
                                  max_staleness=max_staleness, mesh=mesh,
-                                 scan_chunk=scan_chunk)
+                                 scan_chunk=scan_chunk,
+                                 compress_pod_reduce=compress)
         return ShardedExecutor(agent, replay, env_fn, cfg, n_envs, mesh,
-                               scan_chunk=scan_chunk)
+                               scan_chunk=scan_chunk,
+                               compress_pod_reduce=compress)
     replay = PrioritizedReplay(ReplayConfig(capacity=50_000, fanout=128),
                                example)
     if kind == "async":
@@ -134,6 +146,17 @@ def _make_runtime_executor(kind, n_envs, shards, publish_interval,
                              scan_chunk=scan_chunk)
     return FusedExecutor(agent, replay, env_fn, cfg, n_envs,
                          scan_chunk=scan_chunk)
+
+
+def plan_throughput(plan, iters=120):
+    """env-steps/s of a planner-selected config (the realized side of
+    BENCH_plan.json's predicted-vs-realized record).  Must run inside a
+    process whose forced device count ≥ ``plan.n_devices``."""
+    ex = _make_runtime_executor(
+        plan.backend, plan.n_envs, plan.n_data, plan.publish_interval,
+        plan.max_staleness, pods=plan.n_pods if plan.n_pods > 1 else 0,
+        compress=plan.compress_pod_reduce)
+    return _steps_per_s(ex, iters=iters)
 
 
 def _steps_per_s(ex, iters=120):
@@ -218,7 +241,7 @@ if __name__ == "__main__":
                       existing)
         if m and int(m.group(1)) != args.shards:
             raise SystemExit(
-                f"XLA_FLAGS already pins "
+                "XLA_FLAGS already pins "
                 f"{m.group(1)} host devices, conflicting with "
                 f"--shards {args.shards}; unset it or make them agree")
         if not m:

@@ -5,7 +5,7 @@
     fig9  — K-ary sum tree vs binary tree, fanout sweep (per-op µs, speedup)
     fig10 — DQN/DDPG/SAC scalability vs parallel actor lanes
     fig11 — our buffer plugged into a naive trainer (iteration µs, speedup)
-    fig12 — DSE profile curves + Eq. 5 solution (realized ratio)
+    fig12 — DSE profile curves + Eq. 5 solution via the runtime planner
     roofline — §Roofline table from the dry-run artifacts (if present)
 
 Run: PYTHONPATH=src python -m benchmarks.run [--only fig9,...]
@@ -18,10 +18,18 @@ Machine-readable perf trajectory: ``--emit-json DIR`` writes
                        counts and 2-D pod×data points with and without
                        the int8-EF compressed cross-pod reduce; one
                        forced-device subprocess per point)
+    BENCH_plan.json  — the runtime config the DSE planner
+                       (runtime/planner.py) selected from those points,
+                       with predicted vs realized env-steps/s and the
+                       Eq. 5 lane curves it solved over
 
-so CI and the roadmap can diff throughput across PRs instead of eyeballing
-CSV.  ``--emit-json`` runs only the two executor sweeps (no tree/figure
-suites) unless ``--only`` also names suites.
+so CI and the roadmap can diff throughput across PRs instead of
+eyeballing CSV — the json is validated by ``benchmarks/schema.py`` and
+diffed against the committed repo-root baselines by
+``benchmarks/compare.py``.  ``--emit-json`` runs only the executor
+sweeps (no tree/figure suites) unless ``--only`` also names suites.
+``--smoke`` shrinks every sweep to a CI-sized budget (fewer points,
+fewer iterations) — same schema, same code paths.
 """
 
 import argparse
@@ -31,22 +39,26 @@ import sys
 import traceback
 
 
-def emit_json(out_dir: str) -> None:
-    from benchmarks import fig9_fanout, fig10_scalability
+def emit_json(out_dir: str, smoke: bool = False) -> None:
+    from benchmarks import fig10_scalability
+    from repro.runtime import planner
 
     os.makedirs(out_dir, exist_ok=True)
+    prof = planner.profile(smoke=smoke)
     fig9 = {
         "figure": "fig9",
         "metric": "env_steps_per_s",
-        "points": fig9_fanout.executor_backend_points(),
+        "smoke": smoke,
+        "points": prof["fig9_points"],
     }
     fig10 = {
         "figure": "fig10",
         "metric": "env_steps_per_s",
-        "points": fig10_scalability.shard_pod_points(),
+        "smoke": smoke,
+        "points": prof["fig10_points"],
     }
-    for name, payload in (("BENCH_fig9.json", fig9),
-                          ("BENCH_fig10.json", fig10)):
+    for name, payload in ((planner.FIG9_JSON, fig9),
+                          (planner.FIG10_JSON, fig10)):
         path = os.path.join(out_dir, name)
         with open(path, "w") as f:
             json.dump(payload, f, indent=2)
@@ -54,21 +66,46 @@ def emit_json(out_dir: str) -> None:
         print(f"# wrote {path} ({len(payload['points'])} points)",
               file=sys.stderr)
 
+    pc = planner.plan(
+        prof["fig9_points"], prof["fig10_points"],
+        actor_curve=prof["actor_curve"],
+        learner_curve=prof["learner_curve"],
+        source="emit-json")
+    realized = fig10_scalability.realize_plan(pc, iters=40 if smoke else 120)
+    plan_path = os.path.join(out_dir, planner.PLAN_JSON)
+    planner.save_plan(
+        pc, plan_path,
+        realized_env_steps_per_s=round(realized, 2),
+        curves={
+            "actor": {str(k): round(v, 2)
+                      for k, v in prof["actor_curve"].items()},
+            "learner": {str(k): round(v, 2)
+                        for k, v in prof["learner_curve"].items()},
+        })
+    print(f"# wrote {plan_path}: {pc.describe()}", file=sys.stderr)
+    print(f"#   realized {realized:,.0f} env-steps/s "
+          f"(predicted {pc.predicted_env_steps_per_s:,.0f})",
+          file=sys.stderr)
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset, e.g. fig9,roofline")
     ap.add_argument("--emit-json", default=None, metavar="DIR",
-                    help="write BENCH_fig9.json / BENCH_fig10.json "
-                         "(env-steps/s per executor backend and shard/pod "
-                         "count) into DIR")
+                    help="write BENCH_fig9.json / BENCH_fig10.json / "
+                         "BENCH_plan.json (env-steps/s per executor "
+                         "backend and shard/pod count, plus the planner-"
+                         "selected config) into DIR")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized budget: fewer sweep points and "
+                         "iterations, same schema and code paths")
     args = ap.parse_args()
 
     failed = []
     if args.emit_json:
         try:
-            emit_json(args.emit_json)
+            emit_json(args.emit_json, smoke=args.smoke)
         except Exception:  # noqa: BLE001 — keep the harness sweeping
             failed.append("emit-json")
             traceback.print_exc()

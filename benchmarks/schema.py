@@ -1,0 +1,157 @@
+"""Schema for the machine-readable BENCH json (the perf trajectory CI
+gates on).
+
+One place defines what ``benchmarks/run.py --emit-json`` may write and
+what ``benchmarks/compare.py`` and ``runtime/planner.py`` may assume:
+every payload carries ``figure``/``metric``, and every point's
+``env_steps_per_s`` is in one shared unit (env steps per second) — the
+invariant that makes cross-file candidate scoring in the planner legal.
+
+Dependency-free on purpose (no jsonschema): CI validates the artifacts
+with the same stdlib-only code the planner imports.
+
+    PYTHONPATH=src python -m benchmarks.schema out/BENCH_fig9.json ...
+
+exits non-zero on the first invalid file.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from typing import Any, Dict, List
+
+# field name → (type(s), required) per point, keyed by payload "figure".
+# bool is checked before int (bool is an int subclass in Python).
+_COMMON_POINT = {
+    "env_steps_per_s": ((int, float), True),
+    "n_envs": (int, False),
+}
+
+POINT_FIELDS: Dict[str, Dict[str, tuple]] = {
+    "fig9": {
+        **_COMMON_POINT,
+        "backend": (str, True),
+        "shards": (int, True),
+        "pods": (int, True),
+        "publish_interval": (int, True),
+        "max_staleness": (int, True),
+        "speedup_vs_sync": ((int, float), False),
+    },
+    "fig10": {
+        **_COMMON_POINT,
+        "backend": (str, True),
+        "shards": (int, True),
+        "pods": (int, True),
+        "compressed": (bool, True),
+    },
+}
+
+PLAN_CONFIG_FIELDS: Dict[str, tuple] = {
+    "backend": (str, True),
+    "n_pods": (int, True),
+    "n_data": (int, True),
+    "publish_interval": (int, True),
+    "max_staleness": (int, True),
+    "compress_pod_reduce": (bool, True),
+    "n_envs": (int, True),
+    "update_interval": (int, True),
+    "x_actor": (int, True),
+    "x_learner": (int, True),
+    "predicted_env_steps_per_s": ((int, float), True),
+    "source": (str, True),
+}
+
+METRIC = "env_steps_per_s"
+
+
+class SchemaError(ValueError):
+    """A BENCH payload that CI must not gate on."""
+
+
+def _check_fields(obj: Dict[str, Any], fields: Dict[str, tuple],
+                  where: str) -> None:
+    if not isinstance(obj, dict):
+        raise SchemaError(f"{where}: expected an object, got {type(obj).__name__}")
+    for name, (types, required) in fields.items():
+        if name not in obj:
+            if required:
+                raise SchemaError(f"{where}: missing required field {name!r}")
+            continue
+        val = obj[name]
+        # bools pass isinstance(..., int); only admit them where declared
+        if isinstance(val, bool) and types is not bool and bool not in (
+                types if isinstance(types, tuple) else (types,)):
+            raise SchemaError(
+                f"{where}.{name}: expected {types}, got bool")
+        if not isinstance(val, types):
+            raise SchemaError(
+                f"{where}.{name}: expected {types}, got {type(val).__name__} "
+                f"({val!r})")
+    unknown = set(obj) - set(fields)
+    if unknown:
+        raise SchemaError(f"{where}: unknown fields {sorted(unknown)}")
+
+
+def validate(payload: Dict[str, Any]) -> str:
+    """Validate one BENCH payload; returns its figure name.  Raises
+    ``SchemaError`` with the offending path in the message."""
+    if not isinstance(payload, dict):
+        raise SchemaError(f"payload is {type(payload).__name__}, not an object")
+    figure = payload.get("figure")
+    if figure in POINT_FIELDS:
+        if payload.get("metric") != METRIC:
+            raise SchemaError(f"{figure}: metric must be {METRIC!r}, got "
+                              f"{payload.get('metric')!r}")
+        points = payload.get("points")
+        if not isinstance(points, list) or not points:
+            raise SchemaError(f"{figure}: 'points' must be a non-empty list")
+        for i, p in enumerate(points):
+            _check_fields(p, POINT_FIELDS[figure], f"{figure}.points[{i}]")
+            if p["env_steps_per_s"] <= 0:
+                raise SchemaError(
+                    f"{figure}.points[{i}].env_steps_per_s must be > 0")
+        return figure
+    if figure == "plan":
+        if payload.get("metric") != METRIC:
+            raise SchemaError(f"plan: metric must be {METRIC!r}, got "
+                              f"{payload.get('metric')!r}")
+        _check_fields(payload.get("config"), PLAN_CONFIG_FIELDS, "plan.config")
+        realized = payload.get("realized_env_steps_per_s")
+        if realized is not None and not isinstance(realized, (int, float)):
+            raise SchemaError("plan.realized_env_steps_per_s must be a "
+                              "number or null")
+        return figure
+    raise SchemaError(f"unknown figure {figure!r} — expected one of "
+                      f"{sorted(POINT_FIELDS) + ['plan']}")
+
+
+def validate_file(path: str) -> str:
+    with open(path) as f:
+        try:
+            payload = json.load(f)
+        except json.JSONDecodeError as e:
+            raise SchemaError(f"{path}: not valid json ({e})") from e
+    try:
+        return validate(payload)
+    except SchemaError as e:
+        raise SchemaError(f"{path}: {e}") from e
+
+
+def main(argv: List[str]) -> int:
+    if not argv:
+        print("usage: python -m benchmarks.schema BENCH_*.json ...",
+              file=sys.stderr)
+        return 2
+    for path in argv:
+        figure = validate_file(path)
+        print(f"OK {path} ({figure})")
+    return 0
+
+
+if __name__ == "__main__":
+    try:
+        sys.exit(main(sys.argv[1:]))
+    except SchemaError as e:
+        print(f"SCHEMA ERROR: {e}", file=sys.stderr)
+        sys.exit(1)

@@ -1,13 +1,20 @@
 """DSE auto-tuning (paper §V-D): profile collection/consumption curves on
-this machine and print the Eq. 5 actor/learner allocation.
+this machine and print the Eq. 5 actor/learner allocation — and, when a
+BENCH json directory is given, the full planner-selected runtime config
+(runtime/planner.py, DESIGN.md §8).
 
     PYTHONPATH=src python examples/dse_autotune.py --total 8 --ratio 1
+
+    # full-config planning from measured BENCH json
+    PYTHONPATH=src python -m benchmarks.run --emit-json out/ --smoke
+    PYTHONPATH=src python examples/dse_autotune.py --bench-json out/
 """
 
 import argparse
+import os
 
 from benchmarks.fig12_dse import actor_throughput, learner_throughput
-from repro.runtime import dse
+from repro.runtime import dse, planner
 
 
 def main():
@@ -15,6 +22,10 @@ def main():
     ap.add_argument("--total", type=int, default=8)
     ap.add_argument("--ratio", type=float, default=1.0,
                     help="update_interval (collect/consume target)")
+    ap.add_argument("--bench-json", default=None, metavar="DIR",
+                    help="also plan the full runtime config from the "
+                         "BENCH json in DIR (benchmarks/run.py "
+                         "--emit-json output)")
     args = ap.parse_args()
 
     lanes = [1, 2, 4, 8]
@@ -24,12 +35,31 @@ def main():
     fl = dse.profile_curve(learner_throughput, lanes)
     for x in lanes:
         print(f"  x={x}: f_a={fa[x]:,.0f} steps/s   f_l={fl[x]:,.0f} items/s")
-    res = dse.solve(fa, fl, args.total, args.ratio)
+    res = planner.solve_lanes(fa, fl, args.total, args.ratio)
     print(f"\nEq.5 solution for total={args.total}, "
           f"update_interval={args.ratio}:")
     print(f"  actors x_a={res.x_actor} (→ {res.actor_throughput:,.0f}/s), "
           f"learners x_l={res.x_learner} (→ {res.learner_throughput:,.0f}/s)")
     print(f"  realized ratio {res.ratio:.2f} (target {res.target_ratio})")
+
+    if args.bench_json:
+        # executable configs carry an integer update_interval
+        # (LoopConfig); round a fractional --ratio rather than silently
+        # truncating it, and say so
+        ui = max(1, round(args.ratio))
+        if ui != args.ratio:
+            print(f"\nnote: --ratio {args.ratio:g} rounded to "
+                  f"update_interval={ui} for the executable plan")
+        pc = planner.plan_from_json(
+            args.bench_json, actor_curve=fa, learner_curve=fl,
+            total_lanes=args.total, update_interval=ui)
+        # write the plan just computed, so the printed command runs THIS
+        # config — not whatever an earlier --emit-json left in the dir
+        plan_path = os.path.join(args.bench_json, planner.PLAN_JSON)
+        planner.save_plan(pc, plan_path)
+        print(f"\nplanner-selected config: {pc.describe()}")
+        print("  run it:  PYTHONPATH=src python examples/quickstart.py "
+              f"--plan {plan_path}")
 
 
 if __name__ == "__main__":

@@ -19,6 +19,12 @@ through the executor API (runtime/executors.py).
     # pod and cross pods int8-EF-compressed (DESIGN.md §7)
     PYTHONPATH=src python examples/quickstart.py --pods 2 --shards 2 \\
         --compress-pod-reduce
+
+    # planner-selected runtime (DESIGN.md §8): run the config the DSE
+    # planner chose from measured throughput — first
+    #   PYTHONPATH=src python -m benchmarks.run --emit-json out/ [--smoke]
+    # then train straight from the emitted plan:
+    PYTHONPATH=src python examples/quickstart.py --plan out/BENCH_plan.json
 """
 
 import argparse
@@ -28,6 +34,11 @@ import os
 
 def main():
     ap = argparse.ArgumentParser()
+    ap.add_argument("--plan", default=None, metavar="BENCH_plan.json",
+                    help="instantiate the executor/mesh a "
+                         "runtime.planner plan selected (overrides "
+                         "--shards/--pods/--executor/--publish-interval/"
+                         "--max-staleness/--n-envs/--update-interval)")
     ap.add_argument("--iterations", type=int, default=3000)
     ap.add_argument("--n-envs", type=int, default=8, help="parallel actors")
     ap.add_argument("--fanout", type=int, default=128,
@@ -58,13 +69,23 @@ def main():
                          "(sharded async executor)")
     args = ap.parse_args()
 
+    plan = None
+    if args.plan:
+        # planner + plan loading are jax-free on purpose: the forced
+        # device count must be known before the first jax import
+        from repro.runtime.planner import load_plan
+
+        plan = load_plan(args.plan)
+        print(f"plan: {plan.describe()}")
+
     if args.pods and not args.shards:
         args.shards = 1                       # pods alone: P×1 mesh
     if args.compress_pod_reduce and not args.pods:
         ap.error("--compress-pod-reduce needs --pods (the compressed leg "
                  "crosses the pod axis)")
-    n_devices = args.shards * max(1, args.pods)
-    if n_devices:
+    n_devices = (plan.n_devices if plan
+                 else args.shards * max(1, args.pods))
+    if n_devices > 1:
         # must be set before the first jax import; append so a user's
         # existing XLA_FLAGS are kept
         flag = f"--xla_force_host_platform_device_count={n_devices}"
@@ -82,7 +103,8 @@ def main():
     from repro.envs.classic import make_vec
     from repro.launch.mesh import data_mesh, pod_data_mesh
     from repro.runtime.executors import (AsyncExecutor, FusedExecutor,
-                                         ShardedExecutor)
+                                         ShardedExecutor,
+                                         executor_from_plan)
     from repro.runtime.loop import LoopConfig
 
     env_fn = functools.partial(make_vec, "cartpole")
@@ -98,7 +120,15 @@ def main():
     cfg = LoopConfig(batch_size=64, warmup=500, epsilon=0.15,
                      update_interval=args.update_interval)
 
-    if args.shards:
+    if plan:
+        ex = executor_from_plan(plan, agent, env_fn, cfg, example,
+                                fanout=args.fanout,
+                                tree_backend=args.backend)
+        print(f"planner-selected {plan.backend} executor on "
+              f"{plan.n_devices} device(s), {plan.n_envs} envs "
+              f"(predicted {plan.predicted_env_steps_per_s:,.0f} "
+              "env-steps/s)")
+    elif args.shards:
         if args.pods:
             mesh = pod_data_mesh(args.pods, args.shards)
             axis_names = ("pod", "data")
@@ -138,7 +168,7 @@ def main():
         if args.executor == "async":
             ex = AsyncExecutor(agent, replay, env_fn, cfg, args.n_envs,
                                publish_interval=args.publish_interval)
-            print(f"async fused executor: actors on a copy republished "
+            print("async fused executor: actors on a copy republished "
                   f"every {args.publish_interval} iters")
         else:
             ex = FusedExecutor(agent, replay, env_fn, cfg, args.n_envs)
@@ -148,9 +178,9 @@ def main():
 
     state, hist = ex.train(args.iterations, jax.random.PRNGKey(0),
                            log_every=256)
-    print(f"\nfinal mean episode return: "
+    print("\nfinal mean episode return: "
           f"{float(hist['mean_episode_return'][-1]):.1f} "
-          f"(CartPole solved ≈ 475; random ≈ 10)")
+          "(CartPole solved ≈ 475; random ≈ 10)")
 
 
 if __name__ == "__main__":

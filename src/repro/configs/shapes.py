@@ -13,7 +13,7 @@ allocation — for every model input of the given (arch, shape) cell.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -23,7 +23,7 @@ each call sees its local shard and the mesh axis name(s).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Sequence, Tuple
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -25,7 +25,6 @@ New insertions receive P_max (paper §IV-A1).
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any, Tuple
 
 import jax

@@ -30,7 +30,6 @@ sequential application:
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import List, Tuple
 
 import jax

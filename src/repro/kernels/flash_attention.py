@@ -23,7 +23,6 @@ from __future__ import annotations
 import functools
 import math
 import os
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -109,9 +108,9 @@ def _fwd_kernel(attention, window, causal, scale,
 
     @pl.when(ki == nk - 1)
     def _finalize():
-        l = jnp.maximum(l_scr[...], 1e-30)
-        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
-        lse_ref[0] = (m_scr[...] + jnp.log(l))[:, 0]
+        lsum = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / lsum).astype(o_ref.dtype)
+        lse_ref[0] = (m_scr[...] + jnp.log(lsum))[:, 0]
 
 
 def _fwd(q, k, v, glob, attention, window, causal, bq, bk, interpret):

@@ -13,7 +13,6 @@ is revisited across the N dimension (accumulator pattern).
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

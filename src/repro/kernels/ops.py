@@ -18,7 +18,7 @@ Responsibilities:
 from __future__ import annotations
 
 import functools
-from typing import List, Tuple
+from typing import List
 
 import jax
 import jax.numpy as jnp

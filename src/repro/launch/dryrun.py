@@ -24,7 +24,7 @@ import functools
 import json
 import time
 import traceback
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

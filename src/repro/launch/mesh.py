@@ -69,6 +69,21 @@ def pod_data_mesh(n_pods: int, n_data: int, axes: Tuple[str, str] = ("pod", "dat
         np.asarray(devices[:n]).reshape(n_pods, n_data), axes)
 
 
+def mesh_from_plan(plan):
+    """Mesh for a planner-selected runtime config
+    (``runtime.planner.PlannedConfig``, duck-typed on
+    ``n_pods``/``n_data``): ``None`` for the fused program, a 1-D data
+    mesh for single-pod sharding, the two-axis (pod, data) mesh when the
+    plan crosses pods.  The caller must have forced
+    ``plan.n_devices`` host devices before the first jax call —
+    quickstart's ``--plan`` path does."""
+    if not plan.n_data:
+        return None
+    if plan.n_pods > 1:
+        return pod_data_mesh(plan.n_pods, plan.n_data)
+    return data_mesh(plan.n_data)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")

@@ -11,7 +11,6 @@ from __future__ import annotations
 from typing import Any, Dict, Tuple
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.models import backbone

@@ -9,13 +9,20 @@ On this host it runs real steps with a reduced config:
 On a pod, drop --smoke and point --mesh at the production topology
 (16x16 or 2x16x16); the same code path lowers — the dry-run proves it
 compiles for every assigned arch.
+
+``--plan BENCH_plan.json`` applies a DSE-planner config
+(runtime/planner.py, DESIGN.md §8): the planned actor-lane count
+becomes ``--n-envs``, the planned device count is forced before jax
+initializes, and the planned (pod×)data mesh is installed as the
+ambient mesh (``launch.mesh.mesh_from_plan``).  The RL-executor-level
+instantiation of a plan lives in ``runtime.executors.
+executor_from_plan`` (see examples/quickstart.py --plan).
 """
 
 import argparse
+import contextlib
 import functools
 import time
-
-import numpy as np
 
 
 def main():
@@ -29,9 +36,31 @@ def main():
     ap.add_argument("--mesh", default="host",
                     help="'host' | '16x16' | '2x16x16' (pods need the "
                          "512-device dry-run env)")
+    ap.add_argument("--plan", default=None, metavar="BENCH_plan.json",
+                    help="apply a runtime.planner plan: planned n_envs, "
+                         "forced device count and ambient (pod×)data "
+                         "mesh (overrides --n-envs; --mesh must stay "
+                         "'host')")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=25)
     args = ap.parse_args()
+
+    plan = None
+    if args.plan:
+        if args.mesh != "host":
+            ap.error("--plan carries its own mesh — drop --mesh")
+        # jax-free load: the forced device count must precede jax init
+        from repro.runtime.planner import load_plan
+
+        plan = load_plan(args.plan)
+        args.n_envs = plan.n_envs
+        print(f"plan: {plan.describe()}")
+        if plan.n_devices > 1:
+            import os
+            os.environ["XLA_FLAGS"] = (
+                f"{os.environ.get('XLA_FLAGS', '')} "
+                "--xla_force_host_platform_device_count="
+                f"{plan.n_devices}").strip()
 
     if args.mesh != "host":
         import os
@@ -45,13 +74,20 @@ def main():
     from repro.configs import get_config
     from repro.core.replay import PrioritizedReplay, ReplayConfig
     from repro.envs.token_mdp import TokenMDPSpec, make
-    from repro.launch.mesh import make_production_mesh, sharding_config, small_mesh
+    from repro.launch.mesh import (make_production_mesh, mesh_from_plan,
+                                   sharding_config, use_mesh)
     from repro.models import backbone
     from repro.models.config import NO_SHARDING
     from repro.optim import adam
 
     cfg = get_config(args.arch, smoke=args.smoke)
-    if args.mesh == "host":
+    if plan is not None:
+        # the planned (pod×)data mesh becomes the ambient mesh; the
+        # token model itself stays unsharded (NO_SHARDING) — the plan's
+        # mesh carries the actor/learner data axes, not tensor parallel
+        shd = NO_SHARDING
+        mesh = mesh_from_plan(plan)
+    elif args.mesh == "host":
         shd = NO_SHARDING
         mesh = None
     else:
@@ -63,7 +99,9 @@ def main():
     key = jax.random.PRNGKey(0)
     state = token_dqn.init_train_state(cfg, tcfg, key)
     n_params = sum(x.size for x in jax.tree.leaves(state.params))
-    print(f"arch={cfg.name} params={n_params/1e6:.1f}M mesh={args.mesh}")
+    mesh_desc = (f"plan:{plan.n_pods}x{plan.n_data}" if plan is not None
+                 else args.mesh)
+    print(f"arch={cfg.name} params={n_params/1e6:.1f}M mesh={mesh_desc}")
 
     mdp = TokenMDPSpec(vocab=cfg.vocab_size)
     reset, step_env, optimal = make(mdp, jax.random.fold_in(key, 1), args.n_envs)
@@ -106,6 +144,11 @@ def main():
     if start is not None:
         print(f"resumed from step {start} (fault-tolerant restart)")
 
+    stack = contextlib.ExitStack()
+    if plan is not None and mesh is not None:
+        # planned data mesh as the ambient mesh for the training steps
+        stack.enter_context(use_mesh(mesh))
+
     ctx = None
     t0 = time.time()
     for it in range(int(state.step), args.steps):
@@ -123,6 +166,7 @@ def main():
             mgr.save_async(it, state)
     mgr.wait()
     mgr.save(args.steps, state)
+    stack.close()
     print(f"trained {args.steps - (start or 0)} steps in {time.time()-t0:.0f}s")
 
 

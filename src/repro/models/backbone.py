@@ -21,8 +21,6 @@ learner additionally microbatches (agents/token_dqn.py).
 
 from __future__ import annotations
 
-import dataclasses
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -243,7 +241,6 @@ def _scan_units(cfg, shd, params, x, positions, freqs, enc_out=None,
     def unit(x, inp):
         p_u, flag_row = inp
         fi = 0
-        attn_like = [k for k in sub if k in ("attn", "hybrid")]
         for kind in sub:
             g = flag_row[fi] if kind in ("attn", "hybrid") else True
             if kind in ("attn", "hybrid"):
@@ -406,8 +403,8 @@ def _decode_mask(cfg: ModelConfig, k_pos: jax.Array, pos: jax.Array,
 def _attn_decode(cfg, shd, p, x, k_cache, v_cache, pos, freqs, is_global,
                  use_rope=True):
     """x: (B,1,d); k_cache/v_cache: (B,S,KV,hd). Returns out, new caches."""
-    b = x.shape[0]
     h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    b = x.shape[0]
     s_cache = k_cache.shape[1]
     pos_b = jnp.broadcast_to(pos, (b, 1)).astype(jnp.int32)
 
@@ -449,7 +446,6 @@ def decode_step(
     freqs = L.rope_freqs(cfg)
     pos = cache["pos"]
     x = L.embed(cfg, shd, params["embed"], tokens)
-    b = x.shape[0]
 
     if cfg.family == "ssm":
         new_blocks = []
@@ -599,7 +595,6 @@ def prefill(
 
     # decoder-only families: replay the prompt through decode-like capture
     logits = forward(cfg, shd, params, tokens, extra_embeds)
-    s = logits.shape[1]
     if cfg.family != "ssm":
         x = L.embed(cfg, shd, params["embed"], tokens)
         if cfg.family == "vlm" and extra_embeds is not None:

@@ -18,8 +18,7 @@ it is the TPU-native (matmul-friendly) variant of the same insight.
 
 from __future__ import annotations
 
-import math
-from typing import Any, Dict, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -16,7 +16,7 @@ shard over the data axes.
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -56,7 +56,6 @@ def moe(
     b, s, d = x.shape
     t = b * s
     e, k = cfg.num_experts, cfg.experts_per_token
-    c = capacity(cfg, t)
     xt = x.reshape(t, d)
     xt = shard(xt, shd, dp(shd), None)
 
@@ -77,7 +76,6 @@ def moe(
     # model axis (dense-style TP inside each expert) — §Perf, mixtral
     ep = e % max(1, shd.tp_extent) == 0 or not cfg.moe_ff_tp_fallback
     e_ax = shd.tp if ep else None
-    c_ax = None if ep else (shd.fsdp if shd.fsdp else None)
     f_ax = None if ep else shd.tp
 
     # §Perf (mixtral): per-data-shard dispatch — ranks/capacity local to

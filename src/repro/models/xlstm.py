@@ -15,13 +15,13 @@ per-head scalars.
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, NamedTuple, Tuple
+from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.models.config import ModelConfig, ShardingConfig
-from repro.models.layers import Params, dense_init, dp, norm_init, apply_norm, shard
+from repro.models.layers import Params, dense_init, dp, shard
 
 
 def _heads(cfg: ModelConfig) -> Tuple[int, int]:

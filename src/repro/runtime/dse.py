@@ -9,6 +9,14 @@ M, pick (x_a, x_l) with x_a + x_l ≤ M such that
 by the paper's exhaustive O(M²) search.  On this host the resource axis
 is "parallel env/learner lanes" (vmap width); on a pod it is the
 actor/learner device-group split — same equation, profiled the same way.
+
+This module owns the 1-D lane split only.  The full-configuration
+planner (executor backend × pod/data mesh × publish_interval) lives in
+``runtime/planner.py`` and builds on the primitives exported here:
+``hull``/``interp_hull`` (never claim throughput outside the profiled
+range) and ``relative_score`` (unit-free comparison of Eq. 5 solutions
+across curves that were measured in different units — e.g. env-steps/s
+vs batch-items/s loaded from different BENCH json files).
 """
 
 from __future__ import annotations
@@ -16,8 +24,6 @@ from __future__ import annotations
 import dataclasses
 import time
 from typing import Callable, Dict, List, Tuple
-
-import numpy as np
 
 
 @dataclasses.dataclass
@@ -28,6 +34,7 @@ class DSEResult:
     learner_throughput: float
     ratio: float                 # realized collection/consumption ratio
     target_ratio: float
+    ratio_error: float = 0.0     # |f_a - U·f_l| / f_a of the chosen point
 
 
 def profile_curve(run_at: Callable[[int], float], xs: List[int]) -> Dict[int, float]:
@@ -35,24 +42,59 @@ def profile_curve(run_at: Callable[[int], float], xs: List[int]) -> Dict[int, fl
     return {x: run_at(x) for x in xs}
 
 
-def _interp(curve: Dict[int, float], x: int) -> float:
-    """Linear interpolation *within* the profiled hull.
+def hull(curve: Dict[int, float]) -> Tuple[int, int]:
+    """The profiled hull ``[min x, max x]`` of a throughput curve."""
+    if not curve:
+        raise ValueError("empty curve has no profiled hull")
+    return min(curve), max(curve)
 
-    Callers must keep ``x`` inside ``[min(curve), max(curve)]`` —
-    ``solve`` clamps its search to the hull, because extrapolating flat
-    beyond the profiled range claims throughput that was never measured
-    (a lane allocation at an unprofiled parallelism level would tie with
-    the hull edge on ratio error and win the ``-(fa + fl)`` tie-break
-    order dependent — the old behavior this replaces)."""
-    xs = sorted(curve)
+
+def interp_hull(curve: Dict[int, float], x: float) -> float:
+    """Hull-clamped linear interpolation: ``x`` outside the profiled
+    range reads the nearest hull edge instead of extrapolating — the
+    "never claim throughput that was never measured" rule.  ``solve``
+    reads every candidate allocation through this (its search ranges are
+    clamped to the hull as well, because an allocation at an unprofiled
+    parallelism level would tie the hull edge on ratio error and win the
+    tie-break order dependent — the old flat-extrapolation behavior this
+    replaces)."""
+    lo, hi = hull(curve)
+    x = min(max(x, lo), hi)
     if x in curve:
         return curve[x]
-    lo = max([v for v in xs if v <= x], default=xs[0])
-    hi = min([v for v in xs if v >= x], default=xs[-1])
-    if lo == hi:
-        return curve[lo]
-    w = (x - lo) / (hi - lo)
-    return curve[lo] * (1 - w) + curve[hi] * w
+    xs = sorted(curve)
+    below = max(v for v in xs if v <= x)
+    above = min(v for v in xs if v >= x)
+    if below == above:
+        return curve[below]
+    w = (x - below) / (above - below)
+    return curve[below] * (1 - w) + curve[above] * w
+
+
+def ratio_error(fa: float, fl: float, update_interval: float) -> float:
+    """Eq. 5 residual |f_a − U·f_l| / f_a of an allocation."""
+    return abs(fa - update_interval * fl) / max(fa, 1e-9)
+
+
+def relative_score(res: DSEResult,
+                   actor_curve: Dict[int, float],
+                   learner_curve: Dict[int, float]) -> Tuple[float, float]:
+    """Unit-free comparison key for an Eq. 5 solution: ``(ratio_error,
+    -(f_a/max f_a + f_l/max f_l))`` — smaller is better.
+
+    Normalizing each throughput by its own curve's maximum makes the
+    tie-break meaningful when the two curves carry different units
+    (env-steps/s vs batch-items/s — always the case for curves loaded
+    from BENCH json), and makes scores comparable *across* solves on
+    different curve pairs: the planner ranks candidate backends by this
+    key, where the raw ``-(fa + fl)`` sum would be dominated by
+    whichever backend's json happened to use the larger unit.
+    """
+    ma = max(actor_curve.values())
+    ml = max(learner_curve.values())
+    return (res.ratio_error,
+            -(res.actor_throughput / max(ma, 1e-9)
+              + res.learner_throughput / max(ml, 1e-9)))
 
 
 def solve(
@@ -68,6 +110,13 @@ def solve(
     measured (flat extrapolation used to let such points tie the ratio
     error of the hull edge and be selected by iteration order).
 
+    Ties on ratio error are broken by *relative* combined throughput
+    (``relative_score``): each curve's throughput is normalized by its
+    own maximum before summing, so the tie-break is invariant to the
+    units either curve was measured in.  (The raw ``-(fa + fl)`` sum it
+    replaces compared env-steps/s against batch-items/s head-on: with
+    curves loaded from json the larger-unit curve decided every tie.)
+
     Raises ``ValueError`` for an infeasible budget or empty curves — with
     ``total < 2`` the (x_a ≥ 1, x_l ≥ 1) search space is empty and there
     is no allocation to return, and a budget too small to reach both
@@ -82,18 +131,22 @@ def solve(
     if not actor_curve or not learner_curve:
         raise ValueError("actor_curve and learner_curve must be non-empty "
                          "profiled throughput curves")
-    a_lo, a_hi = min(actor_curve), max(actor_curve)
-    l_lo, l_hi = min(learner_curve), max(learner_curve)
+    a_lo, a_hi = hull(actor_curve)
+    l_lo, l_hi = hull(learner_curve)
+    ma = max(actor_curve.values())
+    ml = max(learner_curve.values())
     best = None
     for xa in range(max(1, a_lo), min(total - 1, a_hi) + 1):
         for xl in range(max(1, l_lo), min(total - xa, l_hi) + 1):
-            fa = _interp(actor_curve, xa)
-            fl = _interp(learner_curve, xl)
-            err = abs(fa - update_interval * fl) / max(fa, 1e-9)
-            score = (err, -(fa + fl))      # match ratio, then maximize work
+            fa = interp_hull(actor_curve, xa)
+            fl = interp_hull(learner_curve, xl)
+            err = ratio_error(fa, fl, update_interval)
+            # match ratio, then maximize *relative* work (unit-free)
+            score = (err, -(fa / max(ma, 1e-9) + fl / max(ml, 1e-9)))
             if best is None or score < best[0]:
                 best = (score, DSEResult(xa, xl, fa, fl,
-                                         fa / max(fl, 1e-9), update_interval))
+                                         fa / max(fl, 1e-9), update_interval,
+                                         ratio_error=err))
     if best is None:
         raise ValueError(
             f"total={total} cannot reach the profiled hull: the smallest "

@@ -483,3 +483,61 @@ class AsyncExecutor(Executor):
 
     def init(self, key: jax.Array) -> LoopState:
         return self._impl.init(key)
+
+
+def executor_from_plan(
+    plan,
+    agent: Agent,
+    env_fn: Callable[[int], tuple],
+    cfg,
+    example: Pytree,
+    *,
+    capacity: int = 50_000,
+    fanout: int = 128,
+    tree_backend: str = "xla",
+    scan_chunk: int = 64,
+) -> Executor:
+    """Instantiate the executor a ``runtime.planner.PlannedConfig``
+    selected: the right backend class, mesh (``launch.mesh.
+    mesh_from_plan``), replay flavor and async knobs, with the plan's
+    ``n_envs`` and ``update_interval`` applied (the latter overrides
+    ``cfg.update_interval`` — the plan *is* the Eq. 5 answer for the
+    ratio it was solved at).
+
+    The caller must have forced ``plan.n_devices`` host devices before
+    the first jax call (``--xla_force_host_platform_device_count``);
+    ``examples/quickstart.py --plan`` shows the full dance.
+    """
+    import dataclasses as _dc
+
+    from repro.core.distributed import ShardedReplayConfig
+    from repro.launch.mesh import mesh_from_plan
+
+    cfg = _dc.replace(cfg, update_interval=plan.update_interval)
+    mesh = mesh_from_plan(plan)
+    if mesh is None:
+        from repro.core.replay import ReplayConfig
+        replay = PrioritizedReplay(
+            ReplayConfig(capacity=capacity, fanout=fanout,
+                         backend=tree_backend), example)
+        if plan.backend == "async":
+            return AsyncExecutor(agent, replay, env_fn, cfg, plan.n_envs,
+                                 publish_interval=plan.publish_interval,
+                                 max_staleness=plan.max_staleness,
+                                 scan_chunk=scan_chunk)
+        return FusedExecutor(agent, replay, env_fn, cfg, plan.n_envs,
+                             scan_chunk=scan_chunk)
+    axis_names = ("pod", "data") if plan.n_pods > 1 else ("data",)
+    replay = ShardedPrioritizedReplay(
+        ShardedReplayConfig(capacity_per_shard=capacity // plan.n_shards,
+                            fanout=fanout, backend=tree_backend,
+                            axis_names=axis_names), example)
+    if plan.backend == "async":
+        return AsyncExecutor(agent, replay, env_fn, cfg, plan.n_envs,
+                             publish_interval=plan.publish_interval,
+                             max_staleness=plan.max_staleness, mesh=mesh,
+                             scan_chunk=scan_chunk,
+                             compress_pod_reduce=plan.compress_pod_reduce)
+    return ShardedExecutor(agent, replay, env_fn, cfg, plan.n_envs, mesh,
+                           scan_chunk=scan_chunk,
+                           compress_pod_reduce=plan.compress_pod_reduce)

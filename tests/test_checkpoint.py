@@ -65,7 +65,6 @@ def test_manifest_mismatch_rejected(tmp_path):
 
 
 def test_elastic_spec_filtering():
-    import jax.sharding as jsh
     mesh = jax.sharding.Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1),
                              ("data", "model"))
     # multi-pod spec shrinks onto a single-pod mesh

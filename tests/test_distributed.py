@@ -32,7 +32,6 @@ def test_int8_ef_compression_contracts():
                 jnp.linalg.norm(total_true))
     assert rel < 2e-3, rel
     # without EF the same stream drifts measurably more
-    err0 = compress.init_error(g)
     tot_no_ef = jnp.zeros((64, 64))
     for i in range(50):
         gi = jax.tree.map(lambda x: x * (1 + 0.01 * i), g)

@@ -104,9 +104,9 @@ def test_run_log_every_fires_on_boundary_crossings(capsys):
     cfg = LoopConfig(batch_size=32, warmup=0, epsilon=0.3)
     ex = FusedExecutor(agent, replay, env_fn, cfg, n_envs=4, scan_chunk=16)
     ex.train(32, jax.random.PRNGKey(0), log_every=16)
-    lines = [l for l in capsys.readouterr().out.splitlines()
-             if l.startswith("iter=")]
-    assert [l.split()[0] for l in lines] == ["iter=16", "iter=32"]
+    lines = [ln for ln in capsys.readouterr().out.splitlines()
+             if ln.startswith("iter=")]
+    assert [ln.split()[0] for ln in lines] == ["iter=16", "iter=32"]
 
 
 def test_run_rejects_non_positive_iterations():

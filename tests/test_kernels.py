@@ -3,14 +3,12 @@
 Sweeps shapes (capacities around block boundaries, batch sizes around
 SAMPLE/UPDATE/GATHER blocks) and dtypes per the deliverable-(c) spec."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core import sumtree
 from repro.kernels import ops, ref
-from repro.kernels import gather as kgather
 
 
 def mk(capacity, fanout=128, seed=0, low=0.01, high=2.0):

@@ -82,7 +82,7 @@ def test_1x1_compressed_reduce_runs_and_threads_ef_state():
     assert ef_leaves, "EF buffer must be materialized when compressing"
     # the quantizer rarely round-trips exactly: after 20+ learns the
     # carried error is non-zero somewhere
-    assert any(float(jnp.max(jnp.abs(l))) > 0 for l in ef_leaves)
+    assert any(float(jnp.max(jnp.abs(x))) > 0 for x in ef_leaves)
     # uncompressed runs keep the empty pytree (no memory overhead)
     ex0 = ShardedExecutor(agent, mk_replay(("pod", "data")), env_fn, cfg,
                           n_envs=4, mesh=pod_data_mesh(1, 1), scan_chunk=4)
