@@ -29,10 +29,13 @@ from typing import Dict, Iterable, List, Tuple
 # slowdowns (a backend falling off a cliff), not jitter.
 THRESHOLD = 0.30
 
-BENCH_FILES = ("BENCH_fig9.json", "BENCH_fig10.json")
+BENCH_FILES = ("BENCH_fig9.json", "BENCH_fig10.json", "BENCH_replay.json")
 
-# fields that identify a point (everything but the measurements)
-_MEASUREMENT_FIELDS = {"env_steps_per_s", "speedup_vs_sync"}
+# fields that identify a point (everything but the measurements); the
+# median-of-N dispersion record (repeats/rel_spread) is measurement-side
+# so old baselines without it still match
+_MEASUREMENT_FIELDS = {"env_steps_per_s", "replay_ops_per_s",
+                       "speedup_vs_sync", "repeats", "rel_spread"}
 
 
 def point_key(point: dict) -> Tuple:
@@ -43,15 +46,18 @@ def point_key(point: dict) -> Tuple:
         (k, v) for k, v in point.items() if k not in _MEASUREMENT_FIELDS))
 
 
-def _load_points(path: str) -> Dict[Tuple, float]:
+def _load_points(path: str) -> Tuple[Dict[Tuple, float], str]:
     with open(path) as f:
         payload = json.load(f)
-    return {point_key(p): float(p["env_steps_per_s"])
-            for p in payload.get("points", ())}
+    # each payload names its own measured rate (schema.FIGURE_METRICS)
+    metric = payload.get("metric", "env_steps_per_s")
+    return ({point_key(p): float(p[metric])
+             for p in payload.get("points", ())}, metric)
 
 
 def compare_points(baseline: Dict[Tuple, float], fresh: Dict[Tuple, float],
-                   threshold: float) -> Tuple[List[str], List[str]]:
+                   threshold: float, metric: str = "env_steps_per_s"
+                   ) -> Tuple[List[str], List[str]]:
     """Returns (regressions, notes) — regressions non-empty fails the
     gate."""
     regressions, notes = [], []
@@ -62,7 +68,7 @@ def compare_points(baseline: Dict[Tuple, float], fresh: Dict[Tuple, float],
             continue
         fresh_v = fresh[key]
         delta = (fresh_v - base_v) / base_v
-        line = (f"{label}: {base_v:,.0f} → {fresh_v:,.0f} env-steps/s "
+        line = (f"{label}: {base_v:,.0f} → {fresh_v:,.0f} {metric} "
                 f"({delta:+.1%})")
         if delta < -threshold:
             regressions.append(line)
@@ -90,10 +96,10 @@ def compare_dirs(fresh_dir: str, baseline_dir: str, threshold: float,
             print(f"-- {name}: no committed baseline (skipped)")
             continue
         compared_any = True
-        baseline_pts = _load_points(base_path)
-        fresh_pts = _load_points(fresh_path)
+        baseline_pts, metric = _load_points(base_path)
+        fresh_pts, _ = _load_points(fresh_path)
         regressions, notes = compare_points(baseline_pts, fresh_pts,
-                                            threshold)
+                                            threshold, metric)
         print(f"-- {name} (fail below -{threshold:.0%}):")
         for line in notes:
             print(f"   {line}")

@@ -49,18 +49,31 @@ ALGOS = {
 }
 
 
-def _time_executor(ex, iters: int) -> float:
-    """env-steps/s of a warmed executor over ``iters`` iterations."""
+def _time_executor_stats(ex, iters: int, repeats=None):
+    """(median env-steps/s, rel_spread) of a warmed executor over
+    ``repeats`` passes of ``iters`` iterations (benchmarks/timing.py)."""
+    from benchmarks.timing import REPEATS, median_with_spread
+
     st = ex.init(jax.random.PRNGKey(0))
     st, _ = ex.run_chunk(st)
     jax.block_until_ready(st.obs)
     n_chunks = max(1, iters // ex.scan_chunk)
-    t0 = time.perf_counter()
-    for _ in range(n_chunks):
-        st, _ = ex.run_chunk(st)
-    jax.block_until_ready(st.obs)
-    dt = time.perf_counter() - t0
-    return ex.n_envs * ex.scan_chunk * n_chunks / dt
+    state = [st]
+
+    def probe():
+        t0 = time.perf_counter()
+        for _ in range(n_chunks):
+            state[0], _ = ex.run_chunk(state[0])
+        jax.block_until_ready(state[0].obs)
+        dt = time.perf_counter() - t0
+        return ex.n_envs * ex.scan_chunk * n_chunks / dt
+
+    return median_with_spread(probe, REPEATS if repeats is None else repeats)
+
+
+def _time_executor(ex, iters: int) -> float:
+    """Single-shot env-steps/s (no repeats) — kept for quick sweeps."""
+    return _time_executor_stats(ex, iters, repeats=1)[0]
 
 
 def throughput(algo: str, n_envs: int, iters: int = 120) -> float:
@@ -77,11 +90,11 @@ def throughput(algo: str, n_envs: int, iters: int = 120) -> float:
 
 def _sharded_executor_throughput(mesh_fn, axis_names, n_cells: int,
                                  compress: bool, n_envs: int,
-                                 iters: int) -> float:
+                                 iters: int):
     """Shared setup for the sharded-throughput workers: DQN/CartPole
     through a ShardedExecutor over ``mesh_fn()`` with one replay shard
     per mesh cell (run inside a process whose forced device count ≥ the
-    cell count)."""
+    cell count).  Returns (median env-steps/s, rel_spread)."""
     from repro.core.distributed import (ShardedPrioritizedReplay,
                                         ShardedReplayConfig)
     from repro.runtime.executors import ShardedExecutor
@@ -95,12 +108,12 @@ def _sharded_executor_throughput(mesh_fn, axis_names, n_cells: int,
     cfg = loop.LoopConfig(batch_size=64, warmup=64, epsilon=0.1)
     ex = ShardedExecutor(agent, replay, env_fn, cfg, n_envs, mesh_fn(),
                          scan_chunk=20, compress_pod_reduce=compress)
-    return _time_executor(ex, iters)
+    return _time_executor_stats(ex, iters)
 
 
-def sharded_throughput(n_shards: int, n_envs: int = 16, iters: int = 120
-                       ) -> float:
-    """1-D data-axis ShardedExecutor env-steps/s at ``n_shards``."""
+def sharded_throughput(n_shards: int, n_envs: int = 16, iters: int = 120):
+    """1-D data-axis ShardedExecutor (median env-steps/s, rel_spread)
+    at ``n_shards``."""
     from repro.launch.mesh import data_mesh
 
     return _sharded_executor_throughput(
@@ -123,9 +136,10 @@ def run(csv=True):
 
 
 def pod_sharded_throughput(n_pods: int, n_data: int, compress: bool,
-                           n_envs: int = 16, iters: int = 120) -> float:
-    """Two-axis pod×data ShardedExecutor env-steps/s, optionally with
-    the int8-EF compressed cross-pod reduce."""
+                           n_envs: int = 16, iters: int = 120):
+    """Two-axis pod×data ShardedExecutor (median env-steps/s,
+    rel_spread), optionally with the int8-EF compressed cross-pod
+    reduce."""
     from repro.launch.mesh import pod_data_mesh
 
     return _sharded_executor_throughput(
@@ -143,9 +157,12 @@ def _run_worker(worker_args, n_devices, n_envs=16, iters=120):
     env["XLA_FLAGS"] = (
         f"{env.get('XLA_FLAGS', '')} "
         f"--xla_force_host_platform_device_count={n_devices}").strip()
+    # src for the repro package, root for benchmarks.* (the worker runs
+    # as a script, so its sys.path[0] is benchmarks/, not the repo root)
     src = os.path.join(root, "src")
-    env["PYTHONPATH"] = (f"{src}:{env['PYTHONPATH']}"
-                         if env.get("PYTHONPATH") else src)
+    paths = f"{src}:{root}"
+    env["PYTHONPATH"] = (f"{paths}:{env['PYTHONPATH']}"
+                         if env.get("PYTHONPATH") else paths)
     worker_args = worker_args + ["--n-envs", str(n_envs),
                                  "--iters", str(iters)]
     r = subprocess.run([sys.executable, script] + worker_args,
@@ -156,7 +173,10 @@ def _run_worker(worker_args, n_devices, n_envs=16, iters=120):
     if not out:
         raise RuntimeError(
             f"worker {worker_args} failed:\n{r.stdout}\n{r.stderr}")
-    return float(out[-1].split("=")[1])
+    spreads = [line for line in r.stdout.splitlines()
+               if line.startswith("REL_SPREAD=")]
+    spread = float(spreads[-1].split("=")[1]) if spreads else 0.0
+    return float(out[-1].split("=")[1]), spread
 
 
 def run_shard_sweep(shard_counts, csv=True):
@@ -164,7 +184,7 @@ def run_shard_sweep(shard_counts, csv=True):
     rows = []
     base = None
     for n in shard_counts:
-        t = _run_worker(["--_sharded-worker", str(n)], n)
+        t, _ = _run_worker(["--_sharded-worker", str(n)], n)
         base = base or t
         rows.append((f"fig10/sharded_{n}shards", 1e6 / t, t / base))
     if csv:
@@ -181,21 +201,25 @@ def shard_pod_points(shard_counts=(1, 2), pod_specs=((2, 1, False),
     BENCH_fig10.json: 1-D data-axis counts plus (n_pods, n_data,
     compressed) two-axis points, each in its own forced-device
     subprocess."""
+    from benchmarks.timing import REPEATS
+
     points = []
     for n in shard_counts:
-        t = _run_worker(["--_sharded-worker", str(n)], n,
-                        n_envs=n_envs, iters=iters)
+        t, spread = _run_worker(["--_sharded-worker", str(n)], n,
+                                n_envs=n_envs, iters=iters)
         points.append({"backend": "sharded", "shards": n, "pods": 1,
                        "compressed": False, "n_envs": n_envs,
-                       "env_steps_per_s": round(t, 2)})
+                       "env_steps_per_s": round(t, 2),
+                       "repeats": REPEATS, "rel_spread": round(spread, 4)})
     for n_pods, n_data, compress in pod_specs:
-        t = _run_worker(
+        t, spread = _run_worker(
             ["--_pod-worker", f"{n_pods},{n_data},{int(compress)}"],
             n_pods * n_data, n_envs=n_envs, iters=iters)
         points.append({"backend": "sharded_pod_data", "shards": n_data,
                        "pods": n_pods, "compressed": bool(compress),
                        "n_envs": n_envs,
-                       "env_steps_per_s": round(t, 2)})
+                       "env_steps_per_s": round(t, 2),
+                       "repeats": REPEATS, "rel_spread": round(spread, 4)})
     return points
 
 
@@ -211,7 +235,7 @@ def realize_plan(plan, iters=120):
             f"{plan.publish_interval},{plan.max_staleness},"
             f"{int(plan.compress_pod_reduce)}")
     return _run_worker(["--_plan-worker", spec], plan.n_devices,
-                       n_envs=plan.n_envs, iters=iters)
+                       n_envs=plan.n_envs, iters=iters)[0]
 
 
 if __name__ == "__main__":
@@ -230,14 +254,17 @@ if __name__ == "__main__":
     # "backend,n_pods,n_data,publish_interval,max_staleness,compress01"
     args = ap.parse_args()
     if args._sharded_worker:
-        t = sharded_throughput(args._sharded_worker, n_envs=args.n_envs,
-                               iters=args.iters)
+        t, spread = sharded_throughput(args._sharded_worker,
+                                       n_envs=args.n_envs,
+                                       iters=args.iters)
         print(f"STEPS_PER_S={t:.2f}")
+        print(f"REL_SPREAD={spread:.4f}")
     elif args._pod_worker:
         p, d, c = (int(x) for x in args._pod_worker.split(","))
-        t = pod_sharded_throughput(p, d, bool(c), n_envs=args.n_envs,
-                                   iters=args.iters)
+        t, spread = pod_sharded_throughput(p, d, bool(c), n_envs=args.n_envs,
+                                           iters=args.iters)
         print(f"STEPS_PER_S={t:.2f}")
+        print(f"REL_SPREAD={spread:.4f}")
     elif args._plan_worker:
         from benchmarks.fig9_fanout import _make_runtime_executor, _steps_per_s
         backend, p, d, pi, ms, c = args._plan_worker.split(",")

@@ -159,16 +159,30 @@ def plan_throughput(plan, iters=120):
     return _steps_per_s(ex, iters=iters)
 
 
-def _steps_per_s(ex, iters=120):
+def _steps_per_s_stats(ex, iters=120, repeats=None):
+    """(median env-steps/s, rel_spread) over ``repeats`` measurement
+    passes of one warmed executor (benchmarks/timing.py policy)."""
+    from benchmarks.timing import REPEATS, median_with_spread
+
     st = ex.init(jax.random.PRNGKey(0))
     st, _ = ex.run_chunk(st)
     jax.block_until_ready(st.obs)
     n_chunks = max(1, iters // ex.scan_chunk)
-    t0 = time.perf_counter()
-    for _ in range(n_chunks):
-        st, _ = ex.run_chunk(st)
-    jax.block_until_ready(st.obs)
-    return ex.n_envs * ex.scan_chunk * n_chunks / (time.perf_counter() - t0)
+    state = [st]
+
+    def probe():
+        t0 = time.perf_counter()
+        for _ in range(n_chunks):
+            state[0], _ = ex.run_chunk(state[0])
+        jax.block_until_ready(state[0].obs)
+        return ex.n_envs * ex.scan_chunk * n_chunks / (time.perf_counter() - t0)
+
+    return median_with_spread(probe, REPEATS if repeats is None else repeats)
+
+
+def _steps_per_s(ex, iters=120):
+    """Single-shot env-steps/s (no repeats) — kept for quick sweeps."""
+    return _steps_per_s_stats(ex, iters=iters, repeats=1)[0]
 
 
 def run_executor_sweep(publish_intervals, max_stalenesses, n_envs=8,
@@ -197,21 +211,26 @@ def executor_backend_points(publish_intervals=(1, 2, 4), n_envs=8, iters=120):
     """Machine-readable env-steps/s per runtime backend (the in-process
     slice of BENCH_fig9.json — the shard/pod axis rides in fig10's
     subprocess sweep, since the forced device count must be set before
-    jax initializes)."""
+    jax initializes).  Each point is the median of N repeats with the
+    dispersion recorded (benchmarks/timing.py)."""
+    from benchmarks.timing import REPEATS
+
     points = []
-    base = _steps_per_s(_make_runtime_executor("fused", n_envs, 0, 0, 0),
-                        iters=iters)
+    base, spread = _steps_per_s_stats(
+        _make_runtime_executor("fused", n_envs, 0, 0, 0), iters=iters)
     points.append({"backend": "fused", "shards": 0, "pods": 1,
                    "publish_interval": 0, "max_staleness": 0,
                    "n_envs": n_envs, "env_steps_per_s": round(base, 2),
-                   "speedup_vs_sync": 1.0})
+                   "speedup_vs_sync": 1.0,
+                   "repeats": REPEATS, "rel_spread": round(spread, 4)})
     for p in publish_intervals:
-        t = _steps_per_s(_make_runtime_executor("async", n_envs, 0, p, 0),
-                         iters=iters)
+        t, spread = _steps_per_s_stats(
+            _make_runtime_executor("async", n_envs, 0, p, 0), iters=iters)
         points.append({"backend": "async", "shards": 0, "pods": 1,
                        "publish_interval": p, "max_staleness": 0,
                        "n_envs": n_envs, "env_steps_per_s": round(t, 2),
-                       "speedup_vs_sync": round(t / base, 3)})
+                       "speedup_vs_sync": round(t / base, 3),
+                       "repeats": REPEATS, "rel_spread": round(spread, 4)})
     return points
 
 

@@ -6,6 +6,7 @@
     fig10 — DQN/DDPG/SAC scalability vs parallel actor lanes
     fig11 — our buffer plugged into a naive trainer (iteration µs, speedup)
     fig12 — DSE profile curves + Eq. 5 solution via the runtime planner
+    replay — lazy-vs-eager / fused-vs-split replay-transaction ops/s
     roofline — §Roofline table from the dry-run artifacts (if present)
 
 Run: PYTHONPATH=src python -m benchmarks.run [--only fig9,...]
@@ -22,6 +23,11 @@ Machine-readable perf trajectory: ``--emit-json DIR`` writes
                        (runtime/planner.py) selected from those points,
                        with predicted vs realized env-steps/s and the
                        Eq. 5 lane curves it solved over
+    BENCH_replay.json — replay-transaction ops/s per (backend, eager|
+                       lazy, fused|split) arm (benchmarks/replay_micro)
+
+Every point is a median-of-N repeat with its dispersion recorded
+(benchmarks/timing.py — the groundwork for a blocking perf gate).
 
 so CI and the roadmap can diff throughput across PRs instead of
 eyeballing CSV — the json is validated by ``benchmarks/schema.py`` and
@@ -40,10 +46,11 @@ import traceback
 
 
 def emit_json(out_dir: str, smoke: bool = False) -> None:
-    from benchmarks import fig10_scalability
+    from benchmarks import fig10_scalability, replay_micro
     from repro.runtime import planner
 
     os.makedirs(out_dir, exist_ok=True)
+    replay_micro.emit_json(out_dir, smoke=smoke)
     prof = planner.profile(smoke=smoke)
     fig9 = {
         "figure": "fig9",
@@ -112,13 +119,15 @@ def main() -> None:
 
     if args.only or not args.emit_json:
         from benchmarks import (fig8_baseline, fig9_fanout, fig10_scalability,
-                                fig11_plugin, fig12_dse, roofline)
+                                fig11_plugin, fig12_dse, replay_micro,
+                                roofline)
         suites = {
             "fig8": fig8_baseline.run,
             "fig9": fig9_fanout.run,
             "fig10": fig10_scalability.run,
             "fig11": fig11_plugin.run,
             "fig12": fig12_dse.run,
+            "replay": replay_micro.run,
             "roofline": roofline.run,
         }
         chosen = (args.only.split(",") if args.only else list(suites))

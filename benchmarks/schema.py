@@ -3,9 +3,14 @@ gates on).
 
 One place defines what ``benchmarks/run.py --emit-json`` may write and
 what ``benchmarks/compare.py`` and ``runtime/planner.py`` may assume:
-every payload carries ``figure``/``metric``, and every point's
-``env_steps_per_s`` is in one shared unit (env steps per second) — the
-invariant that makes cross-file candidate scoring in the planner legal.
+every payload carries ``figure``/``metric`` (``FIGURE_METRICS`` names
+the one measured rate per figure), and the executor sweeps (fig9/fig10)
+share the ``env_steps_per_s`` unit — the invariant that makes
+cross-file candidate scoring in the planner legal.  The replay
+microbenchmark payload carries its own unit (``replay_ops_per_s``) and
+is never scored against the executor sweeps.  Points may carry the
+median-of-N dispersion record (``repeats``/``rel_spread``,
+benchmarks/timing.py).
 
 Dependency-free on purpose (no jsonschema): CI validates the artifacts
 with the same stdlib-only code the planner imports.
@@ -23,14 +28,26 @@ from typing import Any, Dict, List
 
 # field name → (type(s), required) per point, keyed by payload "figure".
 # bool is checked before int (bool is an int subclass in Python).
+# Every point may carry the median-of-N dispersion record
+# (benchmarks/timing.py): repeats + rel_spread.
 _COMMON_POINT = {
-    "env_steps_per_s": ((int, float), True),
     "n_envs": (int, False),
+    "repeats": (int, False),
+    "rel_spread": ((int, float), False),
+}
+
+# the one measured rate per figure — compare.py reads the payload's
+# "metric" to find it, so every figure's unit stays self-describing
+FIGURE_METRICS: Dict[str, str] = {
+    "fig9": "env_steps_per_s",
+    "fig10": "env_steps_per_s",
+    "replay": "replay_ops_per_s",
 }
 
 POINT_FIELDS: Dict[str, Dict[str, tuple]] = {
     "fig9": {
         **_COMMON_POINT,
+        "env_steps_per_s": ((int, float), True),
         "backend": (str, True),
         "shards": (int, True),
         "pods": (int, True),
@@ -40,10 +57,23 @@ POINT_FIELDS: Dict[str, Dict[str, tuple]] = {
     },
     "fig10": {
         **_COMMON_POINT,
+        "env_steps_per_s": ((int, float), True),
         "backend": (str, True),
         "shards": (int, True),
         "pods": (int, True),
         "compressed": (bool, True),
+    },
+    # replay-transaction microbenchmark (benchmarks/replay_micro.py)
+    "replay": {
+        **_COMMON_POINT,
+        "replay_ops_per_s": ((int, float), True),
+        "backend": (str, True),
+        "mode": (str, True),        # "eager" | "lazy"
+        "fused": (bool, True),      # fused sample+gather kernel arm
+        "capacity": (int, True),
+        "fanout": (int, True),
+        "insert_batch": (int, True),
+        "sample_batch": (int, True),
     },
 }
 
@@ -100,17 +130,18 @@ def validate(payload: Dict[str, Any]) -> str:
         raise SchemaError(f"payload is {type(payload).__name__}, not an object")
     figure = payload.get("figure")
     if figure in POINT_FIELDS:
-        if payload.get("metric") != METRIC:
-            raise SchemaError(f"{figure}: metric must be {METRIC!r}, got "
+        metric = FIGURE_METRICS[figure]
+        if payload.get("metric") != metric:
+            raise SchemaError(f"{figure}: metric must be {metric!r}, got "
                               f"{payload.get('metric')!r}")
         points = payload.get("points")
         if not isinstance(points, list) or not points:
             raise SchemaError(f"{figure}: 'points' must be a non-empty list")
         for i, p in enumerate(points):
             _check_fields(p, POINT_FIELDS[figure], f"{figure}.points[{i}]")
-            if p["env_steps_per_s"] <= 0:
+            if p[metric] <= 0:
                 raise SchemaError(
-                    f"{figure}.points[{i}].env_steps_per_s must be > 0")
+                    f"{figure}.points[{i}].{metric} must be > 0")
         return figure
     if figure == "plan":
         if payload.get("metric") != METRIC:

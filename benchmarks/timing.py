@@ -1,0 +1,28 @@
+"""Shared measurement policy for the BENCH json emitters.
+
+Every emitted point is the **median of N repeats** with the dispersion
+recorded next to it (``rel_spread = (max - min) / median``), so the
+perf-regression gate (benchmarks/compare.py) can tell structural
+slowdowns from runner jitter — the groundwork for promoting the >30%
+gate to blocking.  The repeat count is deliberately one number for the
+whole suite: CI and local runs produce comparable dispersion.
+"""
+
+from __future__ import annotations
+
+import statistics
+from typing import Callable, Tuple
+
+# repeats per emitted point (median-of-N); the warmed-up measurement
+# loop is cheap next to jit compilation, so N=3 costs little wall time
+REPEATS = 3
+
+
+def median_with_spread(measure: Callable[[], float],
+                       repeats: int = REPEATS) -> Tuple[float, float]:
+    """Run ``measure`` (a warmed-up throughput probe returning a rate)
+    ``repeats`` times; returns (median, rel_spread)."""
+    vals = [float(measure()) for _ in range(max(1, repeats))]
+    med = statistics.median(vals)
+    spread = (max(vals) - min(vals)) / med if med > 0 else 0.0
+    return med, spread

@@ -57,6 +57,15 @@ def main():
     ap.add_argument("--compress-pod-reduce", action="store_true",
                     help="int8 error-feedback compressed gradient reduce "
                          "across the pod axis (needs --pods)")
+    ap.add_argument("--bf16-intra-pod", action="store_true",
+                    help="cast the intra-pod (fast-axis) gradient reduce "
+                         "to bf16 on the wire (needs --shards); the "
+                         "injected error is the compress_error_norm "
+                         "metric")
+    ap.add_argument("--eager-replay", action="store_true",
+                    help="disable the lazy-writing replay transactions "
+                         "(three tree-propagation passes per iteration "
+                         "instead of one — the pre-optimization baseline)")
     ap.add_argument("--executor", choices=("sync", "async"), default="sync",
                     help="async = actors act on a delayed parameter copy "
                          "(AsyncExecutor, DESIGN.md §5)")
@@ -83,6 +92,9 @@ def main():
     if args.compress_pod_reduce and not args.pods:
         ap.error("--compress-pod-reduce needs --pods (the compressed leg "
                  "crosses the pod axis)")
+    if args.bf16_intra_pod and not args.shards and not args.plan:
+        ap.error("--bf16-intra-pod needs --shards or a sharded --plan "
+                 "(the fused path has no cross-shard reduce to cast)")
     n_devices = (plan.n_devices if plan
                  else args.shards * max(1, args.pods))
     if n_devices > 1:
@@ -118,12 +130,15 @@ def main():
         "done": jnp.zeros(()),
     }
     cfg = LoopConfig(batch_size=64, warmup=500, epsilon=0.15,
-                     update_interval=args.update_interval)
+                     update_interval=args.update_interval,
+                     lazy_replay=not args.eager_replay)
+    intra_pod_dtype = "bf16" if args.bf16_intra_pod else None
 
     if plan:
         ex = executor_from_plan(plan, agent, env_fn, cfg, example,
                                 fanout=args.fanout,
-                                tree_backend=args.backend)
+                                tree_backend=args.backend,
+                                intra_pod_dtype=intra_pod_dtype)
         print(f"planner-selected {plan.backend} executor on "
               f"{plan.n_devices} device(s), {plan.n_envs} envs "
               f"(predicted {plan.predicted_env_steps_per_s:,.0f} "
@@ -143,13 +158,16 @@ def main():
             example)
         mesh_desc = (f"{args.pods}×{args.shards} pod×data cells"
                      if args.pods else f"{args.shards} shards")
-        reduce_desc = ("f32 intra-pod + int8-EF cross-pod"
-                       if args.compress_pod_reduce else "f32 pmean")
+        fast_dtype = "bf16" if args.bf16_intra_pod else "f32"
+        reduce_desc = (f"{fast_dtype} intra-pod + int8-EF cross-pod"
+                       if args.compress_pod_reduce
+                       else f"{fast_dtype} pmean")
         if args.executor == "async":
             ex = AsyncExecutor(agent, replay, env_fn, cfg, args.n_envs,
                                publish_interval=args.publish_interval,
                                max_staleness=args.max_staleness, mesh=mesh,
-                               compress_pod_reduce=args.compress_pod_reduce)
+                               compress_pod_reduce=args.compress_pod_reduce,
+                               intra_pod_dtype=intra_pod_dtype)
             print(f"async sharded executor: {mesh_desc} × "
                   f"{ex.n_envs_local} envs, publish every "
                   f"{args.publish_interval} iters, max staleness "
@@ -157,7 +175,8 @@ def main():
         else:
             ex = ShardedExecutor(agent, replay, env_fn, cfg, args.n_envs,
                                  mesh,
-                                 compress_pod_reduce=args.compress_pod_reduce)
+                                 compress_pod_reduce=args.compress_pod_reduce,
+                                 intra_pod_dtype=intra_pod_dtype)
             print(f"sharded executor: {mesh_desc} × "
                   f"{ex.n_envs_local} envs, batch/shard "
                   f"{cfg.batch_size // n_cells}, reduce {reduce_desc}")

@@ -23,7 +23,7 @@ each call sees its local shard and the mesh axis name(s).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -46,9 +46,15 @@ class ShardedReplayConfig:
     fanout: int = 128
     alpha: float = 0.6
     eps: float = 1e-6
-    backend: str = "xla"        # TreeOps backend: "xla" | "pallas"
-    use_kernels: bool = False   # legacy alias for backend="pallas"
+    backend: Optional[str] = None   # TreeOps backend: "xla" | "pallas"
+    use_kernels: bool = False   # deprecated alias for backend="pallas"
+    fused_sample_gather: bool = True
     axis_names: Tuple[str, ...] = ("data",)
+
+    @property
+    def tree_backend(self) -> str:
+        from repro.core import tree_ops
+        return tree_ops.resolve_tree_backend(self.backend, self.use_kernels)
 
 
 class ShardedPrioritizedReplay:
@@ -70,6 +76,7 @@ class ShardedPrioritizedReplay:
                 eps=config.eps,
                 backend=config.backend,
                 use_kernels=config.use_kernels,
+                fused_sample_gather=config.fused_sample_gather,
             ),
             example_item,
         )
@@ -101,11 +108,17 @@ class ShardedPrioritizedReplay:
         """Local insert — actors write to their own shard (no collective)."""
         return self.local.insert(state, items)
 
-    def insert_begin(self, state: ReplayState, batch: int):
-        return self.local.insert_begin(state, batch)
+    def insert_begin(self, state: ReplayState, batch: int, *,
+                     lazy: bool = False):
+        return self.local.insert_begin(state, batch, lazy=lazy)
 
-    def insert_commit(self, state, slots, items):
-        return self.local.insert_commit(state, slots, items)
+    def insert_commit(self, state, slots, items, *, lazy: bool = False):
+        return self.local.insert_commit(state, slots, items, lazy=lazy)
+
+    def flush(self, state: ReplayState) -> ReplayState:
+        """Per-shard flush boundary (no collective — each shard rebuilds
+        its own tree's interior from its own leaves)."""
+        return self.local.flush(state)
 
     def sample(
         self,
@@ -123,5 +136,6 @@ class ShardedPrioritizedReplay:
             max_across=self.max_across,
         )
 
-    def update_priorities(self, state, idx, td_errors) -> ReplayState:
-        return self.local.update_priorities(state, idx, td_errors)
+    def update_priorities(self, state, idx, td_errors, *,
+                          lazy: bool = False) -> ReplayState:
+        return self.local.update_priorities(state, idx, td_errors, lazy=lazy)

@@ -1,21 +1,30 @@
-"""Prioritized replay buffer with lazy-writing insertion (paper §IV-D).
+"""Prioritized replay buffer with lazy-writing transactions (paper §IV-D).
 
 The paper's thread-safety mechanisms map to functional JAX as follows
-(see DESIGN.md §2):
+(see DESIGN.md §2 and the transaction contract in §9):
 
   * locks            → batched single-program ops (no shared mutability);
-  * lazy writing     → two-phase insert: ``insert_begin`` zeroes the
-                       priorities of the in-flight slots, then sampling /
-                       learning may run against that tree state (in-flight
-                       slots are invisible, the paper's exact invariant),
-                       then ``insert_commit`` writes storage and restores
-                       P_max.  Because the learner step has *no data
-                       dependency* on the storage write, XLA overlaps the
-                       HBM copy with learner compute — the same overlap
-                       the paper's lock split enables;
+  * lazy writing     → two-phase insert *plus deferred propagation*:
+                       every mutation inside one loop iteration
+                       (``insert_begin`` zeroes the in-flight slots,
+                       ``update_priorities`` writes fresh priorities,
+                       ``insert_commit`` restores P_max) touches only
+                       the sum tree's *leaf level* eagerly and records
+                       itself in the pending-delta ledger
+                       (``ReplayState.pending``); the interior levels
+                       are brought back in sync by **one** merged
+                       propagation pass — ``flush`` — at the next
+                       sample boundary.  Because the interior rebuild
+                       is a pure function of the current leaves, the
+                       flushed tree is bit-exact identical to flushing
+                       after every op (lazy ≡ eager at flush points);
   * write-after-read → ``update_priorities`` applies priorities computed
                        at sample time even if inserts landed in between
                        (paper §IV-D3: tolerated transient inconsistency).
+
+Each mutation also keeps its eager form (``lazy=False``, the default):
+leaf write and upward propagation in a single op, for callers outside
+the runtime loop that want every intermediate state consistent.
 
 Priorities follow PER (Schaul et al., the paper's [24]): stored priority
 ``p = (|δ| + ε)^α``; importance weights ``w = (N·Pr(i))^(-β) / max_w``.
@@ -25,7 +34,7 @@ New insertions receive P_max (paper §IV-A1).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -46,6 +55,13 @@ class ReplayState:
     head: jax.Array           # int32 — next insert position (FIFO eviction)
     count: jax.Array          # int32 — number of valid entries (≤ capacity)
     max_priority: jax.Array   # f32 — running P_max (already ^α-scaled)
+    # pending-delta ledger of the lazy-writing transaction (DESIGN.md §9):
+    # number of leaf writes whose upward propagation is deferred.  The
+    # deltas themselves live implicitly in the leaf level (leaves are
+    # always current; the interior lags until the next flush) — this
+    # counter is the ledger head: 0 ⇔ the tree is fully consistent.
+    pending: jax.Array = dataclasses.field(
+        default_factory=lambda: jnp.zeros((), jnp.int32))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -54,12 +70,16 @@ class ReplayConfig:
     fanout: int = sumtree.DEFAULT_FANOUT
     alpha: float = 0.6          # priority exponent
     eps: float = 1e-6           # priority floor
-    backend: str = "xla"        # TreeOps backend: "xla" | "pallas"
-    use_kernels: bool = False   # legacy alias for backend="pallas"
+    backend: Optional[str] = None   # TreeOps backend: "xla" | "pallas"
+                                    # (None = unset → "xla")
+    use_kernels: bool = False   # deprecated alias for backend="pallas"
+    fused_sample_gather: bool = True  # descend + fetch rows in one op
 
     @property
     def tree_backend(self) -> str:
-        return "pallas" if self.use_kernels else self.backend
+        # conflict detection + deprecation live in ONE place
+        # (tree_ops.resolve_tree_backend)
+        return tree_ops.resolve_tree_backend(self.backend, self.use_kernels)
 
 
 class PrioritizedReplay:
@@ -68,6 +88,12 @@ class PrioritizedReplay:
     All methods are pure functions of ``ReplayState`` and jit-friendly.
     Batched throughout: B parallel inserts / samples / updates per call
     replace the paper's B concurrent threads.
+
+    **Transaction contract** (DESIGN.md §9): with ``lazy=True`` the
+    mutating ops write only the tree's leaf level and bump the pending
+    ledger; the caller must ``flush`` before the next ``sample`` (the
+    runtime loop flushes exactly once per iteration).  With the default
+    ``lazy=False`` every op leaves the tree fully consistent.
     """
 
     def __init__(self, config: ReplayConfig, example_item: Pytree):
@@ -89,9 +115,22 @@ class PrioritizedReplay:
             head=jnp.zeros((), jnp.int32),
             count=jnp.zeros((), jnp.int32),
             max_priority=jnp.ones((), jnp.float32),
+            pending=jnp.zeros((), jnp.int32),
         )
 
     # -- tree-op dispatch (TreeOps backend protocol, DESIGN.md §4.2) -------
+
+    def _tree_write(self, state: ReplayState, idx, vals, *, lazy: bool,
+                    unique: bool = False) -> Tuple[jax.Array, jax.Array]:
+        """One priority SET through the backend: eager (write + propagate)
+        or lazy (leaf write, ledger bump).  Returns (tree, pending)."""
+        if lazy:
+            tree = self.ops.write_leaves(self.spec, state.tree, idx, vals,
+                                         unique=unique)
+            return tree, state.pending + idx.shape[0]
+        tree = self.ops.update(self.spec, state.tree, idx, vals,
+                               unique=unique)
+        return tree, state.pending
 
     def _tree_update(self, tree, idx, vals):
         return self.ops.update(self.spec, tree, idx, vals)
@@ -99,17 +138,39 @@ class PrioritizedReplay:
     def _tree_sample(self, tree, u):
         return self.ops.sample(self.spec, tree, u)
 
+    # -- the flush boundary (lazy-writing transaction, DESIGN.md §9) -------
+
+    def flush(self, state: ReplayState) -> ReplayState:
+        """Apply every deferred leaf write's upward propagation in one
+        merged pass and reset the pending ledger.
+
+        No-op (the tree passes through untouched) when nothing is
+        pending, so defensive flushes are cheap.  After this returns the
+        tree is bit-exact identical to the one produced by eagerly
+        propagating each write in order — the interior rebuild is a pure
+        function of the leaf level, so the write history cannot matter.
+        """
+        tree = jax.lax.cond(
+            state.pending > 0,
+            lambda t: self.ops.flush(self.spec, t),
+            lambda t: t,
+            state.tree)
+        return dataclasses.replace(
+            state, tree=tree, pending=jnp.zeros((), jnp.int32))
+
     # -- insertion (lazy writing, paper Alg. 3 INSERT) ---------------------
 
     def insert_slots(self, state: ReplayState, batch: int) -> jax.Array:
         """FIFO slot allocation: next ``batch`` indices after head."""
         return (state.head + jnp.arange(batch, dtype=jnp.int32)) % self.config.capacity
 
-    def insert_begin(self, state: ReplayState, batch: int) -> Tuple[ReplayState, jax.Array]:
+    def insert_begin(self, state: ReplayState, batch: int, *,
+                     lazy: bool = False) -> Tuple[ReplayState, jax.Array]:
         """Phase 1 — atomically zero the in-flight slots' priorities.
 
-        After this returns, sampling from ``state.tree`` can never select
-        a slot whose data write is still pending.
+        After this state is *flushed*, sampling can never select a slot
+        whose data write is still pending (with ``lazy=False`` the
+        returned state is already flushed).
 
         ``batch`` may not exceed the capacity: the FIFO slot allocation
         would wrap onto duplicate indices and the batched scatter writes
@@ -125,11 +186,14 @@ class PrioritizedReplay:
                 "— insert at most `capacity` items per call (or grow the "
                 "buffer)")
         slots = self.insert_slots(state, batch)
-        tree = self._tree_update(state.tree, slots, jnp.zeros((batch,), jnp.float32))
-        return dataclasses.replace(state, tree=tree), slots
+        tree, pending = self._tree_write(
+            state, slots, jnp.zeros((batch,), jnp.float32),
+            lazy=lazy, unique=True)
+        return dataclasses.replace(state, tree=tree, pending=pending), slots
 
     def insert_commit(
-        self, state: ReplayState, slots: jax.Array, items: Pytree
+        self, state: ReplayState, slots: jax.Array, items: Pytree, *,
+        lazy: bool = False,
     ) -> ReplayState:
         """Phase 2 — storage write, then restore priority to P_max."""
         storage = jax.tree.map(
@@ -137,17 +201,20 @@ class PrioritizedReplay:
         )
         batch = slots.shape[0]
         pmax = jnp.broadcast_to(state.max_priority, (batch,))
-        tree = self._tree_update(state.tree, slots, pmax)
+        tree, pending = self._tree_write(state, slots, pmax,
+                                         lazy=lazy, unique=True)
         return dataclasses.replace(
             state,
             tree=tree,
             storage=storage,
             head=(state.head + batch) % self.config.capacity,
             count=jnp.minimum(state.count + batch, self.config.capacity),
+            pending=pending,
         )
 
     def insert(self, state: ReplayState, items: Pytree) -> ReplayState:
-        """Convenience: begin + commit in one call."""
+        """Convenience: begin + commit in one call (eager: the returned
+        state is fully consistent)."""
         batch = jax.tree.leaves(items)[0].shape[0]
         state, slots = self.insert_begin(state, batch)
         return self.insert_commit(state, slots, items)
@@ -166,18 +233,25 @@ class PrioritizedReplay:
     ) -> Tuple[jax.Array, Pytree, jax.Array]:
         """Prioritized sample of ``batch`` items.
 
-        Returns (indices, items, importance_weights).  For a sharded
-        buffer, pass the psum'd ``global_total`` / ``global_count`` so the
-        importance weights are computed against the *global* distribution
-        (stratified sampling across shards; DESIGN.md §2), and a
-        ``max_across`` reduction (pmax over the mesh axes) so the
-        ``w / max w`` normalization also uses the global max — otherwise
-        each shard rescales its weights by a different local factor and
-        the shards' learner objectives silently diverge.
+        Returns (indices, items, importance_weights).  The caller must
+        have flushed any pending lazy writes (``state.pending == 0``) —
+        the runtime loop samples only at its per-iteration flush
+        boundary.  For a sharded buffer, pass the psum'd
+        ``global_total`` / ``global_count`` so the importance weights
+        are computed against the *global* distribution (stratified
+        sampling across shards; DESIGN.md §2), and a ``max_across``
+        reduction (pmax over the mesh axes) so the ``w / max w``
+        normalization also uses the global max — otherwise each shard
+        rescales its weights by a different local factor and the
+        shards' learner objectives silently diverge.
         """
         u = jax.random.uniform(rng, (batch,))
-        idx, pri = self._tree_sample(state.tree, u)
-        items = self._gather(state.storage, idx)
+        if self.config.fused_sample_gather:
+            idx, pri, items = self.ops.sample_gather(
+                self.spec, state.tree, u, state.storage)
+        else:
+            idx, pri = self._tree_sample(state.tree, u)
+            items = self._gather(state.storage, idx)
         tot = state.tree[0] if global_total is None else global_total
         cnt = state.count if global_count is None else global_count
         prob = pri / jnp.maximum(tot, 1e-12)
@@ -202,7 +276,8 @@ class PrioritizedReplay:
         return (jnp.abs(td_errors) + self.config.eps) ** self.config.alpha
 
     def update_priorities(
-        self, state: ReplayState, idx: jax.Array, td_errors: jax.Array
+        self, state: ReplayState, idx: jax.Array, td_errors: jax.Array, *,
+        lazy: bool = False,
     ) -> ReplayState:
         """Write-after-read tolerated (paper §IV-D3).
 
@@ -214,15 +289,18 @@ class PrioritizedReplay:
         """
         cur = self.get_priority(state, idx)
         pri = jnp.where(cur > 0, self.priorities_from_td(td_errors), 0.0)
-        tree = self._tree_update(state.tree, idx, pri)
+        tree, pending = self._tree_write(state, idx, pri, lazy=lazy)
         return dataclasses.replace(
             state,
             tree=tree,
             max_priority=jnp.maximum(state.max_priority, jnp.max(pri)),
+            pending=pending,
         )
 
     def get_priority(self, state: ReplayState, idx: jax.Array) -> jax.Array:
-        """Θ(1) priority retrieval (paper Alg. 3 PRIORITYRETRIEVAL)."""
+        """Θ(1) priority retrieval (paper Alg. 3 PRIORITYRETRIEVAL).
+        Leaf reads are always current — lazy writes defer only the
+        interior propagation."""
         return sumtree.get(self.spec, state.tree, idx)
 
     def total_priority(self, state: ReplayState) -> jax.Array:

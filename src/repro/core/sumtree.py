@@ -115,16 +115,33 @@ def get(spec: SumTreeSpec, tree: jax.Array, idx: jax.Array) -> jax.Array:
     return tree[spec.leaf_offset + idx]
 
 
-def last_writer_mask(idx: jax.Array) -> jax.Array:
+def last_writer_mask(idx: jax.Array, num_slots: int | None = None) -> jax.Array:
     """mask[i] = True iff no j > i has idx[j] == idx[i].
 
     Resolves duplicate indices in a batched update to sequential
     last-writer-wins semantics (DESIGN.md §2: lock-free conflict
-    resolution).  O(B²) broadcast compare — B is an op batch (≤ few k).
+    resolution).  Sort-based, O(B log B): sort (idx, position) pairs and
+    mark the last entry of each equal-idx run (replaces the old O(B²)
+    broadcast compare, which scaled quadratically with the op batch).
+
+    ``num_slots`` — an exclusive upper bound on the index values — lets
+    the two sort keys pack into one int32 (``idx * B + pos``), which XLA
+    sorts substantially faster than a stable two-operand sort; without
+    it (or when the packing would overflow int32) the stable key/value
+    sort is used.  Both paths produce identical masks.
     """
-    eq = idx[None, :] == idx[:, None]          # (B, B)
-    later = jnp.triu(jnp.ones_like(eq), k=1)   # j > i
-    return ~jnp.any(eq & later.astype(bool), axis=1)
+    b = idx.shape[0]
+    if b <= 1:
+        return jnp.ones((b,), bool)
+    idx = jnp.asarray(idx, jnp.int32)
+    pos = jnp.arange(b, dtype=jnp.int32)
+    if num_slots is not None and num_slots * b < 2**31:
+        packed = jax.lax.sort(idx * b + pos)
+        sidx, spos = packed // b, packed % b
+    else:
+        sidx, spos = jax.lax.sort_key_val(idx, pos, is_stable=True)
+    run_end = jnp.concatenate([sidx[1:] != sidx[:-1], jnp.ones((1,), bool)])
+    return jnp.zeros((b,), bool).at[spos].set(run_end)
 
 
 def _ancestor_indices(spec: SumTreeSpec, idx: jax.Array) -> List[jax.Array]:
@@ -146,15 +163,25 @@ def update(
     tree: jax.Array,
     idx: jax.Array,
     values: jax.Array,
+    *,
+    unique: bool = False,
 ) -> jax.Array:
     """Batched priority SET (paper Alg. 2 UPDATEVALUE, vectorized).
 
     Sequential-equivalent semantics under duplicates (last writer wins).
     Θ((B + dedup) · log_K N) work; every scatter group is K-aligned.
+    ``unique=True`` skips the dedup when the caller guarantees distinct
+    indices (e.g. FIFO insert slots).
+
+    This is the *eager* path: leaf write and upward propagation in one
+    op.  The lazy-writing transaction path (``write_leaves`` + one
+    ``rebuild`` per flush boundary, core/replay.py) coalesces many such
+    ops into a single propagation pass per step.
     """
     idx = jnp.asarray(idx, jnp.int32)
     values = jnp.asarray(values, tree.dtype)
-    mask = last_writer_mask(idx)
+    mask = (jnp.ones(idx.shape, bool) if unique
+            else last_writer_mask(idx, spec.num_leaves))
     old = tree[spec.leaf_offset + idx]
     delta = jnp.where(mask, values - old, jnp.zeros_like(values))
     # Leaf SET: masked duplicates are diverted to the scratch slot.
@@ -166,6 +193,58 @@ def update(
         node = ancestors[level]
         tree = tree.at[spec.offsets[level] + node].add(delta)
     return tree.at[spec.scratch_slot].set(0.0)
+
+
+def write_leaves(
+    spec: SumTreeSpec,
+    tree: jax.Array,
+    idx: jax.Array,
+    values: jax.Array,
+    *,
+    unique: bool = False,
+) -> jax.Array:
+    """Leaf-only priority SET — the deferred half of a lazy write.
+
+    Writes ``values`` into the leaf level (duplicates resolve
+    last-writer-wins) and touches *nothing* above it: after this call
+    the tree's interior no longer sums its leaves until ``rebuild``
+    runs.  ``core/replay.py`` counts these deferred writes in its
+    pending-delta ledger and flushes them in one merged propagation
+    pass at the next sample boundary (paper §IV-D lazy writing).
+    """
+    idx = jnp.asarray(idx, jnp.int32)
+    values = jnp.asarray(values, tree.dtype)
+    if unique:
+        return tree.at[spec.leaf_offset + idx].set(values)
+    mask = last_writer_mask(idx, spec.num_leaves)
+    leaf_target = jnp.where(mask, spec.leaf_offset + idx, spec.scratch_slot)
+    tree = tree.at[leaf_target].set(values)
+    return tree.at[spec.scratch_slot].set(0.0)
+
+
+def rebuild(spec: SumTreeSpec, tree: jax.Array) -> jax.Array:
+    """Recompute every interior level from the leaf level — one upward
+    propagation pass (the ``TreeOps.flush`` payload).
+
+    The interior becomes a *pure function of the current leaves*
+    (K-aligned reshape-sums, the same reduction ``build`` uses), which
+    is what makes lazy ≡ eager **bit-exact** at flush points: flushing
+    after every write and flushing once after many writes reach the
+    identical tree, because neither depends on the write history.  A
+    side benefit over incremental delta propagation: f32 drift between
+    interior sums and leaf sums cannot accumulate across steps.
+    """
+    level_vals = jax.lax.dynamic_slice(
+        tree, (spec.leaf_offset,), (spec.num_leaves,))
+    for level in range(spec.leaf_level - 1, -1, -1):
+        groups = level_vals.shape[0] // spec.fanout
+        parents = level_vals.reshape(groups, spec.fanout).sum(axis=-1)
+        padded = jnp.zeros((spec.level_sizes[level],), tree.dtype)
+        padded = padded.at[:groups].set(parents)
+        tree = jax.lax.dynamic_update_slice(tree, padded,
+                                            (spec.offsets[level],))
+        level_vals = padded
+    return tree
 
 
 def add(
@@ -227,15 +306,7 @@ def build(spec: SumTreeSpec, priorities: jax.Array) -> jax.Array:
     pri = pri.at[: spec.capacity].set(priorities)
     tree = init(spec, priorities.dtype)
     tree = jax.lax.dynamic_update_slice(tree, pri, (spec.leaf_offset,))
-    level_vals = pri
-    for level in range(spec.leaf_level - 1, -1, -1):
-        groups = level_vals.shape[0] // spec.fanout
-        parents = level_vals.reshape(groups, spec.fanout).sum(axis=-1)
-        padded = jnp.zeros((spec.level_sizes[level],), priorities.dtype)
-        padded = padded.at[:groups].set(parents)
-        tree = jax.lax.dynamic_update_slice(tree, padded, (spec.offsets[level],))
-        level_vals = padded
-    return tree
+    return rebuild(spec, tree)
 
 
 def leaves(spec: SumTreeSpec, tree: jax.Array) -> jax.Array:

@@ -1,8 +1,8 @@
 """Sum-tree op backends (DESIGN.md §4.2): one protocol, two impls.
 
-The replay buffer (single-shard and sharded alike) dispatches its three
-hot tree/storage operations through a ``TreeOps`` object instead of
-branching on ``use_kernels`` at every call site:
+The replay buffer (single-shard and sharded alike) dispatches its hot
+tree/storage operations through a ``TreeOps`` object instead of
+branching on a backend flag at every call site:
 
   * ``xla``    — the pure-jnp reference path (core/sumtree.py + take);
   * ``pallas`` — the Pallas kernels (kernels/ops.py), which themselves
@@ -11,16 +11,57 @@ branching on ``use_kernels`` at every call site:
 Both backends implement identical batched semantics (last-writer-wins
 update, exact inverse-CDF sample), so they are interchangeable inside
 jit, vmap, scan and shard_map.
+
+The replay-transaction ops (DESIGN.md §9) split the eager ``update``
+into its two halves:
+
+  * ``write_leaves`` — leaf-only SET, upward propagation deferred;
+  * ``flush``        — one merged propagation pass (interior rebuild
+    from the leaf level).
+
+Both backends share the XLA implementations of these two on purpose:
+a leaf write is one small scatter and the flush is a dense K-aligned
+reshape-sum sweep — regular-access patterns XLA already compiles
+optimally.  The Pallas kernels earn their keep on the *irregular*
+accesses: the inverse-CDF descent, the scattered eager update, and the
+fused sample+gather (``sample_gather``), which runs the descent and the
+storage-row fetch in one kernel so the sampled indices never round-trip
+through HBM between two kernel launches.
 """
 
 from __future__ import annotations
 
-from typing import Protocol, Tuple, runtime_checkable
+import warnings
+from typing import Any, Optional, Protocol, Tuple, runtime_checkable
 
 import jax
 
 from repro.core import sumtree
 from repro.core.sumtree import SumTreeSpec
+
+Pytree = Any
+
+
+def resolve_tree_backend(backend: Optional[str], use_kernels: bool) -> str:
+    """The one place the legacy ``use_kernels`` alias is interpreted.
+
+    ``backend=None`` means "unset" (defaults to ``"xla"``).  Passing
+    ``use_kernels=True`` together with an *explicit* conflicting
+    ``backend`` raises instead of silently overriding it (the old
+    behavior picked pallas and ignored ``backend="xla"``).
+    """
+    if use_kernels:
+        warnings.warn(
+            "ReplayConfig.use_kernels is deprecated: pass "
+            "backend='pallas' instead", DeprecationWarning, stacklevel=3)
+        if backend not in (None, "pallas"):
+            raise ValueError(
+                f"conflicting tree-backend selection: use_kernels=True "
+                f"requests 'pallas' but backend={backend!r} was set "
+                "explicitly — drop the deprecated use_kernels flag and "
+                "keep only backend=")
+        return "pallas"
+    return backend or "xla"
 
 
 @runtime_checkable
@@ -30,8 +71,23 @@ class TreeOps(Protocol):
     name: str
 
     def update(self, spec: SumTreeSpec, tree: jax.Array, idx: jax.Array,
-               values: jax.Array) -> jax.Array:
-        """Batched priority SET (duplicate indices: last writer wins)."""
+               values: jax.Array, unique: bool = False) -> jax.Array:
+        """Eager batched priority SET (duplicates: last writer wins),
+        leaf write + upward propagation in one op.  ``unique=True``
+        skips the dedup for caller-guaranteed distinct indices."""
+        ...
+
+    def write_leaves(self, spec: SumTreeSpec, tree: jax.Array,
+                     idx: jax.Array, values: jax.Array,
+                     unique: bool = False) -> jax.Array:
+        """Lazy batched priority SET: leaf level only, propagation
+        deferred until the next ``flush``."""
+        ...
+
+    def flush(self, spec: SumTreeSpec, tree: jax.Array) -> jax.Array:
+        """One merged upward propagation pass: rebuild every interior
+        level from the current leaves (bit-exact regardless of how many
+        ``write_leaves`` batches are outstanding)."""
         ...
 
     def sample(self, spec: SumTreeSpec, tree: jax.Array, u: jax.Array
@@ -43,14 +99,28 @@ class TreeOps(Protocol):
         """out[i] = storage[idx[i]] for one storage leaf."""
         ...
 
+    def sample_gather(self, spec: SumTreeSpec, tree: jax.Array,
+                      u: jax.Array, storage: Pytree
+                      ) -> Tuple[jax.Array, jax.Array, Pytree]:
+        """Fused descent + storage fetch → (idx, priority, items): the
+        paper's irregular-memory-access fix — sampled rows are gathered
+        in the same pass that finds them."""
+        ...
+
 
 class XlaTreeOps:
     """Pure-jnp reference backend."""
 
     name = "xla"
 
-    def update(self, spec, tree, idx, values):
-        return sumtree.update(spec, tree, idx, values)
+    def update(self, spec, tree, idx, values, unique=False):
+        return sumtree.update(spec, tree, idx, values, unique=unique)
+
+    def write_leaves(self, spec, tree, idx, values, unique=False):
+        return sumtree.write_leaves(spec, tree, idx, values, unique=unique)
+
+    def flush(self, spec, tree):
+        return sumtree.rebuild(spec, tree)
 
     def sample(self, spec, tree, u):
         return sumtree.sample(spec, tree, u)
@@ -58,9 +128,20 @@ class XlaTreeOps:
     def gather(self, storage, idx):
         return storage[idx]
 
+    def sample_gather(self, spec, tree, u, storage):
+        idx, pri = sumtree.sample(spec, tree, u)
+        items = jax.tree.map(lambda buf: buf[idx], storage)
+        return idx, pri, items
+
 
 class PallasTreeOps:
-    """Pallas-kernel backend (interpret mode on CPU, Mosaic on TPU)."""
+    """Pallas-kernel backend (interpret mode on CPU, Mosaic on TPU).
+
+    ``write_leaves``/``flush`` intentionally reuse the XLA
+    implementations (regular-access ops — see module docstring); the
+    kernels cover the irregular ones: eager update, descent, gather,
+    and the fused ``sample_gather``.
+    """
 
     name = "pallas"
 
@@ -68,14 +149,24 @@ class PallasTreeOps:
         from repro.kernels import ops as kernel_ops  # lazy: pallas import
         self._kops = kernel_ops
 
-    def update(self, spec, tree, idx, values):
-        return self._kops.sumtree_update(spec, tree, idx, values)
+    def update(self, spec, tree, idx, values, unique=False):
+        return self._kops.sumtree_update(spec, tree, idx, values,
+                                         unique=unique)
+
+    def write_leaves(self, spec, tree, idx, values, unique=False):
+        return sumtree.write_leaves(spec, tree, idx, values, unique=unique)
+
+    def flush(self, spec, tree):
+        return sumtree.rebuild(spec, tree)
 
     def sample(self, spec, tree, u):
         return self._kops.sumtree_sample(spec, tree, u)
 
     def gather(self, storage, idx):
         return self._kops.prioritized_gather(storage, idx)
+
+    def sample_gather(self, spec, tree, u, storage):
+        return self._kops.sumtree_sample_gather(spec, tree, u, storage)
 
 
 _BACKENDS = {"xla": XlaTreeOps, "pallas": PallasTreeOps}

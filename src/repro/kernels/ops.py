@@ -4,10 +4,11 @@ Responsibilities:
   * flat-tree ↔ level-matrix conversion (the kernels see each level as a
     (groups, K) matrix; the rest of the system uses the paper's flat
     implicit-array layout);
-  * batch padding to kernel block multiples, with delta-neutral padding
-    for updates (a padded update targets the same leaf as the *last* real
-    update of that leaf — or the leaf's current value — so sequential
-    last-writer-wins semantics are preserved);
+  * batch padding to kernel block multiples.  Updates carry the
+    full-batch sort-based last-writer mask (core/sumtree.py) computed
+    *outside* the kernel, so padded entries are simply masked out and
+    sequential last-writer-wins semantics hold across grid blocks
+    without any in-kernel dedup;
   * VMEM-budget dispatch: trees whose working set exceeds the kernel's
     VMEM budget fall back to the ``core.sumtree`` XLA path (documented in
     DESIGN.md §4.2);
@@ -18,7 +19,7 @@ Responsibilities:
 from __future__ import annotations
 
 import functools
-from typing import List
+from typing import Any, List
 
 import jax
 import jax.numpy as jnp
@@ -26,8 +27,11 @@ import jax.numpy as jnp
 from repro.core import sumtree as _st
 from repro.core.sumtree import SumTreeSpec
 from repro.kernels import gather as _gather
+from repro.kernels import sample_gather as _ksg
 from repro.kernels import sumtree_sample as _ks
 from repro.kernels import sumtree_update as _ku
+
+Pytree = Any
 
 # VMEM working-set cap for the kernel path (bytes); beyond this the ops
 # fall back to XLA.  ~8 MB leaves headroom for one-hots + transients in
@@ -87,34 +91,98 @@ def sumtree_sample(spec: SumTreeSpec, tree: jax.Array, u: jax.Array):
 
 # -- update -------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnums=(0,))
+@functools.partial(jax.jit, static_argnums=(0, 4))
 def sumtree_update(spec: SumTreeSpec, tree: jax.Array, idx: jax.Array,
-                   values: jax.Array) -> jax.Array:
-    """Kernel-backed batched SET; XLA fallback above VMEM budget."""
+                   values: jax.Array, unique: bool = False) -> jax.Array:
+    """Kernel-backed batched SET; XLA fallback above VMEM budget.
+
+    Duplicate resolution happens here, not in the kernel: the sort-based
+    last-writer merge (``core.sumtree.last_writer_mask``) runs once over
+    the whole batch and the kernel receives the mask — padding entries
+    are masked-out writes to leaf 0 (no delta-neutral value dance), and
+    cross-grid-block duplicates need no sequential-ordering argument
+    because at most one entry per leaf survives the merge.
+    ``unique=True`` skips the merge for caller-guaranteed distinct
+    indices (FIFO insert slots).
+    """
     if not kernel_path_ok(spec):
-        return _st.update(spec, tree, idx, values)
+        return _st.update(spec, tree, idx, values, unique=unique)
     b = idx.shape[0]
+    idx = idx.astype(jnp.int32)
+    mask = (jnp.ones((b,), jnp.int32) if unique
+            else _st.last_writer_mask(idx, spec.num_leaves).astype(jnp.int32))
     bp = _ceil_to(b, _ku.UPDATE_BLOCK)
     if bp != b:
-        # Delta-neutral padding: pad entries re-write the final value of
-        # leaf `t` (the last real write to `t`, else its current value),
-        # so the extra last-writers change nothing.
-        t = spec.capacity - 1
-        match = idx == t
-        has = jnp.any(match)
-        last_pos = jnp.max(jnp.where(match, jnp.arange(b), -1))
-        cur = tree[spec.leaf_offset + t]
-        pad_val = jnp.where(has, values[jnp.maximum(last_pos, 0)], cur)
-        idx = jnp.pad(idx, (0, bp - b), constant_values=t)
-        values = jnp.concatenate(
-            [values, jnp.broadcast_to(pad_val, (bp - b,)).astype(values.dtype)]
-        )
+        idx = jnp.pad(idx, (0, bp - b))
+        values = jnp.pad(values, (0, bp - b))
+        mask = jnp.pad(mask, (0, bp - b))
     root, *levels = tree_to_levels(spec, tree)
     out = _ku.sumtree_update_levels(
-        root, levels, idx.astype(jnp.int32), values,
+        root, levels, idx, values, mask,
         fanout=spec.fanout, interpret=_interpret(),
     )
     return levels_to_tree(spec, out)
+
+
+# -- fused sample + gather ----------------------------------------------------
+
+
+def _flatten_storage_leaf(buf: jax.Array):
+    """(capacity, ...) leaf → f32 (capacity, F) matrix + restorer."""
+    shape = buf.shape
+    feat = 1
+    for s in shape[1:]:
+        feat *= s
+    flat = buf.reshape(shape[0], feat).astype(jnp.float32)
+
+    def restore(g: jax.Array, b: int) -> jax.Array:
+        out = g[:b].reshape((b,) + shape[1:])
+        if jnp.issubdtype(buf.dtype, jnp.inexact):
+            return out.astype(buf.dtype)
+        return jnp.round(out).astype(buf.dtype)
+
+    return flat, restore
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def sumtree_sample_gather(spec: SumTreeSpec, tree: jax.Array, u: jax.Array,
+                          storage: Pytree):
+    """Fused descent + storage fetch: one kernel produces (idx, pri,
+    items) — the sampled indices never leave VMEM between the tree walk
+    and the row gather (the paper's irregular-memory-access fix).
+
+    Falls back to the split sample + per-leaf gather path above the
+    VMEM budget or for zero-feature leaves.  Integer payloads are exact
+    below 2^24 (one-hot matmul accumulates in f32 — the gather.py
+    contract).
+    """
+    leaves, treedef = jax.tree.flatten(storage)
+
+    def split_path():
+        idx, pri = sumtree_sample(spec, tree, u)
+        items = jax.tree.unflatten(
+            treedef, [prioritized_gather(leaf, idx) for leaf in leaves])
+        return idx, pri, items
+
+    if not kernel_path_ok(spec) or not leaves or any(
+            leaf.size == 0 for leaf in leaves):
+        return split_path()
+    b = u.shape[0]
+    bp = _ceil_to(b, _ksg.SAMPLE_BLOCK)
+    u_pad = jnp.pad(u, (0, bp - b), constant_values=0.5)
+    n = leaves[0].shape[0]
+    np_ = _ceil_to(n, _ksg.STORAGE_BLOCK)
+    mats, restores = zip(*[_flatten_storage_leaf(leaf) for leaf in leaves])
+    mats = [jnp.pad(m, ((0, np_ - n), (0, 0))) for m in mats]
+    levels = tree_to_levels(spec, tree)[1:]  # descent starts below the root
+    idx, pri, gathered = _ksg.sample_gather_levels(
+        levels, u_pad, mats,
+        capacity=spec.capacity, fanout=spec.fanout,
+        interpret=_interpret(),
+    )
+    items = jax.tree.unflatten(
+        treedef, [res(g, b) for res, g in zip(restores, gathered)])
+    return idx[:b], pri[:b], items
 
 
 # -- storage gather -----------------------------------------------------------

@@ -32,23 +32,23 @@ from jax.experimental import pallas as pl
 SAMPLE_BLOCK = 128  # SB — samples per grid step
 
 
-def _kernel(capacity: int, fanout: int, u_ref, *refs):
-    """refs = (level_1, ..., level_H, out_idx, out_pri)."""
-    level_refs = refs[:-2]
-    out_idx_ref, out_pri_ref = refs[-2:]
-    k = fanout
-    sb = u_ref.shape[0]
+def descend(level_vals, u, *, capacity: int, fanout: int):
+    """Shared in-kernel inverse-CDF descent over loaded level matrices.
 
-    lvl1 = level_refs[0][...]                      # (1, K) — children of root
-    total = jnp.sum(lvl1.astype(jnp.float32))
-    u = u_ref[...].astype(jnp.float32)
+    ``level_vals[l]``: (groups_l, K) f32, top-down below the root (leaf
+    level last).  Returns (leaf, pri) for ``u.shape[0]`` draws — also
+    used by the fused sample+gather kernel (sample_gather.py), so the
+    two kernels cannot drift apart numerically.
+    """
+    k = fanout
+    sb = u.shape[0]
+    total = jnp.sum(level_vals[0])                 # (1, K) — children of root
     residual = jnp.clip(u, 1e-12, 1.0 - 1e-7) * total
     group = jnp.zeros((sb,), jnp.int32)
 
     lane = jax.lax.broadcasted_iota(jnp.int32, (sb, k), 1)
     row_val = jnp.zeros((sb,), jnp.float32)
-    for ref in level_refs:
-        lv = ref[...].astype(jnp.float32)          # (G, K)
+    for lv in level_vals:                          # (G, K) per level
         g = lv.shape[0]
         giota = jax.lax.broadcasted_iota(jnp.int32, (sb, g), 1)
         onehot = (group[:, None] == giota).astype(jnp.float32)
@@ -73,8 +73,19 @@ def _kernel(capacity: int, fanout: int, u_ref, *refs):
     # (group, lane) read of the leaf level — `lv` still holds the loop's
     # last (leaf-level) load, so no second VMEM read of the largest level.
     clamp_val = lv[(capacity - 1) // k, (capacity - 1) % k]
+    pri = jnp.where(group > capacity - 1, clamp_val, row_val)
+    return leaf, pri
+
+
+def _kernel(capacity: int, fanout: int, u_ref, *refs):
+    """refs = (level_1, ..., level_H, out_idx, out_pri)."""
+    level_refs = refs[:-2]
+    out_idx_ref, out_pri_ref = refs[-2:]
+    level_vals = [ref[...].astype(jnp.float32) for ref in level_refs]
+    u = u_ref[...].astype(jnp.float32)
+    leaf, pri = descend(level_vals, u, capacity=capacity, fanout=fanout)
     out_idx_ref[...] = leaf
-    out_pri_ref[...] = jnp.where(group > capacity - 1, clamp_val, row_val)
+    out_pri_ref[...] = pri
 
 
 def sumtree_sample_levels(

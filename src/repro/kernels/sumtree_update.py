@@ -6,12 +6,12 @@ TPU adaptation of paper Alg. 2 UPDATEVALUE + Alg. 3 synchronization:
     MXU matmul**: ``one_hot(group).T @ (delta ⊙ one_hot(child))`` produces
     a dense (groups, K) delta matrix accumulated into the VMEM-resident
     level — the systolic replacement for lock-protected scatter;
-  * duplicate leaf indices *within* a grid block are resolved to
-    last-writer-wins with a triangular mask; *across* blocks, TPU grid
-    steps execute sequentially over the same VMEM-resident level blocks,
-    so later blocks read the earlier blocks' writes — exactly sequential
-    semantics (this is the lock-free version of the paper's two-lock
-    ordering guarantee);
+  * duplicate leaf indices are resolved to last-writer-wins *before* the
+    kernel launches: the wrapper (ops.py) computes the sort-based
+    last-writer mask over the whole batch (core/sumtree.py) and passes
+    it in, so at most one entry per leaf carries a non-zero delta.  The
+    old in-kernel O(UB²) triangular dedup and the delta-neutral padding
+    dance are gone — padded entries simply arrive with mask 0;
   * levels are aliased input↔output (in-place tree update).
 """
 
@@ -27,7 +27,7 @@ from jax.experimental import pallas as pl
 UPDATE_BLOCK = 128  # UB — updates per grid step
 
 
-def _kernel(fanout: int, idx_ref, val_ref, *refs):
+def _kernel(fanout: int, idx_ref, val_ref, mask_ref, *refs):
     """refs = (root_out, level_1_out, ..., level_H_out), aliased to inputs."""
     root_ref = refs[0]
     level_refs = refs[1:]
@@ -36,14 +36,10 @@ def _kernel(fanout: int, idx_ref, val_ref, *refs):
 
     idx = idx_ref[...]
     val = val_ref[...].astype(jnp.float32)
-
-    # Last-writer-wins dedup within this block (sequential-equivalent).
-    eq = idx[None, :] == idx[:, None]
-    row = jax.lax.broadcasted_iota(jnp.int32, (ub, ub), 0)
-    col = jax.lax.broadcasted_iota(jnp.int32, (ub, ub), 1)
-    later = col > row
-    is_dup = jnp.any(eq & later, axis=1)
-    mask = jnp.logical_not(is_dup)
+    # Full-batch last-writer mask (precomputed sort-based merge in the
+    # wrapper): 1.0 on the single surviving write per leaf, 0.0 on
+    # superseded duplicates and padding.
+    mask = mask_ref[...].astype(jnp.float32)
 
     lane = jax.lax.broadcasted_iota(jnp.int32, (ub, k), 1)
 
@@ -58,7 +54,7 @@ def _kernel(fanout: int, idx_ref, val_ref, *refs):
     oh_c = (c[:, None] == lane).astype(jnp.float32)        # (UB, K)
     rows = jax.lax.dot(oh_g, leaf, precision=jax.lax.Precision.HIGHEST)
     old = jnp.sum(rows * oh_c, axis=-1)
-    delta = jnp.where(mask, val - old, 0.0)
+    delta = (val - old) * mask
     scat = jax.lax.dot(                                     # (G_H, K) scatter
         oh_g.T, delta[:, None] * oh_c, precision=jax.lax.Precision.HIGHEST
     )
@@ -93,6 +89,7 @@ def sumtree_update_levels(
     levels: Sequence[jax.Array],
     idx: jax.Array,
     values: jax.Array,
+    mask: jax.Array,
     *,
     fanout: int,
     interpret: bool = False,
@@ -100,8 +97,9 @@ def sumtree_update_levels(
     """SET priorities at ``idx`` and propagate deltas to every level + root.
 
     ``root``: (1, K) padded root group.  ``levels[l]``: (groups_l, K),
-    leaf level last.  Returns updated (root, *levels).  B must be a
-    multiple of UPDATE_BLOCK (ops.py pads with delta-neutral entries).
+    leaf level last.  ``mask``: int32 0/1, the full-batch last-writer
+    mask (padding entries 0).  Returns updated (root, *levels).  B must
+    be a multiple of UPDATE_BLOCK (ops.py pads with masked-out entries).
     """
     b = idx.shape[0]
     assert b % UPDATE_BLOCK == 0, b
@@ -115,9 +113,10 @@ def sumtree_update_levels(
         in_specs=[
             pl.BlockSpec((UPDATE_BLOCK,), lambda i: (i,)),
             pl.BlockSpec((UPDATE_BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((UPDATE_BLOCK,), lambda i: (i,)),
         ] + tree_specs,
         out_specs=tree_specs,
         out_shape=[jax.ShapeDtypeStruct(t.shape, t.dtype) for t in tree_in],
-        input_output_aliases={2 + j: j for j in range(len(tree_in))},
+        input_output_aliases={3 + j: j for j in range(len(tree_in))},
         interpret=interpret,
-    )(idx, values, *tree_in)
+    )(idx, values, mask, *tree_in)

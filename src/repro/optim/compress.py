@@ -73,6 +73,18 @@ def decompress(comp: Pytree) -> Pytree:
     )
 
 
+def l2_norm(tree: Pytree) -> jax.Array:
+    """Global L2 norm of a pytree — the compression-error magnitude
+    surfaced per step as the ``compress_error_norm`` loop metric (EF
+    residual of the int8 pod leg, or the bf16 cast error of the
+    intra-pod leg)."""
+    leaves = jax.tree.leaves(tree)
+    if not leaves:
+        return jnp.zeros(())
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
 def payload_bytes(comp: Pytree) -> int:
     """Wire bytes of the compressed payload crossing the slow link: one
     int8 per element plus one f32 scale per leaf."""

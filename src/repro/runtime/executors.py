@@ -44,6 +44,16 @@ same seed (asserted in tests/test_executors.py), and ``Executor.run``
 performs exactly the requested number of iterations (full chunks plus an
 exact-length tail chunk, one cached jit per tail length).
 
+Every chunk program **donates the replay state** (tree + storage) at the
+jit boundary (``donate_argnums``): the multi-MB sum tree and transition
+storage buffers are aliased input↔output instead of copied per chunk
+call, completing the lazy-write story — one propagation pass per
+iteration (runtime/loop.py) and zero surviving tree copies across the
+scan/jit seam.  Callers must treat ``state.replay`` as consumed by
+``run_chunk`` (use the returned state; the other LoopState fields —
+agent params, the async double buffer, env state — are *not* donated, so
+holding references to those across chunks stays legal).
+
 Typical use::
 
     env_fn = functools.partial(make_vec, "cartpole")
@@ -170,12 +180,20 @@ class FusedExecutor(Executor):
                               publish_interval=publish_interval)
 
     def _build_chunk(self, length: int) -> Callable:
-        @jax.jit
-        def chunk(state):
+        def chunk(replay_state, rest):
+            state = rest._replace(replay=replay_state)
+
             def body(s, _):
                 return self.step(s)
             return jax.lax.scan(body, state, None, length=length)
-        return chunk
+
+        # tree + storage are donated: XLA aliases the replay buffers
+        # input↔output instead of round-tripping a copy per chunk
+        fn = jax.jit(chunk, donate_argnums=(0,))
+
+        def run(state: LoopState):
+            return fn(state.replay, state._replace(replay=()))
+        return run
 
     def init(self, key: jax.Array) -> LoopState:
         return init_loop_state(self.agent, self.replay, self._v_reset, key,
@@ -220,6 +238,7 @@ class ShardedExecutor(Executor):
         publish_interval: int = 0,
         max_staleness: Optional[int] = None,
         compress_pod_reduce: bool = False,
+        intra_pod_dtype: Optional[str] = None,
     ):
         axes = tuple(replay.config.axis_names)
         missing = [ax for ax in axes if ax not in mesh.shape]
@@ -261,6 +280,7 @@ class ShardedExecutor(Executor):
         self.publish_interval = publish_interval
         self.max_staleness = max_staleness
         self.compress_pod_reduce = compress_pod_reduce
+        self.intra_pod_dtype = intra_pod_dtype
         self._chunks: Dict[int, Callable] = {}
         self.spec, self._v_reset, self._v_step = env_fn(self.n_envs_local)
         self.schedule = RatioSchedule.from_config(cfg, n_envs)
@@ -287,7 +307,9 @@ class ShardedExecutor(Executor):
             agent, replay, batch_per_shard=cfg.batch_size // n_shards,
             beta=cfg.beta,
             max_staleness=max_staleness if publish_interval else None,
-            compress_axis=axes[0] if compress_pod_reduce else None)
+            compress_axis=axes[0] if compress_pod_reduce else None,
+            intra_pod_dtype=intra_pod_dtype,
+            lazy_writes=cfg.lazy_replay)
 
         def flat_shard_id():
             # row-major flattened (pod, data) index over the mesh axes —
@@ -333,8 +355,8 @@ class ShardedExecutor(Executor):
             out_specs=self._specs, check_rep=False))
 
     def _build_chunk(self, length: int) -> Callable:
-        def chunk_local(gstate):
-            state = self._local_state(gstate)
+        def chunk_local(replay_g, rest_g):
+            state = self._local_state(rest_g._replace(replay=replay_g))
 
             def body(s, _):
                 return self.step(s)
@@ -342,9 +364,17 @@ class ShardedExecutor(Executor):
             state, metrics = jax.lax.scan(body, state, None, length=length)
             return self._global_state(state), metrics
 
-        return jax.jit(shard_map(
-            chunk_local, mesh=self.mesh, in_specs=(self._specs,),
-            out_specs=(self._specs, self._metric_specs), check_rep=False))
+        # replay (tree + storage) donated at the jit boundary, same as
+        # the fused path — per-shard buffers alias through shard_map
+        fn = jax.jit(shard_map(
+            chunk_local, mesh=self.mesh,
+            in_specs=(self._specs.replay, self._specs._replace(replay=())),
+            out_specs=(self._specs, self._metric_specs), check_rep=False),
+            donate_argnums=(0,))
+
+        def run(state: LoopState):
+            return fn(state.replay, state._replace(replay=()))
+        return run
 
     # -- per-shard ↔ global state layout ----------------------------------
     #
@@ -442,6 +472,7 @@ class AsyncExecutor(Executor):
         mesh: Optional[Mesh] = None,
         scan_chunk: int = 64,
         compress_pod_reduce: bool = False,
+        intra_pod_dtype: Optional[str] = None,
     ):
         if publish_interval < 1:
             raise ValueError(
@@ -454,6 +485,10 @@ class AsyncExecutor(Executor):
                 raise ValueError(
                     "compress_pod_reduce needs a (pod, data) mesh — the "
                     "fused path has no cross-pod reduce to compress")
+            if intra_pod_dtype not in (None, "f32", "float32"):
+                raise ValueError(
+                    "intra_pod_dtype needs a mesh — the fused path has "
+                    "no cross-shard reduce to cast")
             self._impl: Executor = FusedExecutor(
                 agent, replay, env_fn, cfg, n_envs, scan_chunk=scan_chunk,
                 publish_interval=publish_interval)
@@ -462,7 +497,8 @@ class AsyncExecutor(Executor):
                 agent, replay, env_fn, cfg, n_envs, mesh,
                 scan_chunk=scan_chunk, publish_interval=publish_interval,
                 max_staleness=max_staleness,
-                compress_pod_reduce=compress_pod_reduce)
+                compress_pod_reduce=compress_pod_reduce,
+                intra_pod_dtype=intra_pod_dtype)
             self.n_shards = self._impl.n_shards
             self.n_envs_local = self._impl.n_envs_local
         self.agent = agent
@@ -474,6 +510,7 @@ class AsyncExecutor(Executor):
         self.publish_interval = publish_interval
         self.max_staleness = max_staleness
         self.compress_pod_reduce = compress_pod_reduce
+        self.intra_pod_dtype = intra_pod_dtype
         self.spec = self._impl.spec
         self.step = self._impl.step
         self.schedule = self._impl.schedule
@@ -496,6 +533,7 @@ def executor_from_plan(
     fanout: int = 128,
     tree_backend: str = "xla",
     scan_chunk: int = 64,
+    intra_pod_dtype: Optional[str] = None,
 ) -> Executor:
     """Instantiate the executor a ``runtime.planner.PlannedConfig``
     selected: the right backend class, mesh (``launch.mesh.
@@ -516,6 +554,11 @@ def executor_from_plan(
     cfg = _dc.replace(cfg, update_interval=plan.update_interval)
     mesh = mesh_from_plan(plan)
     if mesh is None:
+        if intra_pod_dtype not in (None, "f32", "float32"):
+            raise ValueError(
+                f"intra_pod_dtype={intra_pod_dtype!r} but the plan "
+                f"({plan.describe()}) runs the fused program — there is "
+                "no cross-shard reduce to cast")
         from repro.core.replay import ReplayConfig
         replay = PrioritizedReplay(
             ReplayConfig(capacity=capacity, fanout=fanout,
@@ -537,7 +580,9 @@ def executor_from_plan(
                              publish_interval=plan.publish_interval,
                              max_staleness=plan.max_staleness, mesh=mesh,
                              scan_chunk=scan_chunk,
-                             compress_pod_reduce=plan.compress_pod_reduce)
+                             compress_pod_reduce=plan.compress_pod_reduce,
+                             intra_pod_dtype=intra_pod_dtype)
     return ShardedExecutor(agent, replay, env_fn, cfg, plan.n_envs, mesh,
                            scan_chunk=scan_chunk,
-                           compress_pod_reduce=plan.compress_pod_reduce)
+                           compress_pod_reduce=plan.compress_pod_reduce,
+                           intra_pod_dtype=intra_pod_dtype)

@@ -49,14 +49,23 @@ from repro.optim import compress
 Pytree = Any
 
 
-def pmean_gradients(grads: Pytree, axes: Tuple[str, ...]) -> Pytree:
+def pmean_gradients(grads: Pytree, axes: Tuple[str, ...],
+                    dtype=None) -> Pytree:
     """Shard-average the gradient pytree (psum / axis size).  The mean —
     not the raw sum — keeps the effective learning rate independent of
-    the shard count."""
-    out = grads
-    for ax in axes:
-        out = jax.tree.map(lambda g: jax.lax.pmean(g, ax), out)
-    return out
+    the shard count.  ``dtype`` (e.g. ``jnp.bfloat16``) casts each leaf
+    onto the wire before the reduce and back to its original dtype
+    after — the bf16 intra-pod option, halving the reduce payload at the
+    cost of mantissa bits (the injected error is surfaced per step as
+    the ``compress_error_norm`` metric)."""
+    cast = dtype is not None and bool(axes)   # no axes → nothing on a wire
+
+    def avg(g):
+        out = g.astype(dtype) if cast else g
+        for ax in axes:
+            out = jax.lax.pmean(out, ax)
+        return out.astype(g.dtype) if cast else out
+    return jax.tree.map(avg, grads)
 
 
 def _pmean_inexact(tree: Pytree, axes: Tuple[str, ...]) -> Pytree:
@@ -71,13 +80,19 @@ def _pmean_inexact(tree: Pytree, axes: Tuple[str, ...]) -> Pytree:
     return jax.tree.map(avg, tree)
 
 
-def _weighted_psum(tree: Pytree, scale: jax.Array, axes: Tuple[str, ...]) -> Pytree:
-    """psum of ``leaf * scale`` over ``axes`` (scale is a per-shard scalar)."""
+def _weighted_psum(tree: Pytree, scale: jax.Array, axes: Tuple[str, ...],
+                   dtype=None) -> Pytree:
+    """psum of ``leaf * scale`` over ``axes`` (scale is a per-shard
+    scalar); ``dtype`` casts onto the wire like ``pmean_gradients``."""
+    cast = dtype is not None and bool(axes)
+
     def red(x):
         out = x * scale
+        if cast:
+            out = out.astype(dtype)
         for ax in axes:
             out = jax.lax.psum(out, ax)
-        return out
+        return out.astype(x.dtype) if cast else out
     return jax.tree.map(red, tree)
 
 
@@ -88,10 +103,22 @@ def _renormalize(w: jax.Array, total: jax.Array) -> jax.Array:
     return w / jnp.maximum(total, 1e-12)
 
 
+def resolve_reduce_dtype(intra_pod_dtype: Optional[str]):
+    """Map the executor-facing intra-pod reduce dtype option onto a jnp
+    dtype (None = f32, no cast)."""
+    if intra_pod_dtype in (None, "f32", "float32"):
+        return None
+    if intra_pod_dtype in ("bf16", "bfloat16"):
+        return jnp.bfloat16
+    raise ValueError(
+        f"intra_pod_dtype={intra_pod_dtype!r}: expected 'f32' or 'bf16'")
+
+
 def make_grad_reducer(
     axes: Tuple[str, ...],
     max_staleness: Optional[int] = None,
     compress_axis: Optional[str] = None,
+    intra_pod_dtype: Optional[str] = None,
 ):
     """Build the cross-shard gradient reduce used by ``sharded_learn``:
     ``reduce_grads(grads, age, ef) → (reduced, ef')`` over mesh ``axes``
@@ -100,12 +127,16 @@ def make_grad_reducer(
     Plain pmean by default; bounded-staleness renormalized weighted psum
     with ``max_staleness``; hierarchical f32-intra-pod / int8-EF-cross-
     pod with ``compress_axis`` (DESIGN.md §7) — composable with both.
+    ``intra_pod_dtype='bf16'`` halves the wire payload of the fast-axis
+    leg (all axes when there is no compressed pod leg) by casting each
+    leaf to bf16 around the reduce.
     """
     if compress_axis is not None and compress_axis not in axes:
         raise ValueError(
             f"compress_axis={compress_axis!r} is not one of the mesh "
             f"axes {axes}")
     fast_axes = tuple(ax for ax in axes if ax != compress_axis)
+    wire_dtype = resolve_reduce_dtype(intra_pod_dtype)
 
     def reduce_grads(grads, age, ef):
         if compress_axis is not None and not jax.tree.leaves(ef):
@@ -115,10 +146,10 @@ def make_grad_reducer(
                 "(init_loop_state(..., ef_buffer=True) materializes it)")
         if max_staleness is None or age is None:
             if compress_axis is None:
-                return pmean_gradients(grads, axes), ef
-            # hierarchical: f32 mean inside the pod, int8-EF mean across
-            # pods — equals the global pmean up to quantization error
-            partial = pmean_gradients(grads, fast_axes)
+                return pmean_gradients(grads, axes, dtype=wire_dtype), ef
+            # hierarchical: f32/bf16 mean inside the pod, int8-EF mean
+            # across pods — equals the global pmean up to the wire error
+            partial = pmean_gradients(grads, fast_axes, dtype=wire_dtype)
             return compress.compressed_pmean(partial, ef, compress_axis)
         w = staleness_weights(age, max_staleness)
         total = w
@@ -129,7 +160,7 @@ def make_grad_reducer(
         # degrades to an all-zero gradient (params held) when none is
         wn = _renormalize(w, total)
         if compress_axis is None:
-            return _weighted_psum(grads, wn, axes), ef
+            return _weighted_psum(grads, wn, axes, dtype=wire_dtype), ef
         # weighted hierarchical reduce: f32 weighted partial sums inside
         # the pod, then the compressed mean across pods scaled by the
         # static pod count — mean × P = the cross-pod sum, so the
@@ -137,7 +168,7 @@ def make_grad_reducer(
         # must degrade to an exactly-zero update with the EF buffer held:
         # the quantizer folds the carried error into zero partials, so
         # without the gate it would emit ≈ Σ_pods ef_p as a gradient.
-        partial = _weighted_psum(grads, wn, fast_axes)
+        partial = _weighted_psum(grads, wn, fast_axes, dtype=wire_dtype)
         pod_mean, new_ef = compress.compressed_pmean(partial, ef,
                                                      compress_axis)
         n_pods = jax.lax.psum(1, compress_axis)
@@ -157,13 +188,16 @@ def make_sharded_learn(
     beta: float = 0.4,
     max_staleness: Optional[int] = None,
     compress_axis: Optional[str] = None,
+    intra_pod_dtype: Optional[str] = None,
+    lazy_writes: bool = False,
 ):
     """Per-shard learner call: local PER sample → local grads → reduce →
     update (paper §V-B parameter-server adaptation).
 
     Returns ``sharded_learn(agent_state, replay_state, rng, age=None,
-    ef=None) → (agent_state', replay_state', loss, ef')`` — the same
-    signature as the fused ``make_learner_step`` — to be invoked *inside*
+    ef=None) → (agent_state', replay_state', learn_metrics, ef')`` — the
+    same signature as the fused ``make_learner_step`` (``learn_metrics``
+    carries ``loss`` and ``compress_error_norm``) — to be invoked *inside*
     ``shard_map`` over ``replay.config.axis_names``:
 
       * the PER sample is local to the shard's tree/storage, with
@@ -190,8 +224,16 @@ def make_sharded_learn(
       * agents without the split fall back to a local ``learn`` followed
         by a parameter/target/opt pmean (gossip-average; identical result
         at 1 shard, approximate beyond) — incompatible with
-        ``compress_axis`` (there is no gradient pytree to compress);
-      * priority write-back stays local (write-after-read, §IV-D3).
+        ``compress_axis`` (there is no gradient pytree to compress) and
+        with ``intra_pod_dtype`` (no gradient pytree to cast);
+      * ``intra_pod_dtype='bf16'`` casts the fast-axis reduce leg to
+        bf16 on the wire; the injected error is reported per learn as
+        ``compress_error_norm`` (local cast error ‖g − bf16(g)‖₂,
+        summed with the EF-buffer norm of the int8 pod leg when both
+        compressions are active);
+      * priority write-back stays local (write-after-read, §IV-D3);
+        ``lazy_writes=True`` defers its propagation to the runtime
+        loop's per-iteration flush (DESIGN.md §9).
     """
     axes = replay.config.axis_names
     if compress_axis is not None and (agent.grads is None
@@ -201,14 +243,36 @@ def make_sharded_learn(
             "compressed cross-pod reduce needs the explicit gradient "
             "pytree (the parameter-average fallback has nothing to "
             "quantize)")
+    wire_dtype = resolve_reduce_dtype(intra_pod_dtype)
+    if wire_dtype is not None and (agent.grads is None
+                                   or agent.apply_grads is None):
+        raise ValueError(
+            f"agent {agent.name!r} has no grads/apply_grads split: the "
+            "bf16 intra-pod reduce needs the explicit gradient pytree "
+            "(the parameter-average fallback has nothing to cast)")
+    # the cast only happens when a fast-axis reduce actually exists —
+    # with every mesh axis consumed by the compressed pod leg there is
+    # no intra-pod wire, so no cast and no cast-error metric
+    fast_axes = tuple(ax for ax in axes if ax != compress_axis)
+    cast_active = wire_dtype is not None and bool(fast_axes)
     reduce_grads = make_grad_reducer(axes, max_staleness=max_staleness,
-                                     compress_axis=compress_axis)
+                                     compress_axis=compress_axis,
+                                     intra_pod_dtype=intra_pod_dtype)
 
     def sharded_learn(agent_state, replay_state, rng, age=None, ef=None):
         idx, items, is_w = replay.sample(replay_state, rng, batch_per_shard, beta)
+        err_norm = jnp.zeros(())
         if agent.grads is not None and agent.apply_grads is not None:
             grads, aux = agent.grads(agent_state, items, is_w)
+            if cast_active:
+                # compression error this shard injects into the fast leg
+                err_norm = err_norm + compress.l2_norm(jax.tree.map(
+                    lambda g: g - g.astype(wire_dtype).astype(g.dtype),
+                    grads))
             grads, ef = reduce_grads(grads, age, ef)
+            if jax.tree.leaves(ef):
+                # residual the int8 pod leg carries into the next step
+                err_norm = err_norm + compress.l2_norm(ef)
             agent_state, metrics, td = agent.apply_grads(agent_state, grads, aux)
         else:
             agent_state, metrics, td = agent.learn(agent_state, items, is_w)
@@ -217,8 +281,10 @@ def make_sharded_learn(
                 target=_pmean_inexact(agent_state.target, axes),
                 opt=_pmean_inexact(agent_state.opt, axes),
             )
-        replay_state = replay.update_priorities(replay_state, idx, td)
-        return agent_state, replay_state, metrics["loss"], ef
+        replay_state = replay.update_priorities(replay_state, idx, td,
+                                                lazy=lazy_writes)
+        lmetrics = {"loss": metrics["loss"], "compress_error_norm": err_norm}
+        return agent_state, replay_state, lmetrics, ef
 
     return sharded_learn
 

@@ -1,17 +1,27 @@
 """The paper's training loop (Alg. 1) as composable actor/learner programs.
 
-The fused iteration keeps the lazy-write overlap (§IV-D2):
+The fused iteration realizes lazy writing (§IV-D) as a replay
+*transaction* (DESIGN.md §9): every tree mutation inside one iteration
+writes only the sum tree's leaf level, and a single merged propagation
+pass (``replay.flush``) runs at the sample boundary:
 
     1. ACTORS   — ε-greedy act on E vectorized envs, env step           (§V-A)
-    2. INSERT-BEGIN — zero in-flight slot priorities (lazy write phase 1)
-    3. LEARNERS — sample B from the tree state of (2), TD update        (§V-B)
-    4. PRIORITY UPDATE — write-after-read tolerated                    (§IV-D3)
-    5. INSERT-COMMIT — storage write + P_max restore (lazy write phase 3)
+    2. INSERT-BEGIN — zero in-flight slot priorities (leaf-only write)
+    3. FLUSH    — ONE upward propagation pass coalescing the previous
+                  iteration's priority updates + insert-commit with this
+                  iteration's insert-begin (lazy ≡ eager bit-exact here)
+    4. LEARNERS — sample B from the flushed tree, TD update             (§V-B)
+    5. PRIORITY UPDATE — leaf-only write, write-after-read tolerated  (§IV-D3)
+    6. INSERT-COMMIT — storage write + P_max restore (leaf-only write)
 
-Step 3 never depends on step 5's storage write (in-flight slots are
-invisible by construction), so XLA schedules the transition DMA
-concurrently with learner compute — the same overlap the paper's lock
-split buys on a multicore CPU.
+Steps 5/6 defer their propagation to the *next* iteration's flush, so
+the eager path's three full propagation passes per iteration collapse
+to one (asserted by an op-count trace test).  Step 4 never depends on
+step 6's storage write (in-flight slots are invisible by construction),
+so XLA schedules the transition DMA concurrently with learner compute —
+the same overlap the paper's lock split buys on a multicore CPU.
+``LoopConfig.lazy_replay=False`` restores the eager per-op propagation
+(the replay microbenchmark's baseline arm).
 
 The loop is built from three pieces (DESIGN.md §3):
 
@@ -58,7 +68,11 @@ Pytree = Any
 # keys of the metrics dict every composed step returns (make_step below);
 # the sharded executor derives its shard_map out_specs from this tuple
 METRIC_KEYS = ("loss", "mean_episode_return", "env_steps", "learn_steps",
-               "buffer_size", "epsilon")
+               "buffer_size", "epsilon", "compress_error_norm")
+
+# keys of the per-learn metrics dict every learn fn returns (the shared
+# contract of make_learner_step and runtime/learner.make_sharded_learn)
+LEARN_METRIC_KEYS = ("loss", "compress_error_norm")
 
 
 class LoopState(NamedTuple):
@@ -90,6 +104,9 @@ class LoopConfig:
     epsilon_final: float = 0.02   # exploration floor after decay
     epsilon_decay_steps: int = 10_000   # env steps of linear ε decay
     beta: float = 0.4             # PER importance exponent
+    lazy_replay: bool = True      # lazy-writing replay transactions: one
+                                  # merged tree-propagation pass per
+                                  # iteration (False = eager per-op passes)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -161,7 +178,9 @@ def make_actor_step(agent: Agent, v_step: Callable, n_envs: int):
 
 def make_learner_step(agent: Agent, replay, cfg: LoopConfig):
     """One parallel-learner call: PER sample → TD update → priority
-    write-back (write-after-read tolerated, §IV-D3).
+    write-back (write-after-read tolerated, §IV-D3; with
+    ``cfg.lazy_replay`` the write-back is leaf-only and rides the next
+    flush).
 
     ``replay`` may be a ``PrioritizedReplay`` or any object with the same
     sample/update_priorities signature (e.g. the sharded buffer, whose
@@ -170,15 +189,20 @@ def make_learner_step(agent: Agent, replay, cfg: LoopConfig):
     ``age`` (the staleness of the caller's acting copy) and ``ef`` (the
     error-feedback buffer of the compressed cross-pod reduce) are part of
     the shared learn-fn signature and are passed through unused here —
-    only the sharded reduces consume them.
+    only the sharded reduces consume them.  Learn fns return a metrics
+    dict with ``LEARN_METRIC_KEYS`` (the fused path has no compressed
+    reduce, so its error norm is 0).
     """
 
     def learner_step(agent_state, replay_state, rng, age=None, ef=None):
         del age  # fused learner: no cross-shard reduce to weight
         idx, items, is_w = replay.sample(replay_state, rng, cfg.batch_size, cfg.beta)
         agent_state, metrics, td = agent.learn(agent_state, items, is_w)
-        replay_state = replay.update_priorities(replay_state, idx, td)
-        return agent_state, replay_state, metrics["loss"], ef
+        replay_state = replay.update_priorities(replay_state, idx, td,
+                                                lazy=cfg.lazy_replay)
+        lmetrics = {"loss": metrics["loss"],
+                    "compress_error_norm": jnp.zeros(())}
+        return agent_state, replay_state, lmetrics, ef
 
     return learner_step
 
@@ -243,10 +267,21 @@ def make_step(
             acting, state.env_state, state.obs,
             state.episode_return, state.last_return, k_act, k_env, eps)
 
-        # 2. lazy write, phase 1: in-flight slots become unsampleable
-        replay_state, slots = replay.insert_begin(state.replay, n_envs)
+        # 2. lazy write, phase 1: zero the in-flight slots' leaf
+        #    priorities (propagation deferred to the flush below)
+        lazy = cfg.lazy_replay
+        replay_state, slots = replay.insert_begin(state.replay, n_envs,
+                                                  lazy=lazy)
 
-        # 3. parallel learners on the phase-1 tree state, at the scheduled
+        # 3. THE flush boundary: one merged upward-propagation pass per
+        #    iteration, coalescing the previous iteration's priority
+        #    updates + insert-commit with this iteration's insert-begin.
+        #    After this the tree is consistent and the in-flight slots
+        #    are unsampleable (lazy ≡ eager bit-exact at this point).
+        if lazy:
+            replay_state = replay.flush(replay_state)
+
+        # 4. parallel learners on the flushed tree state, at the scheduled
         #    collection/consumption ratio — always on the fresh params
         it = state.env_steps // schedule.env_steps_per_iter
         can_learn = (state.env_steps >= cfg.warmup) & (it % schedule.period == 0)
@@ -254,27 +289,36 @@ def make_step(
 
         def do_learn(args):
             agent_state, rstate, ef = args
-            loss_sum = jnp.zeros(())
+            acc = {k: jnp.zeros(()) for k in LEARN_METRIC_KEYS}
             for i in range(schedule.learns):
+                if lazy and i:
+                    # extra learner calls in the same event must also
+                    # sample a consistent tree: flush the previous
+                    # call's priority write-back first
+                    rstate = replay.flush(rstate)
                 ki = jax.random.fold_in(k_sample, i)
-                agent_state, rstate, loss, ef = learn_fn(
+                agent_state, rstate, lmetrics, ef = learn_fn(
                     agent_state, rstate, ki, age=age, ef=ef)
-                loss_sum = loss_sum + loss
-            return (agent_state, rstate, loss_sum / schedule.learns,
+                acc = {k: acc[k] + lmetrics[k] for k in acc}
+            means = {k: v / schedule.learns for k, v in acc.items()}
+            return (agent_state, rstate, means,
                     state.learn_steps + schedule.learns, ef)
 
         def skip_learn(args):
             agent_state, rstate, ef = args
-            return agent_state, rstate, jnp.zeros(()), state.learn_steps, ef
+            zeros = {k: jnp.zeros(()) for k in LEARN_METRIC_KEYS}
+            return agent_state, rstate, zeros, state.learn_steps, ef
 
-        agent_state, replay_state, loss, learn_steps, ef_error = jax.lax.cond(
+        agent_state, replay_state, lmetrics, learn_steps, ef_error = jax.lax.cond(
             can_learn, do_learn, skip_learn,
             (state.agent, replay_state, state.ef_error))
 
-        # 5. lazy write, phase 3: storage write + P_max restore
-        replay_state = replay.insert_commit(replay_state, slots, transitions)
+        # 6. lazy write, phase 3: storage write + P_max restore (the
+        #    leaf write is eager, its propagation rides the next flush)
+        replay_state = replay.insert_commit(replay_state, slots, transitions,
+                                            lazy=lazy)
 
-        # 6. async publish: refresh this shard's acting copy from the
+        # 7. async publish: refresh this shard's acting copy from the
         #    fresh learner params on its (staggered) publish tick
         if publish_interval:
             publish = (it + 1 + sid) % publish_interval == 0
@@ -300,12 +344,14 @@ def make_step(
             ef_error=ef_error,
         )
         metrics = {
-            "loss": mean_across(loss),
+            "loss": mean_across(lmetrics["loss"]),
             "mean_episode_return": mean_across(jnp.mean(last_ret)),
             "env_steps": new_state.env_steps,
             "learn_steps": learn_steps,
             "buffer_size": sum_across(replay_state.count),
             "epsilon": eps,
+            "compress_error_norm": mean_across(
+                lmetrics["compress_error_norm"]),
         }
         assert set(metrics) == set(METRIC_KEYS)
         return new_state, metrics

@@ -148,6 +148,83 @@ def test_sample_kernel_padded_tail_clamp_parity():
     assert (np.asarray(kp)[:4] > 0).all()
 
 
+@pytest.mark.parametrize("capacity", [100, 1000, 16384])
+@pytest.mark.parametrize("batch", [1, 64, 300])
+def test_fused_sample_gather_matches_split_kernels(capacity, batch):
+    """The fused descent+gather kernel returns the identical indices and
+    priorities as the split sample kernel (they share the descent code)
+    and the exact storage rows for mixed-dtype payloads."""
+    spec, tree, rng = mk(capacity, seed=capacity * 3 + batch)
+    storage = {
+        "obs": jnp.asarray(rng.normal(size=(capacity, 5)).astype(np.float32)),
+        "action": jnp.asarray(rng.integers(0, 7, capacity), jnp.int32),
+        "reward": jnp.asarray(rng.uniform(0, 1, capacity).astype(np.float32)),
+    }
+    u = jnp.asarray(rng.uniform(0, 1, batch).astype(np.float32))
+    fi, fp, fitems = ops.sumtree_sample_gather(spec, tree, u, storage)
+    si, sp = ops.sumtree_sample(spec, tree, u)
+    np.testing.assert_array_equal(np.asarray(fi), np.asarray(si))
+    np.testing.assert_allclose(np.asarray(fp), np.asarray(sp),
+                               rtol=1e-5, atol=1e-6)
+    taken = np.asarray(fi)
+    np.testing.assert_allclose(np.asarray(fitems["obs"]),
+                               np.asarray(storage["obs"])[taken],
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(fitems["action"]),
+                                  np.asarray(storage["action"])[taken])
+    assert fitems["action"].dtype == jnp.int32
+    np.testing.assert_allclose(np.asarray(fitems["reward"]),
+                               np.asarray(storage["reward"])[taken],
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_fused_sample_gather_rank3_and_scalar_leaves():
+    spec, tree, rng = mk(500, seed=17)
+    storage = {
+        "frames": jnp.asarray(rng.normal(size=(500, 3, 4)).astype(np.float32)),
+        "done": jnp.asarray(rng.integers(0, 2, 500).astype(np.float32)),
+    }
+    u = jnp.asarray(rng.uniform(0, 1, 100).astype(np.float32))
+    fi, _, fitems = ops.sumtree_sample_gather(spec, tree, u, storage)
+    taken = np.asarray(fi)
+    assert fitems["frames"].shape == (100, 3, 4)
+    np.testing.assert_allclose(np.asarray(fitems["frames"]),
+                               np.asarray(storage["frames"])[taken],
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(fitems["done"]),
+                                  np.asarray(storage["done"])[taken])
+
+
+def test_fused_sample_gather_vmem_fallback_exact():
+    """Above the VMEM budget the fused op must fall back to the split
+    XLA path and still return exact rows."""
+    big = ops.KERNEL_TREE_BYTE_BUDGET // 4 + 50_000
+    spec = sumtree.make_spec(big, 128)
+    assert not ops.kernel_path_ok(spec)
+    rng = np.random.default_rng(2)
+    pri = rng.uniform(0.01, 1, big).astype(np.float32)
+    tree = sumtree.build(spec, jnp.asarray(pri))
+    storage = {"x": jnp.asarray(rng.normal(size=(big, 2)).astype(np.float32))}
+    u = jnp.asarray(rng.uniform(0, 1, 32).astype(np.float32))
+    fi, _, fitems = ops.sumtree_sample_gather(spec, tree, u, storage)
+    ri, _ = ref.sumtree_sample_ref(spec, tree, u)
+    np.testing.assert_array_equal(np.asarray(fi), np.asarray(ri))
+    np.testing.assert_array_equal(np.asarray(fitems["x"]),
+                                  np.asarray(storage["x"])[np.asarray(fi)])
+
+
+def test_update_kernel_unique_skips_dedup_correctly():
+    """unique=True (FIFO insert slots) must produce the same tree as the
+    dedup path when indices really are distinct."""
+    spec, tree, rng = mk(2048, seed=23)
+    idx = jnp.asarray(rng.permutation(2048)[:256].astype(np.int32))
+    val = jnp.asarray(rng.uniform(0, 3, 256).astype(np.float32))
+    t_dedup = ops.sumtree_update(spec, tree, idx, val)
+    t_unique = ops.sumtree_update(spec, tree, idx, val, unique=True)
+    np.testing.assert_allclose(np.asarray(t_dedup), np.asarray(t_unique),
+                               rtol=1e-5, atol=1e-4)
+
+
 def test_vmem_budget_fallback():
     """Above the VMEM budget the ops must fall back to the XLA path and
     still be exact."""

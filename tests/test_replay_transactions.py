@@ -1,0 +1,339 @@
+"""Lazy-writing replay transactions (DESIGN.md §9): lazy ≡ eager
+bit-exact at flush points, the pending-delta ledger, exactly one
+upward-propagation pass per loop iteration (op-count trace), fused
+sample+gather dispatch, donated replay buffers, and the committed
+replay-microbenchmark acceptance (lazy beats eager)."""
+
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import sumtree
+from repro.core.replay import PrioritizedReplay, ReplayConfig
+
+EXAMPLE = {
+    "obs": jnp.zeros((4,), jnp.float32),
+    "action": jnp.zeros((), jnp.int32),
+    "reward": jnp.zeros(()),
+}
+
+BACKENDS = ("xla", "pallas")
+
+
+def make(capacity=256, backend="xla", **kw):
+    return PrioritizedReplay(
+        ReplayConfig(capacity=capacity, fanout=8, backend=backend, **kw),
+        EXAMPLE)
+
+
+def items(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "obs": jnp.asarray(rng.normal(size=(n, 4)).astype(np.float32)),
+        "action": jnp.asarray(rng.integers(0, 3, n).astype(np.int32)),
+        "reward": jnp.asarray(rng.uniform(0, 1, n).astype(np.float32)),
+    }
+
+
+# -- lazy ≡ eager at flush points ---------------------------------------------
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_lazy_flush_bitexact_vs_eager_per_op_flush(backend):
+    """Deferring many leaf writes and flushing once must reach the
+    bit-identical tree as flushing after every op: the interior rebuild
+    is a pure function of the leaves, so the write history can't
+    matter."""
+    rb = make(capacity=64, backend=backend)
+    st_lazy = rb.insert(rb.init(), items(64))
+    st_eager = st_lazy
+
+    # duplicate-heavy interleaving: begin, double priority update, commit
+    st_lazy, slots = rb.insert_begin(st_lazy, 16, lazy=True)
+    st_eager, slots_e = rb.insert_begin(st_eager, 16, lazy=True)
+    st_eager = rb.flush(st_eager)
+    np.testing.assert_array_equal(np.asarray(slots), np.asarray(slots_e))
+
+    idx = jnp.asarray([3, 40, 3, 3, 25, 40, 63, 3], jnp.int32)
+    td = jnp.linspace(0.1, 3.0, 8)
+    st_lazy = rb.update_priorities(st_lazy, idx, td, lazy=True)
+    st_eager = rb.flush(rb.update_priorities(st_eager, idx, td, lazy=True))
+
+    st_lazy = rb.insert_commit(st_lazy, slots, items(16, seed=1), lazy=True)
+    st_eager = rb.flush(
+        rb.insert_commit(st_eager, slots_e, items(16, seed=1), lazy=True))
+
+    st_lazy = rb.flush(st_lazy)   # ONE merged propagation pass
+    np.testing.assert_array_equal(np.asarray(st_lazy.tree),
+                                  np.asarray(st_eager.tree))
+    assert int(st_lazy.pending) == 0
+    assert sumtree.check_invariant(rb.spec, st_lazy.tree)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_lazy_matches_legacy_eager_update_allclose(backend):
+    """The lazy transaction and the legacy eager path (incremental
+    delta propagation per op) compute the same tree up to f32
+    accumulation order."""
+    rb = make(capacity=128, backend=backend)
+    st0 = rb.insert(rb.init(), items(128))
+
+    def run(lazy):
+        st, slots = rb.insert_begin(st0, 32, lazy=lazy)
+        if lazy:
+            st = rb.flush(st)
+        idx = jnp.asarray([5, 5, 77, 100, 5, 77], jnp.int32)
+        st = rb.update_priorities(st, idx, jnp.linspace(0.2, 2.0, 6),
+                                  lazy=lazy)
+        st = rb.insert_commit(st, slots, items(32, seed=2), lazy=lazy)
+        return rb.flush(st) if lazy else st
+
+    lazy_tree = np.asarray(run(True).tree)
+    eager_tree = np.asarray(run(False).tree)
+    np.testing.assert_allclose(lazy_tree, eager_tree, rtol=1e-5, atol=1e-4)
+
+
+def test_inflight_slots_invisible_after_flush():
+    """The paper's lazy-write invariant holds through the transaction:
+    once the insert-begin zeros are flushed, sampling can never select
+    an in-flight slot, even with unflushed priority updates pending."""
+    rb = make(capacity=64)
+    st = rb.insert(rb.init(), items(64))
+    st, slots = rb.insert_begin(st, 16, lazy=True)
+    st = rb.flush(st)
+    for seed in range(5):
+        idx, _, _ = rb.sample(st, jax.random.PRNGKey(seed), 64)
+        assert not np.isin(np.asarray(idx), np.asarray(slots)).any()
+    st = rb.insert_commit(st, slots, items(16, seed=1), lazy=True)
+    st = rb.flush(st)
+    pri = rb.get_priority(st, slots)
+    assert (np.asarray(pri) == float(st.max_priority)).all()
+
+
+def test_pending_ledger_counts_and_flush_resets():
+    rb = make(capacity=64)
+    st = rb.insert(rb.init(), items(64))
+    assert int(st.pending) == 0          # eager insert leaves no debt
+    st, slots = rb.insert_begin(st, 8, lazy=True)
+    assert int(st.pending) == 8
+    st = rb.update_priorities(st, jnp.arange(4), jnp.ones(4), lazy=True)
+    assert int(st.pending) == 12
+    st = rb.insert_commit(st, slots, items(8, seed=3), lazy=True)
+    assert int(st.pending) == 20
+    st = rb.flush(st)
+    assert int(st.pending) == 0
+    assert sumtree.check_invariant(rb.spec, st.tree)
+    # flushing a clean state is the identity
+    st2 = rb.flush(st)
+    np.testing.assert_array_equal(np.asarray(st.tree), np.asarray(st2.tree))
+
+
+# -- fused sample+gather dispatch ---------------------------------------------
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_fused_sample_gather_matches_split(backend):
+    """ReplayConfig.fused_sample_gather only changes the execution
+    shape, never the draws or the gathered rows."""
+    data = items(200, seed=4)
+    rb_f = make(capacity=256, backend=backend, fused_sample_gather=True)
+    rb_s = make(capacity=256, backend=backend, fused_sample_gather=False)
+    st_f = rb_f.insert(rb_f.init(), data)
+    st_s = rb_s.insert(rb_s.init(), data)
+    for seed in range(3):
+        i_f, it_f, w_f = rb_f.sample(st_f, jax.random.PRNGKey(seed), 64)
+        i_s, it_s, w_s = rb_s.sample(st_s, jax.random.PRNGKey(seed), 64)
+        np.testing.assert_array_equal(np.asarray(i_f), np.asarray(i_s))
+        np.testing.assert_allclose(np.asarray(w_f), np.asarray(w_s),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(it_f["obs"]),
+                                   np.asarray(it_s["obs"]),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_array_equal(np.asarray(it_f["action"]),
+                                      np.asarray(it_s["action"]))
+        assert it_f["action"].dtype == jnp.int32
+
+
+# -- the tree_backend alias fix -----------------------------------------------
+
+
+def test_use_kernels_conflicting_backend_raises():
+    """Regression: use_kernels=True used to silently override an
+    explicit backend="xla"."""
+    with pytest.raises(ValueError, match="conflicting"):
+        PrioritizedReplay(
+            ReplayConfig(capacity=64, backend="xla", use_kernels=True),
+            EXAMPLE)
+    # the redundant-but-consistent spelling stays allowed (deprecated)
+    with pytest.warns(DeprecationWarning, match="use_kernels"):
+        rb = PrioritizedReplay(
+            ReplayConfig(capacity=64, backend="pallas", use_kernels=True),
+            EXAMPLE)
+    assert rb.config.tree_backend == "pallas"
+    with pytest.warns(DeprecationWarning, match="use_kernels"):
+        rb = PrioritizedReplay(
+            ReplayConfig(capacity=64, use_kernels=True), EXAMPLE)
+    assert rb.config.tree_backend == "pallas"
+    assert ReplayConfig(capacity=64).tree_backend == "xla"
+    assert ReplayConfig(capacity=64, backend="pallas").tree_backend == "pallas"
+
+
+def test_sharded_config_conflict_raises_too():
+    from repro.core.distributed import (ShardedPrioritizedReplay,
+                                        ShardedReplayConfig)
+    with pytest.raises(ValueError, match="conflicting"):
+        ShardedPrioritizedReplay(
+            ShardedReplayConfig(capacity_per_shard=64, backend="xla",
+                                use_kernels=True), EXAMPLE)
+    assert ShardedReplayConfig(capacity_per_shard=64).tree_backend == "xla"
+
+
+# -- exactly one propagation pass per loop iteration (op-count trace) ---------
+
+
+class _CountingTreeOps:
+    """TreeOps spy: counts propagation passes at trace time."""
+
+    def __init__(self, inner):
+        self._inner = inner
+        self.name = inner.name
+        self.update_calls = 0        # eager op: one propagation pass each
+        self.flush_calls = 0         # merged pass
+        self.write_calls = 0         # leaf-only (no propagation)
+
+    def update(self, *a, **kw):
+        self.update_calls += 1
+        return self._inner.update(*a, **kw)
+
+    def write_leaves(self, *a, **kw):
+        self.write_calls += 1
+        return self._inner.write_leaves(*a, **kw)
+
+    def flush(self, *a, **kw):
+        self.flush_calls += 1
+        return self._inner.flush(*a, **kw)
+
+    def sample(self, *a, **kw):
+        return self._inner.sample(*a, **kw)
+
+    def gather(self, *a, **kw):
+        return self._inner.gather(*a, **kw)
+
+    def sample_gather(self, *a, **kw):
+        return self._inner.sample_gather(*a, **kw)
+
+
+def _traced_step_counts(lazy_replay):
+    from repro.agents.dqn import DQNConfig, make_dqn
+    from repro.envs.classic import make_vec
+    from repro.runtime.loop import LoopConfig, init_loop_state, make_step
+
+    env_fn = functools.partial(make_vec, "cartpole")
+    spec, v_reset, v_step = env_fn(4)
+    agent = make_dqn(spec, DQNConfig())
+    example = {
+        "obs": jnp.zeros((spec.obs_dim,), jnp.float32),
+        "action": jnp.zeros((), jnp.int32),
+        "reward": jnp.zeros(()),
+        "next_obs": jnp.zeros((spec.obs_dim,), jnp.float32),
+        "done": jnp.zeros(()),
+    }
+    replay = PrioritizedReplay(ReplayConfig(capacity=512, fanout=8), example)
+    spy = _CountingTreeOps(replay.ops)
+    replay.ops = spy
+    # update_interval == n_envs → period 1, exactly one learner call per
+    # iteration (the schedule every executor realizes by default)
+    cfg = LoopConfig(batch_size=32, warmup=0, update_interval=4,
+                     lazy_replay=lazy_replay)
+    step = make_step(agent, replay, v_step, cfg, 4)
+    state = init_loop_state(agent, replay, v_reset, jax.random.PRNGKey(0), 4)
+    jax.make_jaxpr(step)(state)      # trace only — the spy counts calls
+    return spy
+
+
+def test_loop_lazy_single_propagation_pass_per_iteration():
+    """The acceptance criterion: the traced lazy step contains exactly
+    ONE upward-propagation pass (the flush), zero eager update passes —
+    vs three propagation passes in the eager step."""
+    spy = _traced_step_counts(lazy_replay=True)
+    assert spy.flush_calls == 1
+    assert spy.update_calls == 0
+    # begin + update_priorities + commit all went leaf-only
+    assert spy.write_calls == 3
+
+    spy = _traced_step_counts(lazy_replay=False)
+    assert spy.flush_calls == 0
+    assert spy.update_calls == 3     # the pre-optimization baseline
+
+
+# -- donated replay buffers ---------------------------------------------------
+
+
+def test_executor_chunk_donates_replay_but_not_actor_params():
+    from repro.agents.dqn import DQNConfig, make_dqn
+    from repro.envs.classic import make_vec
+    from repro.runtime.executors import AsyncExecutor
+    from repro.runtime.loop import LoopConfig
+
+    env_fn = functools.partial(make_vec, "cartpole")
+    spec, _, _ = env_fn(1)
+    agent = make_dqn(spec, DQNConfig())
+    example = {
+        "obs": jnp.zeros((spec.obs_dim,), jnp.float32),
+        "action": jnp.zeros((), jnp.int32),
+        "reward": jnp.zeros(()),
+        "next_obs": jnp.zeros((spec.obs_dim,), jnp.float32),
+        "done": jnp.zeros(()),
+    }
+    replay = PrioritizedReplay(ReplayConfig(capacity=512, fanout=8), example)
+    ex = AsyncExecutor(agent, replay, env_fn, LoopConfig(batch_size=32,
+                                                         warmup=0),
+                       n_envs=4, publish_interval=2, scan_chunk=4)
+    st = ex.init(jax.random.PRNGKey(0))
+    old_tree, old_storage = st.replay.tree, st.replay.storage["obs"]
+    old_actor = jax.tree.leaves(st.actor_params)[0]
+    st2, _ = ex.run_chunk(st)
+    # tree + storage buffers were donated (no surviving per-chunk copy)…
+    assert old_tree.is_deleted()
+    assert old_storage.is_deleted()
+    # …while non-replay state stays readable across the chunk boundary
+    # (the async double-buffer contract tests rely on this)
+    assert not old_actor.is_deleted()
+    np.asarray(old_actor)
+    assert not st2.replay.tree.is_deleted()
+
+
+# -- the committed microbenchmark acceptance ----------------------------------
+
+
+def test_committed_bench_replay_shows_lazy_beating_eager():
+    """BENCH_replay.json at the repo root (the committed smoke sweep the
+    CI perf gate diffs against) must show the lazy path ahead of the
+    eager path on every like-for-like (backend, fanout, fused) pair,
+    and carry the fused-vs-split pallas arms for the kernel delta."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    path = os.path.join(root, "BENCH_replay.json")
+    with open(path) as f:
+        payload = json.load(f)
+    assert payload["metric"] == "replay_ops_per_s"
+    by_arm = {}
+    for p in payload["points"]:
+        key = (p["backend"], p["fanout"], p["fused"])
+        by_arm.setdefault(key, {})[p["mode"]] = p["replay_ops_per_s"]
+    pairs = {k: v for k, v in by_arm.items()
+             if {"eager", "lazy"} <= set(v)}
+    assert pairs, "no eager/lazy pair in the committed sweep"
+    for key, modes in pairs.items():
+        assert modes["lazy"] > modes["eager"], (
+            f"lazy must beat eager for (backend, fanout, fused)={key}: "
+            f"{modes}")
+    # the fused-vs-split kernel arms are present (delta reported, not
+    # gated: interpret mode on CPU penalizes the fused grid)
+    fused_arms = {k for k in by_arm if k[2]}
+    split_arms = {(b, f, False) for b, f, _ in fused_arms}
+    assert fused_arms and split_arms <= set(by_arm)

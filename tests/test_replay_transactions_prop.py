@@ -1,0 +1,80 @@
+"""Hypothesis property test: lazy ≡ eager tree equivalence over random
+interleavings of insert/sample/update/flush, both TreeOps backends,
+duplicate-heavy index batches (DESIGN.md §9 transaction contract).
+
+Separate module so the deterministic transaction tests still run where
+hypothesis is absent (the container); CI installs requirements-dev."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import sumtree
+
+from test_replay_transactions import BACKENDS, items, make  # noqa: E402 — sibling test module (pytest rootdir import)
+
+hyp = pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (pip install -r requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st_  # noqa: E402
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    backend=st_.sampled_from(BACKENDS),
+    seed=st_.integers(0, 10_000),
+    script=st_.lists(
+        st_.sampled_from(["insert", "update", "flush", "sample"]),
+        min_size=2, max_size=8),
+)
+def test_property_lazy_eager_equivalence_random_interleavings(
+        backend, seed, script):
+    """Over random interleavings of insert/update/sample/flush with
+    duplicate-heavy index batches, the lazy arm (defer everything,
+    flush at the script's flush points and before every sample) and the
+    eager arm (flush after every mutation) stay bit-exact at every
+    flush point and draw identical samples."""
+    rng = np.random.default_rng(seed)
+    rb = make(capacity=32, backend=backend)
+    lazy_st = rb.insert(rb.init(), items(32, seed=seed))
+    eager_st = lazy_st
+    open_slots = []            # (slots, items) begun but not committed
+
+    for step_i, op in enumerate(script):
+        if op == "insert":
+            if open_slots:
+                slots, data = open_slots.pop()
+                lazy_st = rb.insert_commit(lazy_st, slots, data, lazy=True)
+                eager_st = rb.flush(
+                    rb.insert_commit(eager_st, slots, data, lazy=True))
+            else:
+                n = int(rng.integers(1, 9))
+                lazy_st, slots = rb.insert_begin(lazy_st, n, lazy=True)
+                eager_st, _ = rb.insert_begin(eager_st, n, lazy=True)
+                eager_st = rb.flush(eager_st)
+                open_slots.append((slots, items(n, seed=seed + step_i)))
+        elif op == "update":
+            b = int(rng.integers(1, 12))
+            # duplicate-heavy: draw from a handful of slots
+            idx = jnp.asarray(rng.integers(0, 8, b).astype(np.int32))
+            td = jnp.asarray(rng.uniform(0.05, 3.0, b).astype(np.float32))
+            lazy_st = rb.update_priorities(lazy_st, idx, td, lazy=True)
+            eager_st = rb.flush(
+                rb.update_priorities(eager_st, idx, td, lazy=True))
+        elif op == "flush":
+            lazy_st = rb.flush(lazy_st)
+            np.testing.assert_array_equal(np.asarray(lazy_st.tree),
+                                          np.asarray(eager_st.tree))
+        else:  # sample — a flush boundary by contract
+            lazy_st = rb.flush(lazy_st)
+            key = jax.random.PRNGKey(seed + step_i)
+            li, _, lw = rb.sample(lazy_st, key, 16)
+            ei, _, ew = rb.sample(eager_st, key, 16)
+            np.testing.assert_array_equal(np.asarray(li), np.asarray(ei))
+            np.testing.assert_array_equal(np.asarray(lw), np.asarray(ew))
+
+    lazy_st = rb.flush(lazy_st)
+    np.testing.assert_array_equal(np.asarray(lazy_st.tree),
+                                  np.asarray(eager_st.tree))
+    assert sumtree.check_invariant(rb.spec, lazy_st.tree)
