@@ -5,15 +5,20 @@ repo-root baselines.
 
 Points are matched on their identity fields (backend, shard/pod counts,
 async knobs — everything except the measured throughput); a fresh point
-slower than its baseline by more than ``THRESHOLD`` fails the gate
-(exit 1).  Missing points on either side are tolerated with a note —
-sweeps grow and shrink across PRs, and a baseline measured on different
-hardware only gates *relative* regressions on matching points.  CI runs
-this as a non-blocking warning step first (``continue-on-error``), so
-the trajectory is visible before the gate has teeth.
+slower than its baseline by more than its tolerance fails the gate
+(exit 1).  The tolerance is per point: ``THRESHOLD`` plus the larger
+recorded ``rel_spread`` of the two measurements — a point whose
+median-of-N repeats disperse widely (noisy multi-process gang points,
+cold CI runners) gets exactly that much extra slack, while tight
+points keep the tight gate.  Missing points on either side are
+tolerated with a note — sweeps grow and shrink across PRs, and a
+baseline measured on different hardware only gates *relative*
+regressions on matching points.  CI runs this as a **blocking** step
+(the bench-smoke job fails on regression).
 
-THRESHOLD is the one place the tolerance lives — CI, the cron sweep and
-local runs all read it from here (override per-run with --threshold).
+THRESHOLD is the one place the base tolerance lives — CI, the cron
+sweep and local runs all read it from here (override per-run with
+--threshold).
 """
 
 from __future__ import annotations
@@ -46,31 +51,39 @@ def point_key(point: dict) -> Tuple:
         (k, v) for k, v in point.items() if k not in _MEASUREMENT_FIELDS))
 
 
-def _load_points(path: str) -> Tuple[Dict[Tuple, float], str]:
+def _load_points(path: str) -> Tuple[Dict[Tuple, Tuple[float, float]], str]:
+    """key → (measured rate, recorded rel_spread) per point; points
+    without a dispersion record get spread 0 (no extra slack)."""
     with open(path) as f:
         payload = json.load(f)
     # each payload names its own measured rate (schema.FIGURE_METRICS)
     metric = payload.get("metric", "env_steps_per_s")
-    return ({point_key(p): float(p[metric])
+    return ({point_key(p): (float(p[metric]),
+                            float(p.get("rel_spread", 0.0)))
              for p in payload.get("points", ())}, metric)
 
 
-def compare_points(baseline: Dict[Tuple, float], fresh: Dict[Tuple, float],
+def compare_points(baseline: Dict[Tuple, Tuple[float, float]],
+                   fresh: Dict[Tuple, Tuple[float, float]],
                    threshold: float, metric: str = "env_steps_per_s"
                    ) -> Tuple[List[str], List[str]]:
     """Returns (regressions, notes) — regressions non-empty fails the
-    gate."""
+    gate.  Each matched point fails below ``threshold + max(baseline
+    rel_spread, fresh rel_spread)``: the recorded median-of-N dispersion
+    widens that point's tolerance, so a noisy measurement can't trip the
+    gate on jitter its own repeats already exhibited."""
     regressions, notes = [], []
-    for key, base_v in sorted(baseline.items()):
+    for key, (base_v, base_rs) in sorted(baseline.items()):
         label = ", ".join(f"{k}={v}" for k, v in key)
         if key not in fresh:
             notes.append(f"baseline-only point (skipped): {label}")
             continue
-        fresh_v = fresh[key]
+        fresh_v, fresh_rs = fresh[key]
         delta = (fresh_v - base_v) / base_v
+        tol = threshold + max(base_rs, fresh_rs)
         line = (f"{label}: {base_v:,.0f} → {fresh_v:,.0f} {metric} "
-                f"({delta:+.1%})")
-        if delta < -threshold:
+                f"({delta:+.1%}, tol -{tol:.0%})")
+        if delta < -tol:
             regressions.append(line)
         else:
             notes.append(line)

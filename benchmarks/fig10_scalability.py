@@ -10,6 +10,16 @@ this script in subprocesses with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (the flag must be
 set before jax initializes) and times the ShardedExecutor — DQN through
 the sharded replay + psum'd learner — at each shard count.
+
+A third mode measures the **wall-clock** arm (``--wall-clock``,
+DESIGN.md §10): each point is a real multi-process gang launched
+through ``launch/multiprocess.py`` — separate OS processes, one XLA
+client each, gloo collectives over real process boundaries — timing
+the same DQN/CartPole workload as the emulated arms (median-of-N with
+``rel_spread`` inside the worker).  These land in BENCH_fig10.json as
+``backend="wallclock"`` points carrying ``n_procs``/``overlapped``/
+``update_interval`` identity fields, so the runtime planner can prefer
+them over the emulated measurements of the same config.
 """
 
 import argparse
@@ -220,6 +230,81 @@ def shard_pod_points(shard_counts=(1, 2), pod_specs=((2, 1, False),
                        "n_envs": n_envs,
                        "env_steps_per_s": round(t, 2),
                        "repeats": REPEATS, "rel_spread": round(spread, 4)})
+    return points
+
+
+# the wall-clock sweep: (n_procs, n_pods, n_data, compress, overlap).
+# shards=1 and 2 cover the data axis; the pods=2 pair measures the
+# barrier vs the double-buffered overlapped compressed reduce on a real
+# 2-process gang.  update_interval=8 (one learn event per iteration at
+# 8 envs) is the regime where the overlap pays: the cross-pod
+# collective issued at learn i is consumed at learn i+1, so it runs
+# concurrently with the next actor chunk; at update_interval=1 the next
+# learn in the SAME iteration consumes the carry immediately and there
+# is no window (measured in DESIGN.md §10).
+WALLCLOCK_SPECS = (
+    (1, 1, 1, False, False),
+    (1, 1, 2, False, False),
+    (2, 1, 2, False, False),
+    (2, 2, 1, True, False),
+    (2, 2, 1, True, True),
+)
+
+
+def wallclock_points(specs=WALLCLOCK_SPECS, n_envs=8, iters=40,
+                     update_interval=8, repeats=3, scan_chunk=20):
+    """Real multi-process gang throughput for BENCH_fig10.json: one
+    ``launch.multiprocess`` gang per spec, the bench worker reporting
+    median-of-``repeats`` env-steps/s with its rel_spread.  All points
+    share ``n_envs`` (the global env count splits across mesh cells) so
+    they are mutually comparable — and comparable with the emulated
+    arms at the same env count, up to the recorded update_interval."""
+    from repro.launch import multiprocess as mp
+
+    points = []
+    for n_procs, n_pods, n_data, compress, overlap in specs:
+        n_cells = n_pods * n_data
+        if n_cells % n_procs:
+            raise ValueError(f"spec {n_pods}x{n_data} on {n_procs} procs: "
+                             "cells must split evenly across the gang")
+        worker_args = ["--mode", "bench",
+                       "--n-pods", str(n_pods), "--n-data", str(n_data),
+                       "--n-envs", str(n_envs), "--iters", str(iters),
+                       "--repeats", str(repeats),
+                       "--scan-chunk", str(scan_chunk),
+                       "--update-interval", str(update_interval)]
+        if compress:
+            worker_args.append("--compress")
+        if overlap:
+            worker_args.append("--overlap")
+        out = mp.launch(worker_args, n_procs=n_procs,
+                        devices_per_proc=n_cells // n_procs)
+        kv = mp.parse_kv(out[0])
+        points.append({
+            "backend": "wallclock", "shards": n_data, "pods": n_pods,
+            "compressed": bool(compress), "overlapped": bool(overlap),
+            "n_procs": n_procs, "update_interval": update_interval,
+            "n_envs": n_envs,
+            "env_steps_per_s": round(float(kv["STEPS_PER_S"]), 2),
+            "repeats": int(kv.get("REPEATS", repeats)),
+            "rel_spread": round(float(kv.get("REL_SPREAD", 0.0)), 4),
+        })
+    return points
+
+
+def assert_uniform_n_envs(points):
+    """Every point of one emitted BENCH_fig10.json must share its global
+    env count: the planner ranks these points against each other, which
+    is only a like-for-like comparison when each point runs the same
+    workload.  A sweep accidentally mixing env counts (e.g. a wall-clock
+    arm defaulting differently from the emulated arms) must fail the
+    emit, not silently skew the plan."""
+    counts = {p.get("n_envs") for p in points}
+    if len(counts) > 1:
+        raise ValueError(
+            f"BENCH_fig10 points mix n_envs={sorted(counts)}: every point "
+            "of one emitted sweep must run the same global env count — "
+            "pass one n_envs through all arms (benchmarks/run.py)")
     return points
 
 

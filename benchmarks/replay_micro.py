@@ -207,11 +207,74 @@ def replay_points(smoke: bool = False):
     return points
 
 
+def compiled_fused_record():
+    """Attempt the fused sample+gather kernel *compiled* (non-interpret)
+    on this host's default backend and record the outcome.
+
+    Interpret mode inverts the fused kernel's advantage (the committed
+    arms above: fused ≈ 4× slower than split on CPU), so the only fair
+    measurement is a compiled one.  On TPU this returns a measured
+    sample+gather rate; on CPU Pallas refuses to lower ("Only interpret
+    mode is supported on CPU backend") and the record carries the error
+    instead — which is exactly why ``ReplayConfig.fused_sample_gather``
+    defaults to backend-appropriate
+    (``tree_ops.default_fused_sample_gather``): fused only where it
+    compiles.
+    """
+    from repro.core import sumtree
+    from repro.kernels import ops as kops
+    from repro.kernels import sample_gather as _ksg
+
+    backend = jax.default_backend()
+    capacity, _, sample_batch = SIZES["pallas"]
+    spec = sumtree.make_spec(capacity, 128)
+    key = jax.random.PRNGKey(0)
+    tree = sumtree.update(
+        spec, sumtree.init(spec),
+        jnp.arange(capacity, dtype=jnp.int32),
+        jax.random.uniform(key, (capacity,), minval=0.1, maxval=2.0),
+        unique=True)
+    storage = jax.random.normal(key, (capacity, OBS_DIM))
+    bp = ((sample_batch + _ksg.SAMPLE_BLOCK - 1)
+          // _ksg.SAMPLE_BLOCK) * _ksg.SAMPLE_BLOCK
+    u = jax.random.uniform(jax.random.fold_in(key, 1), (bp,))
+    np_ = ((capacity + _ksg.STORAGE_BLOCK - 1)
+           // _ksg.STORAGE_BLOCK) * _ksg.STORAGE_BLOCK
+    mat = jnp.pad(storage, ((0, np_ - capacity), (0, 0)))
+    levels = kops.tree_to_levels(spec, tree)[1:]
+
+    def call(interpret):
+        idx, pri, (rows,) = _ksg.sample_gather_levels(
+            levels, u, [mat], capacity=spec.capacity, fanout=spec.fanout,
+            interpret=interpret)
+        jax.block_until_ready(rows)
+        return idx, pri, rows
+
+    record = {"attempted_backend": backend}
+    try:
+        call(interpret=False)           # compile + cold pass
+        samples = []
+        for _ in range(REPEATS):
+            t0 = time.perf_counter()
+            call(interpret=False)
+            samples.append(sample_batch / (time.perf_counter() - t0))
+        samples.sort()
+        record["compiled"] = True
+        record["sample_gather_per_s"] = round(samples[len(samples) // 2], 2)
+    except Exception as e:  # noqa: BLE001 — the refusal IS the result
+        record["compiled"] = False
+        record["error"] = f"{type(e).__name__}: {e}"[:300]
+    return record
+
+
 def emit_json(out_dir: str, smoke: bool = False) -> str:
     payload = {
         "figure": "replay",
         "metric": "replay_ops_per_s",
         "smoke": smoke,
+        # top-level note (schema tolerates extra payload keys): the
+        # compiled-vs-interpret resolution of the fused-kernel question
+        "fused_compiled": compiled_fused_record(),
         "points": replay_points(smoke=smoke),
     }
     os.makedirs(out_dir, exist_ok=True)

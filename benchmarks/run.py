@@ -45,13 +45,23 @@ import sys
 import traceback
 
 
-def emit_json(out_dir: str, smoke: bool = False) -> None:
+def emit_json(out_dir: str, smoke: bool = False,
+              wallclock: bool = False) -> None:
     from benchmarks import fig10_scalability, replay_micro
     from repro.runtime import planner
 
     os.makedirs(out_dir, exist_ok=True)
     replay_micro.emit_json(out_dir, smoke=smoke)
     prof = planner.profile(smoke=smoke)
+    fig10_points = list(prof["fig10_points"])
+    if wallclock:
+        # the real multi-process gang arm (DESIGN.md §10) — measured at
+        # the same global env count as the emulated arms of this run so
+        # the uniformity invariant below holds
+        n_envs = fig10_points[0]["n_envs"] if fig10_points else 8
+        fig10_points += fig10_scalability.wallclock_points(
+            n_envs=n_envs, iters=20 if smoke else 40)
+    fig10_scalability.assert_uniform_n_envs(fig10_points)
     fig9 = {
         "figure": "fig9",
         "metric": "env_steps_per_s",
@@ -62,7 +72,7 @@ def emit_json(out_dir: str, smoke: bool = False) -> None:
         "figure": "fig10",
         "metric": "env_steps_per_s",
         "smoke": smoke,
-        "points": prof["fig10_points"],
+        "points": fig10_points,
     }
     for name, payload in ((planner.FIG9_JSON, fig9),
                           (planner.FIG10_JSON, fig10)):
@@ -74,7 +84,7 @@ def emit_json(out_dir: str, smoke: bool = False) -> None:
               file=sys.stderr)
 
     pc = planner.plan(
-        prof["fig9_points"], prof["fig10_points"],
+        prof["fig9_points"], fig10_points,
         actor_curve=prof["actor_curve"],
         learner_curve=prof["learner_curve"],
         source="emit-json")
@@ -107,12 +117,17 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized budget: fewer sweep points and "
                          "iterations, same schema and code paths")
+    ap.add_argument("--wall-clock", action="store_true",
+                    help="add the real multi-process gang arm to "
+                         "BENCH_fig10.json (launch/multiprocess.py: one "
+                         "OS process per worker, gloo collectives)")
     args = ap.parse_args()
 
     failed = []
     if args.emit_json:
         try:
-            emit_json(args.emit_json, smoke=args.smoke)
+            emit_json(args.emit_json, smoke=args.smoke,
+                      wallclock=args.wall_clock)
         except Exception:  # noqa: BLE001 — keep the harness sweeping
             failed.append("emit-json")
             traceback.print_exc()

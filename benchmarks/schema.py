@@ -62,6 +62,13 @@ POINT_FIELDS: Dict[str, Dict[str, tuple]] = {
         "shards": (int, True),
         "pods": (int, True),
         "compressed": (bool, True),
+        # wall-clock arm (backend="wallclock"): real multi-process gang
+        # points from launch/multiprocess.py — the process count and the
+        # reduce shape are identity fields, so a wall-clock point never
+        # silently matches an emulated one in compare.py
+        "n_procs": (int, False),
+        "overlapped": (bool, False),
+        "update_interval": (int, False),
     },
     # replay-transaction microbenchmark (benchmarks/replay_micro.py)
     "replay": {
@@ -84,6 +91,9 @@ PLAN_CONFIG_FIELDS: Dict[str, tuple] = {
     "publish_interval": (int, True),
     "max_staleness": (int, True),
     "compress_pod_reduce": (bool, True),
+    # optional so hand-written pre-overlap plans stay loadable; every
+    # planner-emitted plan carries it (PlannedConfig.to_dict)
+    "overlap_pod_reduce": (bool, False),
     "n_envs": (int, True),
     "update_interval": (int, True),
     "x_actor": (int, True),

@@ -94,6 +94,12 @@ class CheckpointManager:
         }
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
+        if os.path.exists(final):
+            # re-saving an existing step (restart at the same point):
+            # rename over a non-empty dir is an error on POSIX, so retire
+            # the old commit first — the window with neither dir present
+            # only loses an already-superseded copy of this same step.
+            shutil.rmtree(final)
         os.rename(tmp, final)       # atomic commit
         self._gc()
         return final

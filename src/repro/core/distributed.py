@@ -18,6 +18,14 @@ per-shard sample count is fixed and weights divide out q(i)).
 
 All functions are written to run inside ``shard_map`` over the data axes;
 each call sees its local shard and the mesh axis name(s).
+
+``initialize_distributed`` joins this process to the multi-controller
+SPMD runtime (the wall-clock launch mode, DESIGN.md §10): after it
+returns, ``jax.devices()`` spans every worker process in process order,
+so the meshes in ``launch.mesh`` — and the shard_map executors over
+them — transparently become multi-process, with each worker executing
+its addressable shards and collectives crossing real process
+boundaries.
 """
 
 from __future__ import annotations
@@ -31,6 +39,84 @@ import jax.numpy as jnp
 from repro.core.replay import PrioritizedReplay, ReplayConfig, ReplayState
 
 Pytree = Any
+
+
+def _wait_for_coordinator(coordinator_address: str, process_id: int,
+                          num_processes: int, timeout_s: float) -> None:
+    """Poll plain TCP connects against the coordinator until it accepts
+    or ``timeout_s`` elapses — raising the handshake RuntimeError
+    ourselves, because a dead coordinator otherwise kills the process
+    via an uncatchable XLA ``LOG(FATAL)``."""
+    import socket
+    import time
+
+    host, _, port = coordinator_address.rpartition(":")
+    deadline = time.monotonic() + timeout_s
+    while True:
+        try:
+            with socket.create_connection((host, int(port)), timeout=1.0):
+                return
+        except OSError:
+            if time.monotonic() >= deadline:
+                raise RuntimeError(
+                    f"coordinator handshake failed: process {process_id}/"
+                    f"{num_processes} could not join the coordinator at "
+                    f"{coordinator_address} within {timeout_s:.0f}s — "
+                    "check that every worker of the gang was actually "
+                    "launched (launch/multiprocess.py spawns the full "
+                    "set) and that the coordinator host:port is "
+                    "reachable and not already bound") from None
+            time.sleep(0.25)
+
+
+def initialize_distributed(
+    coordinator_address: str,
+    num_processes: int,
+    process_id: int,
+    timeout_s: float = 60.0,
+) -> None:
+    """Join the multi-controller runtime (``launch/multiprocess.py``).
+
+    On CPU backends the gloo collectives transport must be selected
+    *before* the distributed runtime initializes — without it the first
+    cross-process psum dies with "Multiprocess computations aren't
+    implemented on the CPU backend".  ``jax.distributed.initialize``
+    blocks until all ``num_processes`` workers reach the coordinator;
+    ``timeout_s`` bounds that wait so a missing or crashed peer surfaces
+    as a raised ``RuntimeError`` naming the coordinator instead of a
+    silent hang (tests/test_multiprocess.py).  For workers other than
+    process 0 the coordinator port is probed with plain TCP connects
+    first: when process 0 never came up, the XLA coordination client
+    aborts the interpreter with a C++ ``LOG(FATAL)`` on its RegisterTask
+    deadline — uncatchable from Python — so the reachability check is
+    the only place the missing-coordinator case can turn into a clear
+    exception.
+    """
+    if num_processes < 1:
+        raise ValueError(f"num_processes={num_processes}: need ≥ 1")
+    if not 0 <= process_id < num_processes:
+        raise ValueError(f"process_id={process_id}: need 0 ≤ id < "
+                         f"{num_processes}")
+    if process_id != 0:
+        _wait_for_coordinator(coordinator_address, process_id,
+                              num_processes, timeout_s)
+    jax.config.update("jax_cpu_collectives_implementation", "gloo")
+    try:
+        jax.distributed.initialize(
+            coordinator_address=coordinator_address,
+            num_processes=num_processes,
+            process_id=process_id,
+            initialization_timeout=int(timeout_s),
+        )
+    except Exception as e:
+        raise RuntimeError(
+            f"coordinator handshake failed: process {process_id}/"
+            f"{num_processes} could not join the coordinator at "
+            f"{coordinator_address} within {timeout_s:.0f}s — check that "
+            "every worker of the gang was actually launched (launch/"
+            "multiprocess.py spawns the full set) and that the "
+            "coordinator host:port is reachable and not already bound"
+        ) from e
 
 
 @dataclasses.dataclass(frozen=True)
@@ -48,7 +134,8 @@ class ShardedReplayConfig:
     eps: float = 1e-6
     backend: Optional[str] = None   # TreeOps backend: "xla" | "pallas"
     use_kernels: bool = False   # deprecated alias for backend="pallas"
-    fused_sample_gather: bool = True
+    # None → backend-appropriate default (see ReplayConfig)
+    fused_sample_gather: Optional[bool] = None
     axis_names: Tuple[str, ...] = ("data",)
 
     @property
@@ -87,12 +174,13 @@ class ShardedPrioritizedReplay:
     # -- global scalars (one psum of 2 floats) -----------------------------
 
     def global_stats(self, state: ReplayState) -> Tuple[jax.Array, jax.Array]:
-        tot = state.tree[0]
-        cnt = state.count.astype(jnp.float32)
+        # total priority mass and item count ride ONE stacked psum per
+        # axis — on a real multi-process transport each collective pays
+        # a fixed launch latency, so two scalars share a wire vector
+        stats = jnp.stack([state.tree[0], state.count.astype(jnp.float32)])
         for ax in self.config.axis_names:
-            tot = jax.lax.psum(tot, ax)
-            cnt = jax.lax.psum(cnt, ax)
-        return tot, cnt
+            stats = jax.lax.psum(stats, ax)
+        return stats[0], stats[1]
 
     def max_across(self, x: jax.Array) -> jax.Array:
         """Global max over the mesh axes (the importance-weight

@@ -73,13 +73,22 @@ class ReplayConfig:
     backend: Optional[str] = None   # TreeOps backend: "xla" | "pallas"
                                     # (None = unset → "xla")
     use_kernels: bool = False   # deprecated alias for backend="pallas"
-    fused_sample_gather: bool = True  # descend + fetch rows in one op
+    # descend + fetch rows in one op; None → backend-appropriate default
+    # (tree_ops.default_fused_sample_gather: True only where the kernel
+    # compiles, i.e. TPU — CPU interpret mode inverts the win)
+    fused_sample_gather: Optional[bool] = None
 
     @property
     def tree_backend(self) -> str:
         # conflict detection + deprecation live in ONE place
         # (tree_ops.resolve_tree_backend)
         return tree_ops.resolve_tree_backend(self.backend, self.use_kernels)
+
+    @property
+    def fused_sample_gather_resolved(self) -> bool:
+        if self.fused_sample_gather is None:
+            return tree_ops.default_fused_sample_gather()
+        return self.fused_sample_gather
 
 
 class PrioritizedReplay:
@@ -246,7 +255,7 @@ class PrioritizedReplay:
         shards' learner objectives silently diverge.
         """
         u = jax.random.uniform(rng, (batch,))
-        if self.config.fused_sample_gather:
+        if self.config.fused_sample_gather_resolved:
             idx, pri, items = self.ops.sample_gather(
                 self.spec, state.tree, u, state.storage)
         else:

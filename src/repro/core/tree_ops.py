@@ -64,6 +64,19 @@ def resolve_tree_backend(backend: Optional[str], use_kernels: bool) -> str:
     return backend or "xla"
 
 
+def default_fused_sample_gather() -> bool:
+    """Backend-appropriate default for ``ReplayConfig.fused_sample_gather
+    = None``: the fused descent+gather kernel pays off only where it
+    actually *compiles* (TPU Mosaic — the sampled indices stay in VMEM
+    between the tree walk and the row fetch).  On CPU Pallas refuses to
+    compile ("Only interpret mode is supported on CPU backend") and
+    interpret mode inverts the advantage — per-grid-step Python
+    interpretation makes the fused arm ~4× slower than split sample +
+    gather (BENCH_replay.json, ``fused_compiled`` record) — so non-TPU
+    hosts default to the split path."""
+    return jax.default_backend() == "tpu"
+
+
 @runtime_checkable
 class TreeOps(Protocol):
     """Backend protocol for batched sum-tree + storage ops."""

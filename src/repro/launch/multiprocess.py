@@ -1,0 +1,441 @@
+"""Wall-clock multi-process launcher (DESIGN.md §10).
+
+Everything else in this repo emulates a device mesh inside one process
+(``--xla_force_host_platform_device_count``), which serializes the
+"parallel" shards on the host and makes the fig10 scaling curve a
+simulation.  This module launches a real gang: N worker processes, each
+owning its own XLA client with ``devices_per_proc`` forced host devices,
+joined into one multi-controller SPMD runtime by
+``core.distributed.initialize_distributed`` (gloo collectives on CPU).
+After the handshake ``jax.devices()`` spans the whole gang in process
+order, so the existing ``launch.mesh`` constructors and the shard_map
+executors run unchanged — each process executes its addressable mesh
+cells and the gradient reduce crosses real process boundaries.
+
+Parent side (``launch``): picks a free coordinator port, spawns
+``python -m repro.launch.multiprocess`` once per process id with
+per-worker ``XLA_FLAGS``/``PYTHONPATH`` env, streams and collects
+stdout, and raises with the failing worker's tail on non-zero exit.
+Results travel as ``KEY=VALUE`` lines on process 0's stdout
+(``parse_kv``) — the same convention as fig10's emulated pod workers.
+
+Worker side (``main``): initializes the distributed runtime, then runs
+one of three workloads:
+
+  * ``--mode bench`` — DQN/CartPole through ``FusedExecutor`` (1 total
+    device) or ``ShardedExecutor`` (data or pod×data mesh over the
+    gang's global devices, optionally int8-compressed and/or overlapped
+    cross-pod reduce), timed median-of-``--repeats`` with ``rel_spread``
+    — the wall-clock arm of benchmarks/fig10_scalability.py.  With
+    ``--publish-interval P > 0`` the async double buffer is republished
+    *externally*: between chunks the fresh params make a real
+    device→host→device round trip (``external_publish``) instead of the
+    in-program copy.
+  * ``--mode fused`` — the degenerate single-process launch: the exact
+    ``FusedExecutor.train`` program, printing final metrics and a
+    parameter checksum.  Bit-exact against the same executor run
+    in-process (tests/test_multiprocess.py): the distributed runtime at
+    N=1 must be a no-op.
+  * ``--mode equiv`` — 2-process reducer equivalence: the overlapped
+    and barrier cross-pod reduces driven over the same per-pod gradient
+    streams through real cross-process collectives; process 0 prints
+    the shift-identity and telescoping errors
+    (tests/test_distributed.py).
+
+Chunks are bracketed with ``jax.profiler.StepTraceAnnotation`` step
+markers so profile traces segment per chunk.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import socket
+import subprocess
+import sys
+import time
+from typing import Dict, List, Optional, Sequence
+
+HANDSHAKE_TIMEOUT_S = 60.0
+
+
+# -- parent side -------------------------------------------------------------
+
+
+def free_port() -> int:
+    """A port the coordinator can bind (raced, but single-host tests and
+    benchmarks re-launch on collision rather than coordinate)."""
+    with socket.socket(socket.AF_INET, socket.SOCK_STREAM) as s:
+        s.bind(("127.0.0.1", 0))
+        return s.getsockname()[1]
+
+
+def _src_root() -> str:
+    # .../src/repro/launch/multiprocess.py → .../src
+    return os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+
+
+def worker_env(devices_per_proc: int) -> Dict[str, str]:
+    """Child env: forced per-process host device count (before any jax
+    import — the whole reason the launcher is a separate process) and an
+    import path that reaches ``repro`` regardless of the parent's cwd."""
+    env = os.environ.copy()
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count="
+                        f"{devices_per_proc}")
+    env["JAX_PLATFORMS"] = "cpu"
+    path = env.get("PYTHONPATH", "")
+    env["PYTHONPATH"] = _src_root() + (os.pathsep + path if path else "")
+    return env
+
+
+def launch(
+    worker_args: Sequence[str],
+    n_procs: int,
+    devices_per_proc: int = 1,
+    coordinator: Optional[str] = None,
+    timeout_s: float = 900.0,
+    handshake_timeout_s: float = HANDSHAKE_TIMEOUT_S,
+) -> List[str]:
+    """Spawn the full ``n_procs`` gang and return per-process stdout
+    (index = process id).  Raises ``RuntimeError`` with the failing
+    worker's output tail if any exits non-zero or overruns
+    ``timeout_s``."""
+    if n_procs < 1:
+        raise ValueError(f"n_procs={n_procs}: need ≥ 1")
+    coordinator = coordinator or f"127.0.0.1:{free_port()}"
+    env = worker_env(devices_per_proc)
+    procs = []
+    for pid in range(n_procs):
+        cmd = [sys.executable, "-m", "repro.launch.multiprocess",
+               "--coordinator", coordinator,
+               "--n-procs", str(n_procs),
+               "--process-id", str(pid),
+               "--handshake-timeout", str(handshake_timeout_s),
+               *worker_args]
+        procs.append(subprocess.Popen(
+            cmd, env=env, stdout=subprocess.PIPE,
+            stderr=subprocess.STDOUT, text=True))
+    outs: List[str] = [""] * n_procs
+    deadline = time.monotonic() + timeout_s
+    failed = None
+    for pid, p in enumerate(procs):
+        left = max(1.0, deadline - time.monotonic())
+        try:
+            outs[pid], _ = p.communicate(timeout=left)
+        except subprocess.TimeoutExpired:
+            p.kill()
+            outs[pid], _ = p.communicate()
+            failed = failed or (pid, "timeout")
+        if p.returncode not in (0, None) and failed is None:
+            failed = (pid, f"exit code {p.returncode}")
+    if failed is not None:
+        # one worker down wedges the rest at the next collective — kill
+        # the whole gang before reporting
+        for p in procs:
+            if p.poll() is None:
+                p.kill()
+        pid, why = failed
+        tail = "\n".join(outs[pid].splitlines()[-25:])
+        raise RuntimeError(
+            f"wall-clock worker {pid}/{n_procs} failed ({why}); output "
+            f"tail:\n{tail}")
+    return outs
+
+
+def parse_kv(text: str) -> Dict[str, str]:
+    """The ``KEY=VALUE`` result lines a worker prints (keys are
+    UPPER_SNAKE by convention; later lines win)."""
+    out: Dict[str, str] = {}
+    for line in text.splitlines():
+        line = line.strip()
+        if "=" in line and line.split("=", 1)[0].replace("_", "").isupper():
+            k, v = line.split("=", 1)
+            out[k] = v
+    return out
+
+
+# -- worker side -------------------------------------------------------------
+
+
+def _median_spread(samples: Sequence[float]):
+    """(median, (max−min)/median) — the rel_spread convention of
+    benchmarks/timing.py, inlined because ``benchmarks`` is not
+    importable from ``src``."""
+    xs = sorted(samples)
+    n = len(xs)
+    med = (xs[n // 2] if n % 2 else 0.5 * (xs[n // 2 - 1] + xs[n // 2]))
+    spread = (xs[-1] - xs[0]) / med if med else 0.0
+    return med, spread
+
+
+def _dqn_cartpole(n_envs_local_hint: int):
+    """The benchmark workload everything wall-clock measures: DQN on
+    vectorized CartPole (matches fig10's emulated arms)."""
+    import functools
+
+    import jax.numpy as jnp
+
+    from repro.agents.dqn import DQNConfig, make_dqn
+    from repro.envs.classic import make_vec
+
+    env_fn = functools.partial(make_vec, "cartpole")
+    spec, _, _ = env_fn(1)
+    agent = make_dqn(spec, DQNConfig())
+    example = {
+        "obs": jnp.zeros((spec.obs_dim,), jnp.float32),
+        "action": jnp.zeros((), jnp.int32),
+        "reward": jnp.zeros(()),
+        "next_obs": jnp.zeros((spec.obs_dim,), jnp.float32),
+        "done": jnp.zeros(()),
+    }
+    del n_envs_local_hint
+    return env_fn, spec, agent, example
+
+
+def _build_executor(args):
+    import jax
+
+    from repro.core.distributed import ShardedPrioritizedReplay, \
+        ShardedReplayConfig
+    from repro.core.replay import PrioritizedReplay, ReplayConfig
+    from repro.launch.mesh import data_mesh, pod_data_mesh
+    from repro.runtime.executors import FusedExecutor, ShardedExecutor
+    from repro.runtime.loop import LoopConfig
+
+    env_fn, spec, agent, example = _dqn_cartpole(args.n_envs)
+    cfg = LoopConfig(batch_size=64, warmup=64, epsilon=0.1,
+                     update_interval=args.update_interval)
+    n_cells = args.n_pods * args.n_data
+    if n_cells != jax.device_count():
+        raise RuntimeError(
+            f"mesh {args.n_pods}x{args.n_data} wants {n_cells} cells but "
+            f"the gang exposes {jax.device_count()} global devices "
+            f"({jax.process_count()} procs × "
+            f"{len(jax.local_devices())} local)")
+    external = args.publish_interval > 0
+    if n_cells == 1:
+        replay = PrioritizedReplay(
+            ReplayConfig(capacity=50_000, fanout=128), example)
+        return FusedExecutor(agent, replay, env_fn, cfg, args.n_envs,
+                             scan_chunk=args.scan_chunk,
+                             publish_interval=args.publish_interval,
+                             external_publish=external)
+    if args.n_pods > 1:
+        mesh, axes = pod_data_mesh(args.n_pods, args.n_data), ("pod", "data")
+    else:
+        mesh, axes = data_mesh(args.n_data), ("data",)
+    replay = ShardedPrioritizedReplay(
+        ShardedReplayConfig(capacity_per_shard=50_000 // n_cells,
+                            fanout=128, axis_names=axes), example)
+    return ShardedExecutor(agent, replay, env_fn, cfg, args.n_envs, mesh,
+                           scan_chunk=args.scan_chunk,
+                           publish_interval=args.publish_interval,
+                           compress_pod_reduce=args.compress,
+                           overlap_pod_reduce=args.overlap,
+                           external_publish=external)
+
+
+def _publish_host_roundtrip(ex, state):
+    """The real device→host→device parameter publish of the wall-clock
+    async mode: fetch the fresh learner params to the host (a true D2H
+    transfer — ``jax.device_get`` materializes numpy), then rebuild the
+    per-shard acting copies and zero the ages.  Replaces the in-program
+    ``jnp.where`` republish (``make_step(external_publish=True)``)."""
+    import jax
+    import numpy as np
+
+    host = jax.device_get(ex.agent.params_for_acting(state.agent))
+
+    def republish(old, fresh):
+        fresh = np.asarray(fresh)
+        if old.shape == fresh.shape:        # fused path: plain put
+            return jax.device_put(fresh, old.sharding)
+        # sharded path: leading shard dim — broadcast the host copy into
+        # every shard's slot of the global array
+        wide = np.broadcast_to(fresh[None], old.shape)
+        return jax.make_array_from_callback(
+            old.shape, old.sharding, lambda idx: wide[idx])
+
+    actor_params = jax.tree.map(republish, state.actor_params, host)
+    age = state.params_age
+    zero = np.zeros(age.shape, dtype=np.int32)
+    params_age = jax.make_array_from_callback(
+        age.shape, age.sharding, lambda idx: zero[idx])
+    return state._replace(actor_params=actor_params, params_age=params_age)
+
+
+def _bench_worker(args):
+    import jax
+
+    ex = _build_executor(args)
+    pid = jax.process_index()
+    publish = args.publish_interval
+
+    def run_iters(state, iters, base_step):
+        done = 0
+        while done < iters:
+            length = min(publish or ex.scan_chunk, iters - done)
+            with jax.profiler.StepTraceAnnotation(
+                    "wallclock_chunk", step_num=base_step + done):
+                state, metrics = ex.run_chunk(state, length)
+            if publish:
+                state = _publish_host_roundtrip(ex, state)
+            done += length
+        return state, metrics
+
+    state = ex.init(jax.random.PRNGKey(args.seed))
+    # warmup compiles every chunk length the timed loop will use
+    state, _ = run_iters(state, args.iters, 0)
+    samples = []
+    for r in range(args.repeats):
+        t0 = time.perf_counter()
+        state, metrics = run_iters(state, args.iters, (r + 1) * args.iters)
+        jax.block_until_ready(metrics["env_steps"])
+        dt = time.perf_counter() - t0
+        samples.append(args.n_envs * args.iters / dt)
+    med, spread = _median_spread(samples)
+    if pid == 0:
+        print(f"STEPS_PER_S={med:.2f}")
+        print(f"REL_SPREAD={spread:.4f}")
+        print(f"REPEATS={args.repeats}")
+        print(f"ENV_STEPS={int(jax.device_get(metrics['env_steps'])[-1])}")
+
+
+def _fused_worker(args):
+    import jax
+
+    if jax.process_count() != 1:
+        raise RuntimeError("--mode fused is the degenerate single-process "
+                           f"launch; got {jax.process_count()} procs")
+    ex = _build_executor(args)
+    state, hist = ex.train(args.iters, jax.random.PRNGKey(args.seed))
+    params = jax.device_get(state.agent.params)
+    checksum = 0.0
+    for leaf in jax.tree.leaves(params):
+        checksum += float(abs(leaf.astype("float64")).sum())
+    print(f"FINAL_LOSS={float(hist['loss'][-1])!r}")
+    print(f"FINAL_RETURN={float(hist['mean_episode_return'][-1])!r}")
+    print(f"ENV_STEPS={int(hist['env_steps'][-1])}")
+    print(f"PARAMS_CHECKSUM={checksum!r}")
+
+
+def _equiv_worker(args):
+    """Overlapped vs barrier cross-pod reduce over *real* 2-process
+    collectives: same per-pod gradient streams, checked in-program
+    (replicated scalar outputs — per-pod intermediates are never pulled
+    to the host, which multi-controller mode would reject):
+
+      * shift identity — on a constant stream, overlapped event t
+        equals barrier event t−1 bit-exactly;
+      * telescoping — on a varying stream the cumulative applied
+        difference collapses to ``p_T − pm_T`` (one gradient's pod
+        disagreement, not T of them).
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+    from repro.runtime.learner import make_grad_reducer
+
+    if jax.device_count() != 2:
+        raise RuntimeError(f"--mode equiv wants a 2-device (pod) gang, "
+                           f"got {jax.device_count()}")
+    mesh = Mesh(np.asarray(jax.devices()).reshape(2), ("pod",))
+    barrier = make_grad_reducer(("pod",), compress_axis="pod")
+    overlap = make_grad_reducer(("pod",), compress_axis="pod", overlap=True)
+    T = 8
+
+    def program(gc, gs):
+        # local views: gc (1, dim), gs (T, 1, dim) — one pod per process
+        z = jnp.zeros_like(gc)
+
+        def b_chain(stream):
+            ef, outs = z, []
+            for g in stream:
+                out, ef = barrier(g, None, ef)
+                outs.append(out)
+            return outs
+
+        def o_chain(stream):
+            ef = {"ef": z, "prev_mean": z, "prev_partial": z}
+            outs = []
+            for g in stream:
+                out, ef = overlap(g, None, ef)
+                outs.append(out)
+            return outs
+
+        const = [gc] * 6
+        ob, oo = b_chain(const), o_chain(const)
+        shift = jnp.max(jnp.stack(
+            [jnp.max(jnp.abs(oo[t] - ob[t - 1])) for t in range(1, 6)]))
+
+        varying = [gs[t] for t in range(T)]
+        vb, vo = b_chain(varying), o_chain(varying)
+        cum_diff = sum(vo) - sum(vb)
+        # n_data = 1 ⇒ the intra-pod partial is the local gradient itself
+        tele = jnp.max(jnp.abs(cum_diff - (varying[-1] - vb[-1])))
+        return jax.lax.pmax(shift, "pod"), jax.lax.pmax(tele, "pod")
+
+    run = jax.jit(shard_map(
+        program, mesh=mesh, in_specs=(P("pod"), P(None, "pod")),
+        out_specs=(P(), P()), check_rep=False))
+
+    # identical host-side streams on every process, sharded pod-major
+    dim = 16
+    rng = np.random.RandomState(args.seed)
+    gc_host = rng.randn(2, 1, dim).astype(np.float32)
+    gs_host = rng.randn(T, 2, 1, dim).astype(np.float32)
+
+    def gshard(x, spec):
+        sh = NamedSharding(mesh, spec)
+        return jax.make_array_from_callback(x.shape, sh, lambda idx: x[idx])
+
+    shift, tele = run(gshard(gc_host, P("pod")),
+                      gshard(gs_host, P(None, "pod")))
+    if jax.process_index() == 0:
+        print(f"SHIFT_MAX_ABS_ERR={float(jax.device_get(shift))!r}")
+        print(f"TELESCOPE_MAX_ABS_ERR={float(jax.device_get(tele))!r}")
+
+
+# -- entry -------------------------------------------------------------------
+
+
+def main(argv: Optional[Sequence[str]] = None) -> None:
+    ap = argparse.ArgumentParser(
+        description="wall-clock multi-process worker (spawned by launch())")
+    ap.add_argument("--coordinator", required=True,
+                    help="host:port of the jax.distributed coordinator "
+                         "(process 0 binds it)")
+    ap.add_argument("--n-procs", type=int, required=True)
+    ap.add_argument("--process-id", type=int, required=True)
+    ap.add_argument("--handshake-timeout", type=float,
+                    default=HANDSHAKE_TIMEOUT_S)
+    ap.add_argument("--mode", choices=("bench", "fused", "equiv"),
+                    default="bench")
+    ap.add_argument("--n-pods", type=int, default=1)
+    ap.add_argument("--n-data", type=int, default=1)
+    ap.add_argument("--compress", action="store_true")
+    ap.add_argument("--overlap", action="store_true")
+    ap.add_argument("--publish-interval", type=int, default=0)
+    ap.add_argument("--update-interval", type=int, default=1)
+    ap.add_argument("--n-envs", type=int, default=16)
+    ap.add_argument("--iters", type=int, default=120)
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--scan-chunk", type=int, default=20)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    from repro.core.distributed import initialize_distributed
+
+    initialize_distributed(args.coordinator, args.n_procs, args.process_id,
+                           timeout_s=args.handshake_timeout)
+    {"bench": _bench_worker,
+     "fused": _fused_worker,
+     "equiv": _equiv_worker}[args.mode](args)
+
+
+if __name__ == "__main__":
+    main()

@@ -17,12 +17,66 @@ initializes, and the planned (pod×)data mesh is installed as the
 ambient mesh (``launch.mesh.mesh_from_plan``).  The RL-executor-level
 instantiation of a plan lives in ``runtime.executors.
 executor_from_plan`` (see examples/quickstart.py --plan).
+
+``--wall-clock N`` (DESIGN.md §10) re-launches this driver as N real
+worker processes through ``launch.multiprocess``: the parent spawns the
+gang (fresh XLA client per worker, gloo collectives) and each worker
+joins the multi-controller runtime via
+``core.distributed.initialize_distributed`` before its first jax call.
+Workers split ``--n-envs`` evenly, run the same training body on their
+own actor streams, and data-parallel-average the parameters across the
+gang after every train step — a real device→host→wire→device round
+trip, not an in-program copy.  Process 0 owns printing and checkpoints.
+Incompatible with ``--plan``/``--mesh`` (those emulate topology inside
+one process — the opposite of this mode).
 """
 
 import argparse
 import contextlib
 import functools
+import os
+import sys
 import time
+
+
+def _make_param_averager(n_procs: int):
+    """Cross-process parameter mean for the wall-clock gang: each worker
+    contributes its local params as one slot of a leading-proc-axis
+    global array, a shard_map pmean over the ``("proc",)`` mesh reduces
+    them over the wire, and the replicated result is pulled back to the
+    worker's local device — so the published params really crossed
+    device→host→gloo→device, not an XLA alias."""
+    import jax
+    import numpy as np
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+    mesh = Mesh(np.asarray(jax.devices()).reshape(n_procs), ("proc",))
+    local_dev = jax.local_devices()[0]
+
+    def pmean(tree):
+        # local view of each stacked leaf is this worker's (1, …) slot;
+        # drop it so the replicated output has the original leaf shape
+        return jax.tree.map(lambda x: jax.lax.pmean(x[0], "proc"), tree)
+
+    reduce_fn = jax.jit(shard_map(
+        pmean, mesh=mesh, in_specs=PartitionSpec("proc"),
+        out_specs=PartitionSpec(), check_rep=False))
+
+    def to_global(leaf):
+        shape = (n_procs,) + leaf.shape
+        sharding = NamedSharding(mesh, PartitionSpec("proc"))
+        local = jax.device_put(leaf[None], local_dev)
+        return jax.make_array_from_single_device_arrays(
+            shape, sharding, [local])
+
+    def sync(params):
+        stacked = jax.tree.map(to_global, params)
+        mean = reduce_fn(stacked)
+        host = jax.device_get(mean)   # fully replicated → addressable
+        return jax.tree.map(lambda x: jax.device_put(x, local_dev), host)
+
+    return sync
 
 
 def main():
@@ -41,9 +95,63 @@ def main():
                          "forced device count and ambient (pod×)data "
                          "mesh (overrides --n-envs; --mesh must stay "
                          "'host')")
+    ap.add_argument("--wall-clock", type=int, default=0, metavar="N",
+                    help="launch N real worker processes (multi-"
+                         "controller SPMD over gloo) instead of the "
+                         "in-process run; params are data-parallel-"
+                         "averaged across the gang every step")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=25)
     args = ap.parse_args()
+
+    wc_coord = os.environ.get("REPRO_WC_COORD")
+    if args.wall_clock and args.wall_clock > 1 and wc_coord is None:
+        # parent: spawn the gang re-running this driver, worker env
+        # (XLA_FLAGS / PYTHONPATH / coordinator) set per child
+        if args.plan or args.mesh != "host":
+            ap.error("--wall-clock spawns real processes — drop "
+                     "--plan/--mesh (those emulate topology in-process)")
+        from repro.launch import multiprocess as mp
+
+        n = args.wall_clock
+        coordinator = f"127.0.0.1:{mp.free_port()}"
+        argv = list(sys.argv[1:])
+        i = argv.index("--wall-clock")
+        del argv[i:i + 2]
+        env = mp.worker_env(devices_per_proc=1)
+        env["REPRO_WC_COORD"] = coordinator
+        env["REPRO_WC_NPROCS"] = str(n)
+        import subprocess
+        procs = []
+        for pid in range(n):
+            cenv = dict(env, REPRO_WC_PID=str(pid))
+            procs.append(subprocess.Popen(
+                [sys.executable, "-m", "repro.launch.train", *argv],
+                env=cenv, stdout=subprocess.PIPE,
+                stderr=subprocess.STDOUT, text=True))
+        rc = 0
+        for pid, p in enumerate(procs):
+            out, _ = p.communicate()
+            for line in out.splitlines():
+                print(f"[worker {pid}] {line}")
+            rc = rc or p.returncode
+        if rc:
+            raise SystemExit(rc)
+        return
+
+    if wc_coord is not None:
+        # worker: join the gang before the first jax call
+        from repro.core.distributed import initialize_distributed
+
+        wc_nprocs = int(os.environ["REPRO_WC_NPROCS"])
+        wc_pid = int(os.environ["REPRO_WC_PID"])
+        initialize_distributed(wc_coord, wc_nprocs, wc_pid)
+        if args.n_envs % wc_nprocs:
+            ap.error(f"--n-envs {args.n_envs} not divisible by the "
+                     f"{wc_nprocs}-process gang")
+        args.n_envs //= wc_nprocs
+    else:
+        wc_nprocs, wc_pid = 1, 0
 
     plan = None
     if args.plan:
@@ -56,14 +164,12 @@ def main():
         args.n_envs = plan.n_envs
         print(f"plan: {plan.describe()}")
         if plan.n_devices > 1:
-            import os
             os.environ["XLA_FLAGS"] = (
                 f"{os.environ.get('XLA_FLAGS', '')} "
                 "--xla_force_host_platform_device_count="
                 f"{plan.n_devices}").strip()
 
     if args.mesh != "host":
-        import os
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
     import jax
@@ -105,7 +211,13 @@ def main():
 
     mdp = TokenMDPSpec(vocab=cfg.vocab_size)
     reset, step_env, optimal = make(mdp, jax.random.fold_in(key, 1), args.n_envs)
-    env_state, obs = reset(jax.random.fold_in(key, 2))
+    # per-worker actor streams: decorrelated resets, replicated params
+    env_state, obs = reset(jax.random.fold_in(jax.random.fold_in(key, 2),
+                                              wc_pid))
+
+    sync_params = None
+    if wc_nprocs > 1:
+        sync_params = _make_param_averager(wc_nprocs)
 
     example = {
         "tokens": jnp.zeros((args.seq,), jnp.int32),
@@ -158,16 +270,24 @@ def main():
         idx, items, w = replay.sample(rst, ks, args.batch)
         state, metrics, tds = train_step(state, dict(items, is_weights=w))
         rst = replay.update_priorities(rst, idx, tds)
-        if it % 10 == 0:
+        if sync_params is not None:
+            # wall-clock gang: data-parallel parameter average across
+            # processes — a real D2H → gloo → H2D round trip per step
+            state = state._replace(params=sync_params(state.params))
+        if wc_pid == 0 and it % 10 == 0:
             print(f"step {it:4d} loss {float(metrics['loss']):.4f} "
                   f"reward {float(jnp.mean(seg['rewards'])):.3f} "
                   f"(optimal {optimal():.3f})")
-        if args.ckpt_every and it and it % args.ckpt_every == 0:
+        if (args.ckpt_every and it and it % args.ckpt_every == 0
+                and wc_pid == 0):
             mgr.save_async(it, state)
     mgr.wait()
-    mgr.save(args.steps, state)
+    if wc_pid == 0:
+        mgr.save(args.steps, state)
     stack.close()
-    print(f"trained {args.steps - (start or 0)} steps in {time.time()-t0:.0f}s")
+    if wc_pid == 0:
+        print(f"trained {args.steps - (start or 0)} steps in "
+              f"{time.time()-t0:.0f}s")
 
 
 if __name__ == "__main__":

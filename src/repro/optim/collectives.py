@@ -1,0 +1,69 @@
+"""Fused mesh collectives — one wire launch per dtype group.
+
+On an emulated mesh (host devices in one process) a collective is a
+cheap XLA region and nobody counts them.  On the real multi-process
+transport of the wall-clock launch mode (the gloo CPU backend,
+DESIGN.md §10) every collective pays a fixed per-launch latency — a
+few milliseconds of rendezvous — that dwarfs the payload cost at
+gradient sizes: a per-leaf ``pmean`` over a 10-leaf MLP issues 10
+all-reduces where one would do, and the per-iteration metric scalars
+add seven more.  At the paper's update ratios that is ~100 launches
+per loop iteration, and measured wall-clock throughput collapses by
+an order of magnitude (benchmarks/fig10_scalability.py ``--wall-clock``).
+
+``fused_tree_reduce`` ravels the leaves into a single wire vector per
+dtype group, reduces once per mesh axis, and splits the result back.
+Elementwise reductions commute with concatenation — element *j* of the
+fused vector sees exactly the same psum/pmean as it did in its own
+leaf — so the transform is bit-exact (asserted against the per-leaf
+form in tests/test_distributed.py), just N× fewer launches.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+def fused_tree_reduce(
+    tree: Pytree,
+    axes: Tuple[str, ...],
+    op: Callable[[jax.Array, str], jax.Array] = jax.lax.pmean,
+    select: Optional[Callable[[jax.Array], bool]] = None,
+) -> Pytree:
+    """Reduce every leaf of ``tree`` over the mesh ``axes`` with one
+    collective per dtype group per axis (call inside shard_map, or vmap
+    with axis names in tests).
+
+    ``op`` is the per-axis primitive (``jax.lax.pmean`` / ``psum`` /
+    ``pmax`` — anything elementwise).  ``select`` optionally filters by
+    leaf (e.g. only inexact dtypes); unselected leaves pass through
+    untouched.  Leaves of different dtypes never share a wire vector —
+    each dtype group keeps its own reduce precision, so a bf16-cast
+    gradient leg and an f32 metrics leg fuse independently.
+    """
+    leaves, treedef = jax.tree.flatten(tree)
+    if not leaves or not axes:
+        return tree
+    out = [None] * len(leaves)
+    groups: dict = {}
+    for i, x in enumerate(leaves):
+        if select is not None and not select(x):
+            out[i] = x
+            continue
+        groups.setdefault(jnp.dtype(x.dtype), []).append(i)
+    for idxs in groups.values():
+        vec = (leaves[idxs[0]].ravel() if len(idxs) == 1 else
+               jnp.concatenate([leaves[i].ravel() for i in idxs]))
+        for ax in axes:
+            vec = op(vec, ax)
+        offset = 0
+        for i in idxs:
+            n = leaves[i].size
+            out[i] = vec[offset:offset + n].reshape(leaves[i].shape)
+            offset += n
+    return jax.tree.unflatten(treedef, out)

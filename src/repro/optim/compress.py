@@ -33,6 +33,8 @@ from typing import Any, NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.optim.collectives import fused_tree_reduce
+
 Pytree = Any
 
 
@@ -115,5 +117,9 @@ def compressed_pmean(grads: Pytree, err: Pytree, axis_name: str
     """
     comp, new_err = compress(grads, err)
     deq = decompress(comp)
-    reduced = jax.tree.map(lambda g: jax.lax.pmean(g, axis_name), deq)
+    # quantization stays per-leaf (each leaf keeps its own scale); the
+    # dequantized f32 payload crosses the pod axis as ONE fused
+    # collective instead of one per leaf — bit-exact, fewer launches on
+    # the real multi-process transport (optim/collectives.py)
+    reduced = fused_tree_reduce(deq, (axis_name,), jax.lax.pmean)
     return reduced, new_err

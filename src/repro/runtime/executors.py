@@ -154,7 +154,10 @@ class FusedExecutor(Executor):
     ``publish_interval`` is plumbing for ``AsyncExecutor``: > 0 switches
     the step into double-buffered acting (actors read the delayed
     ``actor_params`` copy, republished every ``publish_interval``
-    iterations); 0 (the default) is the synchronous loop."""
+    iterations); 0 (the default) is the synchronous loop.
+    ``external_publish=True`` removes the in-program republish — the
+    host runtime rewrites ``actor_params`` between chunks via a real
+    device→host→device transfer (``launch/multiprocess.py``)."""
 
     def __init__(
         self,
@@ -165,6 +168,7 @@ class FusedExecutor(Executor):
         n_envs: int,
         scan_chunk: int = 64,
         publish_interval: int = 0,
+        external_publish: bool = False,
     ):
         self.agent = agent
         self.replay = replay
@@ -172,12 +176,14 @@ class FusedExecutor(Executor):
         self.n_envs = n_envs
         self.scan_chunk = scan_chunk
         self.publish_interval = publish_interval
+        self.external_publish = external_publish
         self._chunks: Dict[int, Callable] = {}
         self.spec, self._v_reset, self._v_step = env_fn(n_envs)
         self.schedule = RatioSchedule.from_config(cfg, n_envs)
         self.step = make_step(agent, replay, self._v_step, cfg, n_envs,
                               schedule=self.schedule,
-                              publish_interval=publish_interval)
+                              publish_interval=publish_interval,
+                              external_publish=external_publish)
 
     def _build_chunk(self, length: int) -> Callable:
         def chunk(replay_state, rest):
@@ -217,7 +223,13 @@ class ShardedExecutor(Executor):
     the slow inter-pod one) swaps the cross-pod leg of the gradient
     reduce for the int8 error-feedback compressed mean; the per-shard EF
     buffer rides in ``LoopState.ef_error`` with the same leading-shard-
-    axis layout as the replay shards.
+    axis layout as the replay shards.  ``overlap_pod_reduce=True`` (on
+    top of ``compress_pod_reduce``) double-buffers that compressed pod
+    leg: each learn applies the previous learn's cross-pod correction
+    while its own ``compressed_pmean`` runs off the critical path
+    (``make_grad_reducer(overlap=True)``, DESIGN.md §10); ``ef_error``
+    then carries the per-shard ``{"ef", "prev_mean", "prev_partial"}``
+    triple.
 
     ``publish_interval``/``max_staleness`` are plumbing for
     ``AsyncExecutor``: with ``publish_interval > 0`` each shard acts on
@@ -239,6 +251,8 @@ class ShardedExecutor(Executor):
         max_staleness: Optional[int] = None,
         compress_pod_reduce: bool = False,
         intra_pod_dtype: Optional[str] = None,
+        overlap_pod_reduce: bool = False,
+        external_publish: bool = False,
     ):
         axes = tuple(replay.config.axis_names)
         missing = [ax for ax in axes if ax not in mesh.shape]
@@ -260,6 +274,17 @@ class ShardedExecutor(Executor):
                 "compress_pod_reduce needs a multi-axis (pod, data) mesh: "
                 f"with the single axis {axes} there is no slow cross-pod "
                 "link to compress — the intra-pod reduce stays f32")
+        if overlap_pod_reduce and not compress_pod_reduce:
+            raise ValueError(
+                "overlap_pod_reduce needs compress_pod_reduce=True: the "
+                "double buffer defers the *compressed* cross-pod leg — "
+                "there is no overlapped form of the plain global pmean")
+        if overlap_pod_reduce and publish_interval and max_staleness is not None:
+            raise ValueError(
+                "overlap_pod_reduce is incompatible with max_staleness: "
+                "the bounded-staleness reduce renormalizes by a global "
+                "weight total, which puts this event's cross-pod traffic "
+                "back on the critical path (runtime/learner.py)")
         self._axes = axes
         axis_sizes = tuple(mesh.shape[ax] for ax in axes)
         n_shards = math.prod(axis_sizes)
@@ -281,6 +306,8 @@ class ShardedExecutor(Executor):
         self.max_staleness = max_staleness
         self.compress_pod_reduce = compress_pod_reduce
         self.intra_pod_dtype = intra_pod_dtype
+        self.overlap_pod_reduce = overlap_pod_reduce
+        self.external_publish = external_publish
         self._chunks: Dict[int, Callable] = {}
         self.spec, self._v_reset, self._v_step = env_fn(self.n_envs_local)
         self.schedule = RatioSchedule.from_config(cfg, n_envs)
@@ -309,7 +336,8 @@ class ShardedExecutor(Executor):
             max_staleness=max_staleness if publish_interval else None,
             compress_axis=axes[0] if compress_pod_reduce else None,
             intra_pod_dtype=intra_pod_dtype,
-            lazy_writes=cfg.lazy_replay)
+            lazy_writes=cfg.lazy_replay,
+            overlap=overlap_pod_reduce)
 
         def flat_shard_id():
             # row-major flattened (pod, data) index over the mesh axes —
@@ -320,24 +348,19 @@ class ShardedExecutor(Executor):
                 sid = sid * size + jax.lax.axis_index(ax)
             return sid
 
-        def mean_across(x):
-            for ax in axes:
-                x = jax.lax.pmean(x, ax)
-            return x
-
-        def sum_across(x):
-            for ax in axes:
-                x = jax.lax.psum(x, ax)
-            return x
-
+        # metric reduction deliberately does NOT ride the per-iteration
+        # step (identity mean_across/sum_across): the scanned step emits
+        # shard-local metrics and _reduce_metrics contracts the whole
+        # chunk's stack with one fused collective per chunk — on the
+        # real multi-process transport the 7-per-iteration metric
+        # collectives were most of the wall-clock (DESIGN.md §10)
         self.step = make_step(
             agent, replay, self._v_step, cfg, self.n_envs_local,
             schedule=self.schedule,
             learn_fn=learn_fn,
             shard_id=flat_shard_id,
-            mean_across=mean_across,
-            sum_across=sum_across,
             publish_interval=publish_interval,
+            external_publish=external_publish,
         )
 
         self._specs = self._state_specs()
@@ -347,12 +370,42 @@ class ShardedExecutor(Executor):
             st = init_loop_state(agent, replay, self._v_reset, key,
                                  self.n_envs_local, shard_id=flat_shard_id(),
                                  double_buffer=publish_interval > 0,
-                                 ef_buffer=compress_pod_reduce)
+                                 ef_buffer=compress_pod_reduce,
+                                 overlap=overlap_pod_reduce)
             return self._global_state(st)
 
         self._init = jax.jit(shard_map(
             init_local, mesh=mesh, in_specs=(PartitionSpec(),),
             out_specs=self._specs, check_rep=False))
+
+    def _reduce_metrics(self, metrics: Dict[str, jax.Array]
+                        ) -> Dict[str, jax.Array]:
+        """Contract the chunk's stacked shard-local metrics across the
+        mesh in ONE fused collective (call inside shard_map, after the
+        scan).  The per-iteration form reduced 7 scalars per step — at
+        real multi-process launch latencies that was most of the
+        wall-clock budget; here the cross-shard keys of the whole
+        (length,)-stacked chunk share a single pmean.  ``buffer_size``
+        rides the same f32 pmean as mean × shard count: counts are ≤
+        capacity (exact in f32) and the round() clears the /D·D
+        rounding when the shard count is not a power of two.  Values
+        are bit-identical to the per-iteration reduction — psum
+        commutes with stacking."""
+        stack = jnp.stack([
+            metrics["loss"],
+            metrics["mean_episode_return"],
+            metrics["compress_error_norm"],
+            metrics["buffer_size"].astype(jnp.float32),
+        ])
+        for ax in self._axes:
+            stack = jax.lax.pmean(stack, ax)
+        out = dict(metrics)
+        out["loss"] = stack[0]
+        out["mean_episode_return"] = stack[1]
+        out["compress_error_norm"] = stack[2]
+        out["buffer_size"] = jnp.round(stack[3] * self.n_shards).astype(
+            metrics["buffer_size"].dtype)
+        return out
 
     def _build_chunk(self, length: int) -> Callable:
         def chunk_local(replay_g, rest_g):
@@ -362,7 +415,7 @@ class ShardedExecutor(Executor):
                 return self.step(s)
 
             state, metrics = jax.lax.scan(body, state, None, length=length)
-            return self._global_state(state), metrics
+            return self._global_state(state), self._reduce_metrics(metrics)
 
         # replay (tree + storage) donated at the jit boundary, same as
         # the fused path — per-shard buffers alias through shard_map
@@ -412,7 +465,8 @@ class ShardedExecutor(Executor):
             lambda k: init_loop_state(self.agent, self.replay, self._v_reset,
                                       k, self.n_envs_local,
                                       double_buffer=self.publish_interval > 0,
-                                      ef_buffer=self.compress_pod_reduce),
+                                      ef_buffer=self.compress_pod_reduce,
+                                      overlap=self.overlap_pod_reduce),
             key_shape)
         # leading dim sharded over ALL mesh axes at once (row-major):
         # P(("pod", "data")) on the 2-D mesh, P(("data",)) ≡ P("data") 1-D
@@ -473,6 +527,8 @@ class AsyncExecutor(Executor):
         scan_chunk: int = 64,
         compress_pod_reduce: bool = False,
         intra_pod_dtype: Optional[str] = None,
+        overlap_pod_reduce: bool = False,
+        external_publish: bool = False,
     ):
         if publish_interval < 1:
             raise ValueError(
@@ -480,25 +536,38 @@ class AsyncExecutor(Executor):
                 "republish every iteration = the synchronous loop)")
         if max_staleness < 0:
             raise ValueError(f"max_staleness={max_staleness}: need ≥ 0")
+        if overlap_pod_reduce and max_staleness:
+            raise ValueError(
+                "overlap_pod_reduce is incompatible with max_staleness > "
+                "0: the bounded-staleness reduce renormalizes by a global "
+                "weight total, putting this event's cross-pod traffic "
+                "back on the critical path (runtime/learner.py)")
         if mesh is None:
             if compress_pod_reduce:
                 raise ValueError(
                     "compress_pod_reduce needs a (pod, data) mesh — the "
                     "fused path has no cross-pod reduce to compress")
+            if overlap_pod_reduce:
+                raise ValueError(
+                    "overlap_pod_reduce needs a (pod, data) mesh — the "
+                    "fused path has no cross-pod reduce to overlap")
             if intra_pod_dtype not in (None, "f32", "float32"):
                 raise ValueError(
                     "intra_pod_dtype needs a mesh — the fused path has "
                     "no cross-shard reduce to cast")
             self._impl: Executor = FusedExecutor(
                 agent, replay, env_fn, cfg, n_envs, scan_chunk=scan_chunk,
-                publish_interval=publish_interval)
+                publish_interval=publish_interval,
+                external_publish=external_publish)
         else:
             self._impl = ShardedExecutor(
                 agent, replay, env_fn, cfg, n_envs, mesh,
                 scan_chunk=scan_chunk, publish_interval=publish_interval,
-                max_staleness=max_staleness,
+                max_staleness=None if overlap_pod_reduce else max_staleness,
                 compress_pod_reduce=compress_pod_reduce,
-                intra_pod_dtype=intra_pod_dtype)
+                intra_pod_dtype=intra_pod_dtype,
+                overlap_pod_reduce=overlap_pod_reduce,
+                external_publish=external_publish)
             self.n_shards = self._impl.n_shards
             self.n_envs_local = self._impl.n_envs_local
         self.agent = agent
@@ -511,6 +580,8 @@ class AsyncExecutor(Executor):
         self.max_staleness = max_staleness
         self.compress_pod_reduce = compress_pod_reduce
         self.intra_pod_dtype = intra_pod_dtype
+        self.overlap_pod_reduce = overlap_pod_reduce
+        self.external_publish = external_publish
         self.spec = self._impl.spec
         self.step = self._impl.step
         self.schedule = self._impl.schedule
@@ -575,14 +646,17 @@ def executor_from_plan(
         ShardedReplayConfig(capacity_per_shard=capacity // plan.n_shards,
                             fanout=fanout, backend=tree_backend,
                             axis_names=axis_names), example)
+    overlap = getattr(plan, "overlap_pod_reduce", False)
     if plan.backend == "async":
         return AsyncExecutor(agent, replay, env_fn, cfg, plan.n_envs,
                              publish_interval=plan.publish_interval,
                              max_staleness=plan.max_staleness, mesh=mesh,
                              scan_chunk=scan_chunk,
                              compress_pod_reduce=plan.compress_pod_reduce,
-                             intra_pod_dtype=intra_pod_dtype)
+                             intra_pod_dtype=intra_pod_dtype,
+                             overlap_pod_reduce=overlap)
     return ShardedExecutor(agent, replay, env_fn, cfg, plan.n_envs, mesh,
                            scan_chunk=scan_chunk,
                            compress_pod_reduce=plan.compress_pod_reduce,
-                           intra_pod_dtype=intra_pod_dtype)
+                           intra_pod_dtype=intra_pod_dtype,
+                           overlap_pod_reduce=overlap)

@@ -45,6 +45,7 @@ import jax.numpy as jnp
 from repro.agents.base import Agent
 from repro.core.distributed import ShardedPrioritizedReplay
 from repro.optim import compress
+from repro.optim.collectives import fused_tree_reduce
 
 Pytree = Any
 
@@ -57,43 +58,38 @@ def pmean_gradients(grads: Pytree, axes: Tuple[str, ...],
     onto the wire before the reduce and back to its original dtype
     after — the bf16 intra-pod option, halving the reduce payload at the
     cost of mantissa bits (the injected error is surfaced per step as
-    the ``compress_error_norm`` metric)."""
+    the ``compress_error_norm`` metric).  The whole pytree crosses the
+    wire as ONE fused collective per axis (``optim/collectives.py``) —
+    bit-exact against the per-leaf form, but a single launch on a real
+    multi-process transport."""
     cast = dtype is not None and bool(axes)   # no axes → nothing on a wire
-
-    def avg(g):
-        out = g.astype(dtype) if cast else g
-        for ax in axes:
-            out = jax.lax.pmean(out, ax)
-        return out.astype(g.dtype) if cast else out
-    return jax.tree.map(avg, grads)
+    wire = jax.tree.map(lambda g: g.astype(dtype), grads) if cast else grads
+    red = fused_tree_reduce(wire, axes, jax.lax.pmean)
+    if cast:
+        red = jax.tree.map(lambda o, g: o.astype(g.dtype), red, grads)
+    return red
 
 
 def _pmean_inexact(tree: Pytree, axes: Tuple[str, ...]) -> Pytree:
     """pmean only float leaves (opt-state step counters stay int)."""
-    def avg(x):
-        if not jnp.issubdtype(x.dtype, jnp.inexact):
-            return x
-        out = x
-        for ax in axes:
-            out = jax.lax.pmean(out, ax)
-        return out
-    return jax.tree.map(avg, tree)
+    return fused_tree_reduce(
+        tree, axes, jax.lax.pmean,
+        select=lambda x: jnp.issubdtype(x.dtype, jnp.inexact))
 
 
 def _weighted_psum(tree: Pytree, scale: jax.Array, axes: Tuple[str, ...],
                    dtype=None) -> Pytree:
     """psum of ``leaf * scale`` over ``axes`` (scale is a per-shard
-    scalar); ``dtype`` casts onto the wire like ``pmean_gradients``."""
+    scalar); ``dtype`` casts onto the wire like ``pmean_gradients``, and
+    the reduce is fused the same way (one launch per axis)."""
     cast = dtype is not None and bool(axes)
-
-    def red(x):
-        out = x * scale
-        if cast:
-            out = out.astype(dtype)
-        for ax in axes:
-            out = jax.lax.psum(out, ax)
-        return out.astype(x.dtype) if cast else out
-    return jax.tree.map(red, tree)
+    scaled = jax.tree.map(lambda x: x * scale, tree)
+    if cast:
+        scaled = jax.tree.map(lambda x: x.astype(dtype), scaled)
+    red = fused_tree_reduce(scaled, axes, jax.lax.psum)
+    if cast:
+        red = jax.tree.map(lambda o, x: o.astype(x.dtype), red, tree)
+    return red
 
 
 def _renormalize(w: jax.Array, total: jax.Array) -> jax.Array:
@@ -119,6 +115,7 @@ def make_grad_reducer(
     max_staleness: Optional[int] = None,
     compress_axis: Optional[str] = None,
     intra_pod_dtype: Optional[str] = None,
+    overlap: bool = False,
 ):
     """Build the cross-shard gradient reduce used by ``sharded_learn``:
     ``reduce_grads(grads, age, ef) → (reduced, ef')`` over mesh ``axes``
@@ -130,11 +127,45 @@ def make_grad_reducer(
     ``intra_pod_dtype='bf16'`` halves the wire payload of the fast-axis
     leg (all axes when there is no compressed pod leg) by casting each
     leaf to bf16 around the reduce.
+
+    ``overlap=True`` double-buffers the compressed pod leg (DESIGN.md
+    §10): learn event *i* applies this event's intra-pod partial plus
+    the cross-pod *correction* computed at event *i−1*,
+
+        applied_i = p_i + (pm_{i−1} − p_{i−1})
+
+    so the slow ``compressed_pmean`` issued at event *i* is consumed
+    only at event *i+1* — its result leaves the critical path and the
+    collective runs concurrently with the next actor/learn chunk (XLA /
+    the gloo transport overlap it with compute because nothing in this
+    step's program depends on it).  The carried state becomes
+    ``{"ef": …, "prev_mean": …, "prev_partial": …}``: the quantizer's EF
+    buffer plus the previous event's pod mean and intra-pod partial.
+    The update is computed as ``pm_{i−1} + (p_i − p_{i−1})`` — the same
+    value, associated so that a constant gradient stream yields the
+    barrier reduce's previous-event output *bit-exactly* from the second
+    event on (the delta is exactly zero); for varying streams the
+    cumulative difference telescopes to ``p_T − pm_T`` — one gradient's
+    pod disagreement, never compounding (tests/test_distributed.py).
+    Incompatible with ``max_staleness``: the staleness-weighted partial
+    sums renormalize by a *global* total, which would need this event's
+    cross-pod traffic on the critical path again.
     """
     if compress_axis is not None and compress_axis not in axes:
         raise ValueError(
             f"compress_axis={compress_axis!r} is not one of the mesh "
             f"axes {axes}")
+    if overlap and compress_axis is None:
+        raise ValueError(
+            "overlap=True needs compress_axis: the double buffer defers "
+            "the compressed cross-pod leg — with no pod leg there is "
+            "nothing to overlap (the intra-pod pmean stays synchronous)")
+    if overlap and max_staleness is not None:
+        raise ValueError(
+            "overlap=True is incompatible with max_staleness: the "
+            "bounded-staleness reduce renormalizes by a global weight "
+            "total, which puts this event's cross-pod traffic back on "
+            "the critical path — pick one of the two staleness forms")
     fast_axes = tuple(ax for ax in axes if ax != compress_axis)
     wire_dtype = resolve_reduce_dtype(intra_pod_dtype)
 
@@ -144,6 +175,21 @@ def make_grad_reducer(
                 "compress_axis is set but no error-feedback buffer was "
                 "passed: thread LoopState.ef_error through the learn fn "
                 "(init_loop_state(..., ef_buffer=True) materializes it)")
+        if overlap:
+            # double-buffered pod leg: apply the one-event-stale cross-
+            # pod mean corrected by the fresh local delta, issue this
+            # event's compressed mean for the next event.  pm + (p − p')
+            # rather than p + (pm − p'): for an unchanged partial the
+            # delta is exactly 0.0 and the applied update is bitwise the
+            # previous barrier output.
+            partial = pmean_gradients(grads, fast_axes, dtype=wire_dtype)
+            pod_mean, new_ef = compress.compressed_pmean(
+                partial, ef["ef"], compress_axis)
+            applied = jax.tree.map(
+                lambda pm, p, pp: pm + (p - pp),
+                ef["prev_mean"], partial, ef["prev_partial"])
+            return applied, {"ef": new_ef, "prev_mean": pod_mean,
+                             "prev_partial": partial}
         if max_staleness is None or age is None:
             if compress_axis is None:
                 return pmean_gradients(grads, axes, dtype=wire_dtype), ef
@@ -190,6 +236,7 @@ def make_sharded_learn(
     compress_axis: Optional[str] = None,
     intra_pod_dtype: Optional[str] = None,
     lazy_writes: bool = False,
+    overlap: bool = False,
 ):
     """Per-shard learner call: local PER sample → local grads → reduce →
     update (paper §V-B parameter-server adaptation).
@@ -233,7 +280,15 @@ def make_sharded_learn(
         compressions are active);
       * priority write-back stays local (write-after-read, §IV-D3);
         ``lazy_writes=True`` defers its propagation to the runtime
-        loop's per-iteration flush (DESIGN.md §9).
+        loop's per-iteration flush (DESIGN.md §9);
+      * ``overlap=True`` (requires ``compress_axis``) double-buffers the
+        compressed pod leg — this learn applies the previous learn's
+        cross-pod correction while issuing its own off the critical path
+        (``make_grad_reducer``, DESIGN.md §10).  ``ef`` then carries the
+        ``{"ef", "prev_mean", "prev_partial"}`` triple
+        (``init_loop_state(..., overlap=True)``); only the ``"ef"``
+        entry feeds the ``compress_error_norm`` metric, matching the
+        barrier reduce.
     """
     axes = replay.config.axis_names
     if compress_axis is not None and (agent.grads is None
@@ -257,7 +312,8 @@ def make_sharded_learn(
     cast_active = wire_dtype is not None and bool(fast_axes)
     reduce_grads = make_grad_reducer(axes, max_staleness=max_staleness,
                                      compress_axis=compress_axis,
-                                     intra_pod_dtype=intra_pod_dtype)
+                                     intra_pod_dtype=intra_pod_dtype,
+                                     overlap=overlap)
 
     def sharded_learn(agent_state, replay_state, rng, age=None, ef=None):
         idx, items, is_w = replay.sample(replay_state, rng, batch_per_shard, beta)
@@ -272,7 +328,10 @@ def make_sharded_learn(
             grads, ef = reduce_grads(grads, age, ef)
             if jax.tree.leaves(ef):
                 # residual the int8 pod leg carries into the next step
-                err_norm = err_norm + compress.l2_norm(ef)
+                # (overlap mode also carries the stale correction — only
+                # the quantizer's EF half is compression error)
+                err_norm = err_norm + compress.l2_norm(
+                    ef["ef"] if overlap else ef)
             agent_state, metrics, td = agent.apply_grads(agent_state, grads, aux)
         else:
             agent_state, metrics, td = agent.learn(agent_state, items, is_w)

@@ -223,6 +223,7 @@ def make_step(
     mean_across: Optional[Callable] = None,
     sum_across: Optional[Callable] = None,
     publish_interval: int = 0,
+    external_publish: bool = False,
 ):
     """Compose actor + learner programs into one jit-able parallel_step.
 
@@ -245,7 +246,21 @@ def make_step(
     ``P=1`` every shard republishes every iteration and the async loop is
     the synchronous one (asserted trajectory-exact in
     tests/test_async_executor.py).
+
+    ``external_publish=True`` (wall-clock mode, DESIGN.md §10) keeps the
+    async acting-copy *reads* but removes the in-program republish: the
+    host runtime owns the publish, performing a real device→host
+    parameter transfer between chunks and rewriting
+    ``actor_params``/``params_age`` on the carried state
+    (``launch/multiprocess.py``).  ``params_age`` then just increments
+    every iteration so the staleness-weighted reduce still sees honest
+    ages between host publishes.
     """
+    if external_publish and not publish_interval:
+        raise ValueError(
+            "external_publish=True needs publish_interval ≥ 1: the host "
+            "publish rewrites the async acting copy, which only exists "
+            "on the double-buffered (publish_interval > 0) loop")
     schedule = schedule or RatioSchedule.from_config(cfg, n_envs)
     actor_step = make_actor_step(agent, v_step, n_envs)
     learn_fn = learn_fn or make_learner_step(agent, replay, cfg)
@@ -319,8 +334,13 @@ def make_step(
                                             lazy=lazy)
 
         # 7. async publish: refresh this shard's acting copy from the
-        #    fresh learner params on its (staggered) publish tick
-        if publish_interval:
+        #    fresh learner params on its (staggered) publish tick —
+        #    unless the host runtime owns the publish (wall-clock mode:
+        #    real D2H transfer between chunks, age just keeps counting)
+        if publish_interval and external_publish:
+            actor_params = state.actor_params
+            params_age = state.params_age + 1
+        elif publish_interval:
             publish = (it + 1 + sid) % publish_interval == 0
             actor_params = jax.tree.map(
                 lambda fresh, held: jnp.where(publish, fresh, held),
@@ -380,6 +400,7 @@ def init_loop_state(
     shard_id: Union[int, jax.Array] = 0,
     double_buffer: bool = False,
     ef_buffer: bool = False,
+    overlap: bool = False,
 ) -> LoopState:
     """Initial state.  ``shard_id`` decorrelates per-shard env resets while
     agent params (from the unfolded key) stay replicated across shards.
@@ -387,9 +408,13 @@ def init_loop_state(
     0, i.e. identical to the fresh params); ``ef_buffer`` fills the
     zero-initialized error-feedback buffer of the compressed cross-pod
     reduce (the gradient pytree of agents with the grads/apply_grads
-    split matches ``state.params``, so params is the template).  The
-    synchronous/uncompressed executors leave these fields as empty
-    pytrees — no memory overhead."""
+    split matches ``state.params``, so params is the template);
+    ``overlap`` widens it to the double-buffered reduce's ``{"ef",
+    "prev_mean", "prev_partial"}`` triple — the quantizer residual plus
+    the zero-initialized previous-event pod mean and intra-pod partial
+    (``make_grad_reducer(..., overlap=True)``).  The synchronous/
+    uncompressed executors leave these fields as empty pytrees — no
+    memory overhead."""
     k1, k2, k3 = jax.random.split(key, 3)
     env_state, obs = v_reset(jax.random.fold_in(k1, shard_id))
     agent_state = agent.init(k2)
@@ -406,7 +431,10 @@ def init_loop_state(
         actor_params=(agent.params_for_acting(agent_state)
                       if double_buffer else ()),
         params_age=jnp.zeros((), jnp.int32) if double_buffer else (),
-        ef_error=(compress.init_error(agent_state.params)
+        ef_error=(({"ef": compress.init_error(agent_state.params),
+                    "prev_mean": compress.init_error(agent_state.params),
+                    "prev_partial": compress.init_error(agent_state.params)}
+                   if overlap else compress.init_error(agent_state.params))
                   if ef_buffer else ()),
     )
 

@@ -21,6 +21,11 @@ of actor/learner process counts (PAPERS.md):
   * the Eq. 5 lane split within the chosen config uses
     ``dse.solve`` on the host actor/learner curves, hull-clamped
     (``dse.interp_hull``) so no allocation claims unmeasured throughput;
+  * a config measured both emulated (forced host devices in one
+    process) and wall-clock (the real multi-process gang points of the
+    fig10 ``--wall-clock`` arm, ``backend="wallclock"``) keeps only the
+    wall-clock measurement — emulated devices time-slice one process,
+    so the gang number is ground truth for the same config;
   * candidates are scored by realized env-steps/s — a single unit across
     both json files, enforced by ``benchmarks/schema.py`` — subject to
     feasibility: a config is only eligible if it was actually measured
@@ -82,6 +87,7 @@ class PlannedConfig:
     publish_interval: int = 0          # 0 = synchronous
     max_staleness: int = 0
     compress_pod_reduce: bool = False
+    overlap_pod_reduce: bool = False   # double-buffered compressed pod leg
     n_envs: int = 8
     update_interval: int = 1
     x_actor: int = 0                   # Eq. 5 lanes; 0 = not lane-solved
@@ -105,6 +111,10 @@ class PlannedConfig:
         if self.compress_pod_reduce and self.n_pods < 2:
             raise ValueError("compress_pod_reduce needs n_pods ≥ 2 (the "
                              "compressed leg crosses the pod axis)")
+        if self.overlap_pod_reduce and not self.compress_pod_reduce:
+            raise ValueError("overlap_pod_reduce needs compress_pod_reduce "
+                             "(the double buffer defers the compressed "
+                             "cross-pod leg — runtime/learner.py)")
         if self.n_shards > 1 and self.n_envs % self.n_shards:
             raise ValueError(f"n_envs={self.n_envs} not divisible by "
                              f"{self.n_shards} shards")
@@ -138,6 +148,8 @@ class PlannedConfig:
                  f"max staleness {self.max_staleness}"
                  if self.backend == "async" else "")
         comp = ", int8-EF cross-pod reduce" if self.compress_pod_reduce else ""
+        if self.overlap_pod_reduce:
+            comp += " (overlapped)"
         return (f"{self.backend} executor ({mesh}{knobs}{comp}), "
                 f"{self.n_envs} envs, update_interval "
                 f"{self.update_interval}, predicted "
@@ -151,7 +163,13 @@ class PlannedConfig:
 @dataclasses.dataclass(frozen=True)
 class Candidate:
     """One measured runtime configuration (a point of the config-level
-    profiled hull — the planner only ever selects measured configs)."""
+    profiled hull — the planner only ever selects measured configs).
+
+    ``wallclock`` marks a point measured on a real multi-process gang
+    (launch/multiprocess.py) rather than emulated host devices in one
+    process; ``update_interval`` is the ratio the point was measured at
+    (``None`` = the sweep default, matching any requested ratio —
+    legacy emulated points don't carry the field)."""
 
     backend: str
     n_pods: int
@@ -161,6 +179,19 @@ class Candidate:
     n_envs: int
     env_steps_per_s: float
     source: str
+    overlap: bool = False
+    wallclock: bool = False
+    update_interval: Optional[int] = None
+
+    @property
+    def config_key(self) -> Tuple:
+        """The runtime configuration a point measured — everything but
+        the measurement itself and how it was measured.  Two points with
+        one config_key are the same config measured two ways (emulated
+        vs wall-clock), and the planner keeps the wall-clock one."""
+        return (self.backend, self.n_pods, self.n_data,
+                self.publish_interval, self.compress, self.overlap,
+                self.n_envs, self.update_interval)
 
 
 def candidates_from_points(fig9_points: Iterable[dict] = (),
@@ -198,6 +229,29 @@ def candidates_from_points(fig9_points: Iterable[dict] = (),
                                  0, bool(p.get("compressed", False)),
                                  int(p.get("n_envs", default_n_envs)),
                                  float(p["env_steps_per_s"]), "fig10"))
+        elif backend == "wallclock":
+            # real multi-process gang measurement (fig10 --wall-clock
+            # arm): the executable config drops the process count — a
+            # launch-time detail — but keeps the reduce shape, and the
+            # measured update_interval rides along so the ratio filter
+            # in `feasible` never scores it against a different workload
+            pods = max(1, int(p.get("pods", 1)))
+            shards = int(p.get("shards", 1))
+            fused = pods == 1 and shards <= 1
+            publish = int(p.get("publish_interval", 0))
+            backend_name = ("async" if publish
+                            else "fused" if fused else "sharded")
+            out.append(Candidate(
+                backend_name, pods,
+                0 if fused else shards,
+                publish,
+                bool(p.get("compressed", False)),
+                int(p.get("n_envs", default_n_envs)),
+                float(p["env_steps_per_s"]), "fig10-wallclock",
+                overlap=bool(p.get("overlapped", False)),
+                wallclock=True,
+                update_interval=(int(p["update_interval"])
+                                 if "update_interval" in p else None)))
     return out
 
 
@@ -251,6 +305,12 @@ def feasible(cand: Candidate, *, update_interval: int, max_staleness: int,
     if max_devices is not None and devices > max_devices:
         return False
     if batch_size % shards:
+        return False
+    if (cand.update_interval is not None
+            and cand.update_interval != update_interval):
+        # a point measured at a different collection/consumption ratio
+        # is a different workload — its env-steps/s is not comparable
+        # (legacy points without the field match any requested ratio)
         return False
     if cand.backend == "async":
         if cand.publish_interval < 1:
@@ -360,6 +420,21 @@ def plan(
           if feasible(c, update_interval=update_interval,
                       max_staleness=max_staleness, max_devices=max_devices,
                       batch_size=batch_size)]
+    # a config measured both emulated and on a real gang keeps only the
+    # wall-clock measurement: emulated host devices time-slice one
+    # process, so the gang number is the ground truth for the same
+    # configuration (fig10 --wall-clock arm, DESIGN.md §10).  Dedup runs
+    # *after* the ratio filter and keys on the config minus
+    # update_interval: every survivor is either the requested ratio or a
+    # legacy point with no recorded ratio, so a wall-clock survivor
+    # shadows exactly the emulated measurement of its own config.
+    by_config: Dict[Tuple, Candidate] = {}
+    for c in ok:
+        key = c.config_key[:-1]
+        held = by_config.get(key)
+        if held is None or (c.wallclock and not held.wallclock):
+            by_config[key] = c
+    ok = list(by_config.values())
     if not ok:
         if lanes:
             # curve-only fallback: the fused single-program config at the
@@ -385,9 +460,12 @@ def plan(
         n_pods=best.n_pods,
         n_data=best.n_data,
         publish_interval=best.publish_interval,
+        # the overlapped reduce is incompatible with bounded staleness
+        # (runtime/learner.py) — an overlapped winner pins it to 0
         max_staleness=(max_staleness if best.backend == "async"
-                       and best.n_data else 0),
+                       and best.n_data and not best.overlap else 0),
         compress_pod_reduce=best.compress,
+        overlap_pod_reduce=best.overlap,
         n_envs=_resolve_n_envs(best),
         update_interval=update_interval,
         x_actor=x_actor,

@@ -56,6 +56,19 @@ def test_crash_safe_tmp_not_visible(tmp_path):
     assert step == 5
 
 
+def test_resave_same_step_replaces_committed_checkpoint(tmp_path):
+    # a restart that re-saves at its resume step must replace the old
+    # commit, not crash on rename-over-nonempty-dir (POSIX EEXIST/ENOTEMPTY)
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    mgr.save(7, tree(0))
+    mgr.save(7, tree(1))
+    assert mgr.all_steps() == [7]
+    _, restored = mgr.restore_latest(jax.tree.map(jnp.zeros_like, tree()))
+    np.testing.assert_array_equal(
+        np.asarray(restored["params"]["w"]),
+        np.asarray(tree(1)["params"]["w"]))
+
+
 def test_manifest_mismatch_rejected(tmp_path):
     mgr = CheckpointManager(str(tmp_path))
     mgr.save(1, tree())

@@ -1,5 +1,7 @@
 """Distributed pieces that run on host: compressed EF-psum numerics, DSE
-solver, staleness weights, sharded-replay stratified weights math."""
+solver, staleness weights, sharded-replay stratified weights math, the
+fused one-launch tree collective, the double-buffered (overlapped)
+cross-pod reduce — plus a real 2-process gloo gang equivalence check."""
 
 import jax
 import jax.numpy as jnp
@@ -7,6 +9,7 @@ import numpy as np
 import pytest
 
 from repro.optim import compress
+from repro.optim.collectives import fused_tree_reduce
 from repro.runtime import dse
 from repro.runtime.learner import make_grad_reducer, staleness_weights
 
@@ -291,6 +294,142 @@ def test_grad_reducer_requires_ef_buffer_when_compressing():
         reducer({"w": jnp.zeros((4,))}, None, ())
     with pytest.raises(ValueError, match="axes"):
         make_grad_reducer(("data",), compress_axis="pod")
+
+
+def test_fused_tree_reduce_bit_exact_vs_per_leaf():
+    """The one-launch-per-dtype fused collective (optim/collectives.py)
+    must be *bit-exact* against the per-leaf reduce it replaces:
+    elementwise pmean/psum commute with concatenation."""
+    rng = np.random.default_rng(7)
+    tree = {
+        "w": jnp.asarray(rng.normal(size=(2, 3, 5)).astype(np.float32)),
+        "b": jnp.asarray(rng.normal(size=(2, 7)).astype(np.float32)),
+        "h": jnp.asarray(rng.normal(size=(2, 4)).astype(np.float16)),
+        "step": jnp.asarray(rng.integers(0, 9, size=(2,)), jnp.int32),
+    }
+
+    def fused(t):
+        return fused_tree_reduce(t, ("data",), jax.lax.pmean)
+
+    def per_leaf(t):
+        return jax.tree.map(lambda x: jax.lax.pmean(x, "data"), t)
+
+    out_f = jax.vmap(fused, axis_name="data")(tree)
+    out_p = jax.vmap(per_leaf, axis_name="data")(tree)
+    for k in tree:
+        # dtype tracks the per-leaf form (pmean of ints promotes to float
+        # in both; f16/f32 stay themselves)
+        assert out_f[k].dtype == out_p[k].dtype
+        np.testing.assert_array_equal(np.asarray(out_f[k]),
+                                      np.asarray(out_p[k]))
+    # psum form too (the staleness-weighted path)
+    sum_f = jax.vmap(lambda t: fused_tree_reduce(t, ("data",), jax.lax.psum),
+                     axis_name="data")(tree)
+    sum_p = jax.vmap(lambda t: jax.tree.map(
+        lambda x: jax.lax.psum(x, "data"), t), axis_name="data")(tree)
+    for k in tree:
+        np.testing.assert_array_equal(np.asarray(sum_f[k]),
+                                      np.asarray(sum_p[k]))
+
+
+def test_fused_tree_reduce_select_passes_unselected_through():
+    """``select`` (the inexact-only pmean of the parameter-average
+    fallback) must leave unselected leaves untouched — int opt-state
+    step counters may not cross the wire."""
+    tree = {"p": jnp.ones((2, 4)), "n": jnp.arange(2, dtype=jnp.int32)}
+
+    def reduce_inexact(t):
+        return fused_tree_reduce(
+            t, ("data",), jax.lax.pmean,
+            select=lambda x: jnp.issubdtype(x.dtype, jnp.inexact))
+
+    out = jax.vmap(reduce_inexact, axis_name="data")(tree)
+    np.testing.assert_array_equal(np.asarray(out["p"]), np.ones((2, 4)))
+    np.testing.assert_array_equal(np.asarray(out["n"]),
+                                  np.arange(2, dtype=np.int32))
+    # no axes / empty tree: identity
+    same = fused_tree_reduce(tree, (), jax.lax.pmean)
+    assert same is tree
+    assert fused_tree_reduce({}, ("data",), jax.lax.pmean) == {}
+
+
+def _drive_pod_reducer(reducer, stream, ef0):
+    """Run a ("pod",) reducer over a list of (P, ...) gradient stacks
+    with the real collective via vmap, returning per-event outputs."""
+    def step(g, e):
+        red, e2 = reducer({"w": g}, None, jax.tree.map(lambda x: x, e))
+        return red["w"], e2
+    outs = []
+    ef = ef0
+    for g in stream:
+        out, ef = jax.vmap(step, axis_name="pod")(g, ef)
+        outs.append(out)
+    return outs, ef
+
+
+def test_overlapped_reduce_shift_identity_on_constant_stream():
+    """Double-buffered pod leg (DESIGN.md §10): on a constant gradient
+    stream the overlapped reduce's event t must equal the barrier
+    reduce's event t−1 *bit-exactly* — the local delta ``p_t − p_{t−1}``
+    is exactly zero, so the applied update is the previous compressed
+    pod mean unchanged."""
+    rng = np.random.default_rng(5)
+    g = jnp.asarray(rng.normal(size=(2, 8, 8)).astype(np.float32) * 1e-2)
+    z = jnp.zeros_like(g)
+    barrier = make_grad_reducer(("pod",), compress_axis="pod")
+    overlap = make_grad_reducer(("pod",), compress_axis="pod", overlap=True)
+    stream = [g] * 6
+    b_outs, _ = _drive_pod_reducer(barrier, stream, {"w": z})
+    o_outs, _ = _drive_pod_reducer(
+        overlap, stream,
+        {"ef": {"w": z}, "prev_mean": {"w": z}, "prev_partial": {"w": z}})
+    for t in range(1, 6):
+        np.testing.assert_array_equal(np.asarray(o_outs[t]),
+                                      np.asarray(b_outs[t - 1]))
+
+
+def test_overlapped_reduce_telescopes_on_varying_stream():
+    """On a varying stream the cumulative overlapped−barrier difference
+    telescopes to ``p_T − pm_T`` — one event's pod disagreement, never
+    compounding with T."""
+    rng = np.random.default_rng(6)
+    T = 8
+    gs = jnp.asarray(rng.normal(size=(T, 2, 8, 8)).astype(np.float32) * 1e-2)
+    z = jnp.zeros_like(gs[0])
+    barrier = make_grad_reducer(("pod",), compress_axis="pod")
+    overlap = make_grad_reducer(("pod",), compress_axis="pod", overlap=True)
+    stream = [gs[t] for t in range(T)]
+    b_outs, _ = _drive_pod_reducer(barrier, stream, {"w": z})
+    o_outs, _ = _drive_pod_reducer(
+        overlap, stream,
+        {"ef": {"w": z}, "prev_mean": {"w": z}, "prev_partial": {"w": z}})
+    cum = sum(np.asarray(o) for o in o_outs) - sum(
+        np.asarray(b) for b in b_outs)
+    # n_data = 1 ⇒ the intra-pod partial is each pod's local gradient
+    expect = np.asarray(gs[-1]) - np.asarray(b_outs[-1])
+    np.testing.assert_allclose(cum, expect, atol=1e-6)
+
+
+def test_overlap_requires_compress_axis_and_no_staleness():
+    with pytest.raises(ValueError, match="overlap"):
+        make_grad_reducer(("data",), overlap=True)
+    with pytest.raises(ValueError, match="max_staleness"):
+        make_grad_reducer(("pod",), compress_axis="pod", overlap=True,
+                          max_staleness=2)
+
+
+def test_two_process_gang_overlapped_equals_barrier():
+    """The same shift/telescoping contracts over a *real* 2-process gloo
+    gang (launch/multiprocess.py --mode equiv): each pod lives in its
+    own OS process and the compressed reduce crosses a process
+    boundary."""
+    from repro.launch import multiprocess as mp
+
+    out = mp.launch(["--mode", "equiv", "--seed", "0"], n_procs=2,
+                    timeout_s=600.0)
+    kv = mp.parse_kv(out[0])
+    assert float(kv["SHIFT_MAX_ABS_ERR"]) == 0.0
+    assert float(kv["TELESCOPE_MAX_ABS_ERR"]) < 1e-6
 
 
 def test_staleness_weights_drop_stragglers():

@@ -190,6 +190,51 @@ def test_plan_lane_split_rides_along():
     assert pc.n_envs == 16 and pc.n_envs % 4 == 0
 
 
+def _wallclock_point(shards=2, pods=1, steps=500.0, n_envs=16, ui=1,
+                     overlapped=False, compressed=False, n_procs=2):
+    return {"backend": "wallclock", "shards": shards, "pods": pods,
+            "compressed": compressed, "overlapped": overlapped,
+            "n_procs": n_procs, "update_interval": ui, "n_envs": n_envs,
+            "env_steps_per_s": steps}
+
+
+def test_plan_prefers_wallclock_over_emulated_same_config():
+    """A config measured both emulated and on a real multi-process gang
+    keeps the gang number: emulated host devices time-slice one process,
+    so the inflated emulated figure must not win the ranking."""
+    emu_2shard = _fig10_point(2, steps=9000.0)     # emulated, inflated
+    wc_2shard = _wallclock_point(shards=2, steps=400.0, ui=1)
+    emu_4shard = _fig10_point(4, steps=800.0)
+    pc = planner.plan([], [emu_2shard, wc_2shard, emu_4shard])
+    # the gang's 400 replaces the emulated 9000 for the 2-shard config,
+    # so the honestly-slower 4-shard emulated point wins
+    assert (pc.backend, pc.n_data) == ("sharded", 4)
+    assert pc.predicted_env_steps_per_s == 800.0
+    # without the wall-clock measurement the emulated 2-shard wins
+    pc = planner.plan([], [emu_2shard, emu_4shard])
+    assert (pc.n_data, pc.predicted_env_steps_per_s) == (2, 9000.0)
+
+
+def test_plan_wallclock_ratio_filter_and_overlap_flows_through():
+    """A wall-clock point carries the update_interval it was measured at
+    — a different requested ratio is a different workload, so the point
+    is filtered; the overlapped-reduce flag flows into the plan (with
+    max_staleness pinned to 0: overlap is incompatible with the
+    bounded-staleness reduce)."""
+    wc = _wallclock_point(shards=1, pods=2, steps=900.0, ui=8,
+                          overlapped=True, compressed=True)
+    slow = _fig10_point(2, steps=100.0)
+    pc = planner.plan([], [wc, slow], update_interval=8, max_staleness=2)
+    assert (pc.n_pods, pc.n_data) == (2, 1)
+    assert pc.compress_pod_reduce and pc.overlap_pod_reduce
+    assert pc.max_staleness == 0
+    assert pc.source.endswith("fig10-wallclock")
+    # at the default ratio the ui=8 gang point is a different workload
+    pc = planner.plan([], [wc, slow], update_interval=1)
+    assert (pc.backend, pc.n_data) == ("sharded", 2)
+    assert not pc.overlap_pod_reduce
+
+
 def test_interp_hull_clamps_to_measured_range():
     curve = {2: 200.0, 4: 400.0}
     assert dse.interp_hull(curve, 1) == 200.0     # below the hull → edge
