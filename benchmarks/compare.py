@@ -34,13 +34,18 @@ from typing import Dict, Iterable, List, Tuple
 # slowdowns (a backend falling off a cliff), not jitter.
 THRESHOLD = 0.30
 
-BENCH_FILES = ("BENCH_fig9.json", "BENCH_fig10.json", "BENCH_replay.json")
+BENCH_FILES = ("BENCH_fig9.json", "BENCH_fig10.json", "BENCH_replay.json",
+               "BENCH_serve.json")
 
 # fields that identify a point (everything but the measurements); the
 # median-of-N dispersion record (repeats/rel_spread) is measurement-side
-# so old baselines without it still match
+# so old baselines without it still match.  samples_per_s and
+# realized_spi are the serve figure's secondary measurements — the gate
+# compares its primary metric (inserts_per_s) only.
 _MEASUREMENT_FIELDS = {"env_steps_per_s", "replay_ops_per_s",
-                       "speedup_vs_sync", "repeats", "rel_spread"}
+                       "inserts_per_s", "speedup_vs_sync",
+                       "repeats", "rel_spread",
+                       "samples_per_s", "realized_spi"}
 
 
 def point_key(point: dict) -> Tuple:

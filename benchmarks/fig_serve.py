@@ -1,0 +1,222 @@
+"""Replay-service throughput: sustained insert/sample rates vs writer
+count (DESIGN.md §11 — the service-shape inputs of the runtime planner).
+
+The decoupled runtime's capacity question is not "how fast is one
+transaction" (benchmarks/replay_micro.py answers that) but "what insert
+rate can the *service* sustain for N concurrent writers while the rate
+limiter holds the sample ratio" — the quantity
+``planner.select_replay_service`` needs to size ``n_replay_shards`` for
+a measured executor.  Each point drives an in-process ``ReplayService``
+(the same shard ops and lock discipline the TCP server dispatches into;
+the wire itself is exercised by the replay-service-smoke CI gang) with
+N writer threads appending rollout-sized chunks against one greedy
+sampler thread, under the loose gang-band ``RateLimiter`` — so the two
+reported rates are *coupled* by flow control exactly as in production:
+
+    samples_per_s ≈ spi · inserts_per_s        (realized_spi recorded)
+
+Metric: ``inserts_per_s`` (primary, gated by benchmarks/compare.py) with
+``samples_per_s``/``realized_spi`` as measurement-side companions;
+median-of-N with recorded dispersion (benchmarks/timing.py).
+``--emit-json DIR`` writes ``BENCH_serve.json`` (figure "serve",
+benchmarks/schema.py); the committed repo-root baseline rides the same
+perf gate as the other figures.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import threading
+import time
+
+import numpy as np
+
+from benchmarks.timing import REPEATS
+
+SERVE_JSON = "BENCH_serve.json"
+
+OBS_DIM = 4           # cartpole-shaped transition payload
+
+
+def _example():
+    import jax.numpy as jnp
+
+    return {
+        "obs": jnp.zeros((OBS_DIM,), jnp.float32),
+        "action": jnp.zeros((), jnp.int32),
+        "reward": jnp.zeros(()),
+        "next_obs": jnp.zeros((OBS_DIM,), jnp.float32),
+        "done": jnp.zeros(()),
+    }
+
+
+def _items(n: int, seed: int):
+    rng = np.random.RandomState(seed)
+    return {
+        "obs": rng.randn(n, OBS_DIM).astype(np.float32),
+        "action": rng.randint(0, 2, size=(n,)).astype(np.int32),
+        "reward": rng.randn(n).astype(np.float32),
+        "next_obs": rng.randn(n, OBS_DIM).astype(np.float32),
+        "done": np.zeros((n,), np.float32),
+    }
+
+
+def _build_service(n_shards: int, writers: int, spi: float, batch: int,
+                   insert_chunk: int, capacity_per_shard: int):
+    from repro.service import (RateLimiter, ReplayService,
+                               ReplayServiceConfig)
+
+    limiter = RateLimiter(
+        samples_per_insert=spi,
+        min_size_to_sample=batch,
+        # the loose gang band: absorb every writer landing a full chunk
+        # inside one admission window (launch/multiprocess.py sizes the
+        # real gang's server identically)
+        error_buffer=2.0 * max(float(batch), spi * insert_chunk * writers))
+    service = ReplayService(
+        ReplayServiceConfig(capacity_per_shard=capacity_per_shard,
+                            n_shards=n_shards, fanout=128,
+                            router="round_robin"),
+        _example(), rate_limiter=limiter)
+    return service, limiter
+
+
+def _drive(service, limiter, writers: int, chunks_per_writer: int,
+           insert_chunk: int, batch: int) -> float:
+    """One measured run: N writer threads push their chunk budget through
+    rate-limited appends while a greedy sampler drains sample+priority
+    round trips; returns the wall time start→drained."""
+    done = threading.Event()
+    errors = []
+
+    def writer(wid: int):
+        try:
+            for c in range(chunks_per_writer):
+                service.append(f"w{wid}", _items(insert_chunk, wid * 7919 + c),
+                               timeout=120.0)
+        except Exception as e:  # noqa: BLE001 — surface on the main thread
+            errors.append(e)
+            done.set()
+
+    def sampler():
+        while True:
+            try:
+                out = service.sample(batch, timeout=0.25)
+            except TimeoutError:
+                if done.is_set():
+                    return
+                continue
+            except Exception as e:  # noqa: BLE001
+                errors.append(e)
+                return
+            service.update_priorities(out["sample_id"],
+                                      np.ones((batch,), np.float32))
+
+    threads = [threading.Thread(target=writer, args=(w,))
+               for w in range(writers)]
+    st = threading.Thread(target=sampler)
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    st.start()
+    for t in threads:
+        t.join()
+    done.set()
+    st.join()
+    dt = time.perf_counter() - t0
+    if errors:
+        raise errors[0]
+    return dt
+
+
+def serve_points(writer_counts=(1, 2, 4), shard_counts=(1, 2),
+                 spi: float = 8.0, batch: int = 64, insert_chunk: int = 64,
+                 chunks_per_writer: int = 16, repeats: int = REPEATS):
+    """The committed sweep: (writers × shards) sustained-rate points.
+    Each (writers, shards) cell builds one service, warms the jitted
+    shard ops with a throwaway run, then measures ``repeats`` runs and
+    keeps the median-``inserts_per_s`` run's coupled numbers."""
+    points = []
+    for n_shards in shard_counts:
+        if batch % n_shards:
+            continue
+        for writers in writer_counts:
+            service, limiter = _build_service(
+                n_shards, writers, spi, batch, insert_chunk,
+                capacity_per_shard=max(4096, (writers * chunks_per_writer
+                                              * insert_chunk * (repeats + 2))
+                                       // n_shards))
+            # warmup: compile append/sample/update for every shard shape
+            _drive(service, limiter, writers, 2, insert_chunk, batch)
+            runs = []
+            for _ in range(max(1, repeats)):
+                i0, s0 = limiter.inserts, limiter.samples
+                dt = _drive(service, limiter, writers, chunks_per_writer,
+                            insert_chunk, batch)
+                runs.append(((limiter.inserts - i0) / dt,
+                             (limiter.samples - s0) / dt))
+            runs.sort()
+            ins_rates = [r[0] for r in runs]
+            med_i, med_s = runs[len(runs) // 2]
+            spread = ((max(ins_rates) - min(ins_rates)) / med_i
+                      if med_i > 0 else 0.0)
+            points.append({
+                "writers": writers,
+                "n_shards": n_shards,
+                "spi": spi,
+                "batch_size": batch,
+                "inserts_per_s": round(med_i, 2),
+                "samples_per_s": round(med_s, 2),
+                "realized_spi": round(
+                    limiter.realized_samples_per_insert(), 4),
+                "repeats": max(1, repeats),
+                "rel_spread": round(spread, 4),
+            })
+    return points
+
+
+def emit_json(out_dir: str, smoke: bool = False) -> str:
+    kwargs = (dict(writer_counts=(1, 2), shard_counts=(1, 2),
+                   chunks_per_writer=8) if smoke else {})
+    payload = {
+        "figure": "serve",
+        "metric": "inserts_per_s",
+        "smoke": smoke,
+        "points": serve_points(**kwargs),
+    }
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, SERVE_JSON)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"# wrote {path} ({len(payload['points'])} points)",
+          file=sys.stderr)
+    return path
+
+
+def run(csv=True):
+    """CSV mode for the benchmarks.run harness."""
+    rows = []
+    for p in serve_points(writer_counts=(1, 2), shard_counts=(1,),
+                          chunks_per_writer=4, repeats=1):
+        name = f"serve/w{p['writers']}_s{p['n_shards']}"
+        rows.append((name, 1e6 / p["inserts_per_s"], p["inserts_per_s"]))
+    if csv:
+        for name, us, derived in rows:
+            print(f"{name},{us:.3f},{derived:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--emit-json", default=None, metavar="DIR")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized sweep, same schema and code paths")
+    args = ap.parse_args()
+    if args.emit_json:
+        emit_json(args.emit_json, smoke=args.smoke)
+    else:
+        run(csv=True)

@@ -25,6 +25,9 @@ Machine-readable perf trajectory: ``--emit-json DIR`` writes
                        Eq. 5 lane curves it solved over
     BENCH_replay.json — replay-transaction ops/s per (backend, eager|
                        lazy, fused|split) arm (benchmarks/replay_micro)
+    BENCH_serve.json — replay-service sustained insert/sample rates vs
+                       concurrent writer count (benchmarks/fig_serve) —
+                       the planner's service-shape inputs
 
 Every point is a median-of-N repeat with its dispersion recorded
 (benchmarks/timing.py — the groundwork for a blocking perf gate).
@@ -47,11 +50,12 @@ import traceback
 
 def emit_json(out_dir: str, smoke: bool = False,
               wallclock: bool = False) -> None:
-    from benchmarks import fig10_scalability, replay_micro
+    from benchmarks import fig10_scalability, fig_serve, replay_micro
     from repro.runtime import planner
 
     os.makedirs(out_dir, exist_ok=True)
     replay_micro.emit_json(out_dir, smoke=smoke)
+    fig_serve.emit_json(out_dir, smoke=smoke)
     prof = planner.profile(smoke=smoke)
     fig10_points = list(prof["fig10_points"])
     if wallclock:
@@ -83,8 +87,14 @@ def emit_json(out_dir: str, smoke: bool = False,
         print(f"# wrote {path} ({len(payload['points'])} points)",
               file=sys.stderr)
 
+    serve_points = []
+    serve_path = os.path.join(out_dir, fig_serve.SERVE_JSON)
+    if os.path.exists(serve_path):
+        with open(serve_path) as f:
+            serve_points = json.load(f).get("points", [])
     pc = planner.plan(
         prof["fig9_points"], fig10_points,
+        serve_points=serve_points,
         actor_curve=prof["actor_curve"],
         learner_curve=prof["learner_curve"],
         source="emit-json")
@@ -134,8 +144,8 @@ def main() -> None:
 
     if args.only or not args.emit_json:
         from benchmarks import (fig8_baseline, fig9_fanout, fig10_scalability,
-                                fig11_plugin, fig12_dse, replay_micro,
-                                roofline)
+                                fig11_plugin, fig12_dse, fig_serve,
+                                replay_micro, roofline)
         suites = {
             "fig8": fig8_baseline.run,
             "fig9": fig9_fanout.run,
@@ -143,6 +153,7 @@ def main() -> None:
             "fig11": fig11_plugin.run,
             "fig12": fig12_dse.run,
             "replay": replay_micro.run,
+            "serve": fig_serve.run,
             "roofline": roofline.run,
         }
         chosen = (args.only.split(",") if args.only else list(suites))

@@ -42,6 +42,7 @@ FIGURE_METRICS: Dict[str, str] = {
     "fig9": "env_steps_per_s",
     "fig10": "env_steps_per_s",
     "replay": "replay_ops_per_s",
+    "serve": "inserts_per_s",
 }
 
 POINT_FIELDS: Dict[str, Dict[str, tuple]] = {
@@ -69,6 +70,21 @@ POINT_FIELDS: Dict[str, Dict[str, tuple]] = {
         "n_procs": (int, False),
         "overlapped": (bool, False),
         "update_interval": (int, False),
+    },
+    # replay-service throughput (benchmarks/fig_serve.py): sustained
+    # insert and sample rates of the sharded rate-limited ReplayService
+    # vs concurrent writer count — the planner's service-shape inputs
+    # (runtime/planner.py select_replay_service).  realized_spi is
+    # measurement-side (compare.py ignores it for identity).
+    "serve": {
+        **_COMMON_POINT,
+        "inserts_per_s": ((int, float), True),
+        "samples_per_s": ((int, float), True),
+        "writers": (int, True),
+        "n_shards": (int, True),
+        "spi": ((int, float), True),       # configured samples-per-insert
+        "batch_size": (int, True),
+        "realized_spi": ((int, float), False),
     },
     # replay-transaction microbenchmark (benchmarks/replay_micro.py)
     "replay": {
@@ -98,6 +114,10 @@ PLAN_CONFIG_FIELDS: Dict[str, tuple] = {
     "update_interval": (int, True),
     "x_actor": (int, True),
     "x_learner": (int, True),
+    # replay-service degrees of freedom (DESIGN.md §11) — optional so
+    # pre-service plans stay loadable; planner-emitted plans carry both
+    "n_replay_shards": (int, False),
+    "samples_per_insert": ((int, float), False),
     "predicted_env_steps_per_s": ((int, float), True),
     "source": (str, True),
 }

@@ -34,10 +34,20 @@ def _filter_spec(mesh: Mesh, spec: P) -> P:
 
 
 def reshard(tree: Pytree, specs: Pytree, mesh: Mesh) -> Pytree:
-    """device_put every leaf with its (mesh-filtered) NamedSharding."""
+    """device_put every leaf with its (mesh-filtered) NamedSharding.
+
+    ``specs`` mirrors ``tree`` down to ``PartitionSpec`` leaves (``None``
+    means replicated); any registered pytree container — dicts, the
+    agent-state dataclasses, optax's NamedTuple states — is descended,
+    so a whole learner state reshards in one call (the service's
+    restart-from-checkpoint path, DESIGN.md §11).
+    """
     def put(x, spec):
-        s = NamedSharding(mesh, _filter_spec(mesh, spec))
+        s = NamedSharding(mesh, _filter_spec(mesh, spec or P()))
         return jax.device_put(x, s)
 
-    return jax.tree.map(put, tree, specs,
-                        is_leaf=lambda x: not isinstance(x, (dict, list, tuple)))
+    spec_leaves, treedef = jax.tree_util.tree_flatten(
+        specs, is_leaf=lambda x: x is None or isinstance(x, P))
+    leaves = treedef.flatten_up_to(tree)
+    return jax.tree_util.tree_unflatten(
+        treedef, [put(x, s) for x, s in zip(leaves, spec_leaves)])

@@ -133,15 +133,13 @@ class ShardedReplayConfig:
     alpha: float = 0.6
     eps: float = 1e-6
     backend: Optional[str] = None   # TreeOps backend: "xla" | "pallas"
-    use_kernels: bool = False   # deprecated alias for backend="pallas"
     # None → backend-appropriate default (see ReplayConfig)
     fused_sample_gather: Optional[bool] = None
     axis_names: Tuple[str, ...] = ("data",)
 
     @property
     def tree_backend(self) -> str:
-        from repro.core import tree_ops
-        return tree_ops.resolve_tree_backend(self.backend, self.use_kernels)
+        return self.backend or "xla"
 
 
 class ShardedPrioritizedReplay:
@@ -162,7 +160,6 @@ class ShardedPrioritizedReplay:
                 alpha=config.alpha,
                 eps=config.eps,
                 backend=config.backend,
-                use_kernels=config.use_kernels,
                 fused_sample_gather=config.fused_sample_gather,
             ),
             example_item,
@@ -195,6 +192,11 @@ class ShardedPrioritizedReplay:
     def insert(self, state: ReplayState, items: Pytree) -> ReplayState:
         """Local insert — actors write to their own shard (no collective)."""
         return self.local.insert(state, items)
+
+    def append(self, state: ReplayState, items: Pytree, *,
+               lazy: bool = True) -> ReplayState:
+        """Shard-local writer transaction (see PrioritizedReplay.append)."""
+        return self.local.append(state, items, lazy=lazy)
 
     def insert_begin(self, state: ReplayState, batch: int, *,
                      lazy: bool = False):

@@ -72,7 +72,6 @@ class ReplayConfig:
     eps: float = 1e-6           # priority floor
     backend: Optional[str] = None   # TreeOps backend: "xla" | "pallas"
                                     # (None = unset → "xla")
-    use_kernels: bool = False   # deprecated alias for backend="pallas"
     # descend + fetch rows in one op; None → backend-appropriate default
     # (tree_ops.default_fused_sample_gather: True only where the kernel
     # compiles, i.e. TPU — CPU interpret mode inverts the win)
@@ -80,9 +79,7 @@ class ReplayConfig:
 
     @property
     def tree_backend(self) -> str:
-        # conflict detection + deprecation live in ONE place
-        # (tree_ops.resolve_tree_backend)
-        return tree_ops.resolve_tree_backend(self.backend, self.use_kernels)
+        return self.backend or "xla"
 
     @property
     def fused_sample_gather_resolved(self) -> bool:
@@ -227,6 +224,24 @@ class PrioritizedReplay:
         batch = jax.tree.leaves(items)[0].shape[0]
         state, slots = self.insert_begin(state, batch)
         return self.insert_commit(state, slots, items)
+
+    def append(self, state: ReplayState, items: Pytree, *,
+               lazy: bool = True) -> ReplayState:
+        """Shard-local writer transaction (the replay-service append,
+        DESIGN.md §11): begin + commit fused into one op, with *no*
+        assumption that a learner call interleaves the two phases.
+
+        With ``lazy=True`` (the service default) both phases write only
+        the tree's leaf level and bump the pending ledger: the appended
+        items become sampleable atomically at the shard's next ``flush``
+        — the admission-window boundary — so concurrent writers never
+        expose a half-written batch to the sampler.  This is the op the
+        loop's lockstep insert_begin/learn/insert_commit interleave
+        collapses to when actors and learners no longer share a program.
+        """
+        batch = jax.tree.leaves(items)[0].shape[0]
+        state, slots = self.insert_begin(state, batch, lazy=lazy)
+        return self.insert_commit(state, slots, items, lazy=lazy)
 
     # -- sampling (paper Alg. 3 SAMPLE) ------------------------------------
 

@@ -31,8 +31,7 @@ through HBM between two kernel launches.
 
 from __future__ import annotations
 
-import warnings
-from typing import Any, Optional, Protocol, Tuple, runtime_checkable
+from typing import Any, Protocol, Tuple, runtime_checkable
 
 import jax
 
@@ -40,28 +39,6 @@ from repro.core import sumtree
 from repro.core.sumtree import SumTreeSpec
 
 Pytree = Any
-
-
-def resolve_tree_backend(backend: Optional[str], use_kernels: bool) -> str:
-    """The one place the legacy ``use_kernels`` alias is interpreted.
-
-    ``backend=None`` means "unset" (defaults to ``"xla"``).  Passing
-    ``use_kernels=True`` together with an *explicit* conflicting
-    ``backend`` raises instead of silently overriding it (the old
-    behavior picked pallas and ignored ``backend="xla"``).
-    """
-    if use_kernels:
-        warnings.warn(
-            "ReplayConfig.use_kernels is deprecated: pass "
-            "backend='pallas' instead", DeprecationWarning, stacklevel=3)
-        if backend not in (None, "pallas"):
-            raise ValueError(
-                f"conflicting tree-backend selection: use_kernels=True "
-                f"requests 'pallas' but backend={backend!r} was set "
-                "explicitly — drop the deprecated use_kernels flag and "
-                "keep only backend=")
-        return "pallas"
-    return backend or "xla"
 
 
 def default_fused_sample_gather() -> bool:

@@ -44,6 +44,21 @@ one of three workloads:
 
 Chunks are bracketed with ``jax.profiler.StepTraceAnnotation`` step
 markers so profile traces segment per chunk.
+
+**Replay-service gang** (DESIGN.md §11): ``launch_service`` spawns a
+second kind of gang — one ``--mode replay-server`` process hosting the
+sharded rate-limited ``ReplayService``, N ``--mode service-actor``
+writer processes and one ``--mode service-learner`` sampler process.
+These roles do NOT join ``jax.distributed``: each owns an independent
+single-device jax runtime and they meet only at the service's TCP
+boundary (append / sample / priority write-back / param channel), so an
+actor crash can never wedge a collective.  Results ride the same
+``KEY=VALUE`` stdout protocol; the server reports the rate limiter's
+realized samples-per-insert ratio and its tolerance band.  With
+``restart_learner_after`` the learner exits mid-run after checkpointing
+and a fresh learner process resumes from the checkpoint against the
+still-live service — actors park in writer backpressure for the gap
+(the rate limiter, not a barrier, holds the fleet).
 """
 
 from __future__ import annotations
@@ -153,6 +168,153 @@ def parse_kv(text: str) -> Dict[str, str]:
             k, v = line.split("=", 1)
             out[k] = v
     return out
+
+
+# -- replay-service gang (parent side) ---------------------------------------
+
+
+def _wait_for_server(port: int, proc: subprocess.Popen,
+                     timeout_s: float = 90.0) -> None:
+    """Poll the service port until it accepts; fail fast (with the
+    server's output tail) if the server process dies during startup."""
+    deadline = time.monotonic() + timeout_s
+    while time.monotonic() < deadline:
+        if proc.poll() is not None:
+            out, _ = proc.communicate()
+            tail = "\n".join(out.splitlines()[-25:])
+            raise RuntimeError(
+                f"replay server exited during startup (code "
+                f"{proc.returncode}); output tail:\n{tail}")
+        try:
+            with socket.create_connection(("127.0.0.1", port), timeout=1.0):
+                return
+        except OSError:
+            time.sleep(0.1)
+    proc.kill()
+    raise RuntimeError(
+        f"replay server did not open port {port} within {timeout_s:.0f}s")
+
+
+def launch_service(
+    n_actors: int = 2,
+    *,
+    n_shards: int = 1,
+    samples_per_insert: float = 16.0,
+    batch_size: int = 64,
+    warmup: int = 512,
+    learn_steps: int = 1200,
+    n_envs: int = 8,
+    actor_chunk: int = 8,
+    capacity_per_shard: int = 20_000,
+    publish_every: int = 16,
+    epsilon: float = 0.2,
+    seed: int = 0,
+    ckpt_dir: Optional[str] = None,
+    ckpt_every: int = 0,
+    restart_learner_after: Optional[int] = None,
+    timeout_s: float = 900.0,
+) -> Dict[str, Dict[str, str]]:
+    """Spawn the replay-service gang: 1 server + ``n_actors`` writers +
+    1 learner, every role its own process with an independent jax
+    runtime, meeting only at the service's TCP boundary.  Returns the
+    parsed ``KEY=VALUE`` results per role (``server``, ``actor-<i>``,
+    ``learner``, plus ``learner-0`` for the pre-restart learner when
+    ``restart_learner_after`` is set).
+
+    With ``restart_learner_after`` the first learner process checkpoints
+    and exits after that many learn steps *without* stopping the service
+    — actors park in writer backpressure — and a second learner process
+    resumes from the checkpoint (``--resume``) and trains to completion:
+    the elastic-restart drill of DESIGN.md §4.5 against a live service.
+    """
+    if n_actors < 1:
+        raise ValueError(f"n_actors={n_actors}: need ≥ 1")
+    if restart_learner_after is not None and not (ckpt_dir and ckpt_every):
+        raise ValueError("restart_learner_after requires ckpt_dir and "
+                         "ckpt_every (the resumed learner restores from "
+                         "the checkpoint directory)")
+    env = worker_env(1)
+    port = free_port()
+    deadline = time.monotonic() + timeout_s
+
+    def spawn(role_args: List[str]) -> subprocess.Popen:
+        cmd = [sys.executable, "-m", "repro.launch.multiprocess", *role_args]
+        return subprocess.Popen(cmd, env=env, stdout=subprocess.PIPE,
+                                stderr=subprocess.STDOUT, text=True)
+
+    common = ["--serve-port", str(port), "--batch-size", str(batch_size),
+              "--seed", str(seed)]
+    # the admission window must absorb one full gang burst: every actor
+    # can land a whole rollout chunk between two learner samples
+    burst = n_actors * actor_chunk * n_envs
+    procs: Dict[str, subprocess.Popen] = {}
+    procs["server"] = spawn(
+        ["--mode", "replay-server", *common,
+         "--n-shards", str(n_shards),
+         "--spi", str(samples_per_insert),
+         "--warmup", str(warmup),
+         "--capacity-per-shard", str(capacity_per_shard),
+         "--insert-burst", str(burst),
+         "--serve-timeout", str(timeout_s)])
+    try:
+        _wait_for_server(port, procs["server"],
+                         timeout_s=min(90.0, timeout_s))
+        for a in range(n_actors):
+            procs[f"actor-{a}"] = spawn(
+                ["--mode", "service-actor", *common,
+                 "--actor-id", str(a),
+                 "--n-envs", str(n_envs),
+                 "--actor-chunk", str(actor_chunk),
+                 "--epsilon", str(epsilon)])
+        learner_args = ["--mode", "service-learner", *common,
+                        "--n-envs", str(n_envs),
+                        "--learn-steps", str(learn_steps),
+                        "--publish-every", str(publish_every)]
+        if ckpt_dir:
+            learner_args += ["--ckpt-dir", ckpt_dir,
+                             "--ckpt-every", str(ckpt_every)]
+        if restart_learner_after is not None:
+            first = spawn([*learner_args,
+                           "--exit-after", str(restart_learner_after)])
+            procs["learner-0"] = first
+            first.wait(timeout=max(1.0, deadline - time.monotonic()))
+            if first.returncode != 0:
+                out, _ = first.communicate()
+                tail = "\n".join(out.splitlines()[-25:])
+                raise RuntimeError(
+                    f"pre-restart learner failed (code {first.returncode}); "
+                    f"output tail:\n{tail}")
+            procs["learner"] = spawn([*learner_args, "--resume"])
+        else:
+            procs["learner"] = spawn(learner_args)
+    except Exception:
+        for p in procs.values():
+            if p.poll() is None:
+                p.kill()
+        raise
+
+    outs: Dict[str, str] = {}
+    failed = None
+    for name, p in procs.items():
+        left = max(1.0, deadline - time.monotonic())
+        try:
+            outs[name], _ = p.communicate(timeout=left)
+        except subprocess.TimeoutExpired:
+            p.kill()
+            outs[name], _ = p.communicate()
+            failed = failed or (name, "timeout")
+        if p.returncode not in (0, None) and failed is None:
+            failed = (name, f"exit code {p.returncode}")
+    if failed is not None:
+        for p in procs.values():
+            if p.poll() is None:
+                p.kill()
+        name, why = failed
+        tail = "\n".join(outs.get(name, "").splitlines()[-25:])
+        raise RuntimeError(
+            f"replay-service worker {name} failed ({why}); output "
+            f"tail:\n{tail}")
+    return {name: parse_kv(text) for name, text in outs.items()}
 
 
 # -- worker side -------------------------------------------------------------
@@ -400,20 +562,302 @@ def _equiv_worker(args):
         print(f"TELESCOPE_MAX_ABS_ERR={float(jax.device_get(tele))!r}")
 
 
+# -- replay-service workers ---------------------------------------------------
+
+
+def _params_checksum(params) -> float:
+    import jax
+
+    checksum = 0.0
+    for leaf in jax.tree.leaves(jax.device_get(params)):
+        checksum += float(abs(leaf.astype("float64")).sum())
+    return checksum
+
+
+def _replay_server_worker(args):
+    """``--mode replay-server``: host the sharded rate-limited service
+    until the learner sends stop, then report flow-control stats."""
+    from repro.service import (RateLimiter, ReplayService,
+                               ReplayServiceConfig, serve)
+
+    _, _, _, example = _dqn_cartpole(1)
+    spi = args.spi
+    # loose gang band: the admission window absorbs the largest single
+    # writer burst (a whole actor chunk), not one lockstep loop step
+    eb = 2.0 * max(float(args.batch_size), spi * max(1, args.insert_burst))
+    limiter = RateLimiter(samples_per_insert=spi,
+                          min_size_to_sample=max(1, args.warmup),
+                          error_buffer=eb)
+    service = ReplayService(
+        ReplayServiceConfig(capacity_per_shard=args.capacity_per_shard,
+                            n_shards=args.n_shards,
+                            fanout=128,
+                            seed=args.seed),
+        example, rate_limiter=limiter)
+    server, port = serve(service, port=args.serve_port)
+    print(f"SERVE_PORT={port}", flush=True)
+    deadline = time.monotonic() + args.serve_timeout
+    while not service.stopped and time.monotonic() < deadline:
+        time.sleep(0.1)
+    timed_out = not service.stopped
+    service.stop()
+    time.sleep(2.0)  # grace: parked clients drain their final replies
+    server.shutdown()
+    st = service.stats()
+    rl = st["rate_limiter"]
+    denom = max(1, int(rl["inserts"]) - int(rl["min_size_to_sample"]))
+    print(f"INSERTS={rl['inserts']}")
+    print(f"SAMPLES={rl['samples']}")
+    print(f"CONFIGURED_SPI={spi!r}")
+    print(f"REALIZED_SPI={rl['realized_spi']!r}")
+    # the band theorem: |realized − spi| ≤ error_buffer/(inserts − min)
+    print(f"SPI_TOLERANCE={eb / denom!r}")
+    print(f"MEAN_RECENT_RETURN={st['mean_recent_return']!r}")
+    print(f"N_RETURNS={st['n_returns']}")
+    print("PER_SHARD_COUNT="
+          + ",".join(str(c) for c in st["per_shard_count"]))
+    print(f"PARAMS_VERSION={st['params_version']}")
+    if timed_out:
+        raise SystemExit("replay server: no stop received within "
+                         f"--serve-timeout {args.serve_timeout:.0f}s")
+
+
+def _service_actor_worker(args):
+    """``--mode service-actor``: run the actor program against the
+    service — pull params from the channel, push transition chunks
+    through rate-limited appends, until the learner stops the service.
+    The ε-schedule clocks off the service's *global* insert counter, so
+    the fleet's exploration decays as one actor regardless of how many
+    writers share the budget."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.runtime.loop import (LoopConfig, init_actor_slice,
+                                    make_actor_program)
+    from repro.service.client import ReplayClient, wait_for_service
+
+    env_fn, _, agent, _ = _dqn_cartpole(args.n_envs)
+    _, v_reset, v_step = env_fn(args.n_envs)
+    cfg = LoopConfig(batch_size=args.batch_size, warmup=args.warmup,
+                     epsilon=args.epsilon)
+    program = make_actor_program(agent, v_step, cfg, args.n_envs)
+
+    def chunk(agent_state, sl, key, env_steps0):
+        def body(carry, t):
+            sl, k = carry
+            k_next, kk = jax.random.split(k)
+            kk = jax.random.fold_in(kk, args.actor_id)  # decorrelate fleet
+            k_act, k_env = jax.random.split(kk)
+            sl, transitions = program(agent_state, sl, k_act, k_env,
+                                      env_steps0 + t * args.n_envs)
+            done = transitions["done"] > 0
+            finished = jnp.where(done, sl.last_return, jnp.nan)
+            return (sl, k_next), (transitions, finished)
+
+        (sl, key), (trans, finished) = jax.lax.scan(
+            body, (sl, key), jnp.arange(args.actor_chunk))
+        flat = jax.tree.map(
+            lambda x: x.reshape((args.actor_chunk * args.n_envs,)
+                                + x.shape[2:]), trans)
+        return sl, key, flat, finished
+
+    chunk = jax.jit(chunk)
+
+    wait_for_service("127.0.0.1", args.serve_port, timeout=60.0)
+    client = ReplayClient("127.0.0.1", args.serve_port,
+                          timeout=args.rpc_timeout)
+    # the learner publishes v1 before sampling — actors start on a real
+    # policy, never on their own uninitialized weights
+    out = client.get_params(min_version=1, timeout=120.0)
+    agent_state = agent.init(jax.random.PRNGKey(args.seed))
+    agent_state = agent.with_acting_params(
+        agent_state, jax.tree.map(jnp.asarray, out["params"]))
+    have_version = out["version"]
+
+    sl = init_actor_slice(v_reset, jax.random.PRNGKey(args.seed + 1),
+                          args.n_envs, shard_id=args.actor_id)
+    key = jax.random.PRNGKey(1000 + args.seed + args.actor_id)
+    env_steps0 = jnp.zeros((), jnp.int32)
+    chunks = transitions = episodes = 0
+    while True:
+        sl, key, flat, finished = chunk(agent_state, sl, key, env_steps0)
+        fin = np.asarray(finished).ravel()
+        rets = [float(r) for r in fin[~np.isnan(fin)]]
+        episodes += len(rets)
+        reply = client.append(f"actor-{args.actor_id}", flat,
+                              returns=rets or None,
+                              timeout=args.append_timeout)
+        if reply.get("stopped"):
+            break
+        chunks += 1
+        transitions += args.actor_chunk * args.n_envs
+        env_steps0 = jnp.asarray(int(reply["inserts"]), jnp.int32)
+        if reply["params_version"] > have_version:
+            out = client.get_params(min_version=have_version + 1,
+                                    timeout=30.0)
+            agent_state = agent.with_acting_params(
+                agent_state, jax.tree.map(jnp.asarray, out["params"]))
+            have_version = out["version"]
+    client.close()
+    print(f"ACTOR_ID={args.actor_id}")
+    print(f"CHUNKS={chunks}")
+    print(f"TRANSITIONS={transitions}")
+    print(f"EPISODES={episodes}")
+    print(f"PARAMS_VERSION={have_version}")
+
+
+def _eval_policy(agent, agent_state, env_fn, n_envs: int, steps: int,
+                 seed: int) -> float:
+    """Near-greedy rollout of the learned policy (fresh envs, no replay):
+    mean return over every episode that finishes in the window."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.runtime.loop import (LoopConfig, init_actor_slice,
+                                    make_actor_program)
+
+    _, v_reset, v_step = env_fn(n_envs)
+    cfg = LoopConfig(epsilon=0.01, epsilon_final=0.01)
+    program = make_actor_program(agent, v_step, cfg, n_envs)
+
+    def body(sl, k):
+        k_act, k_env = jax.random.split(k)
+        sl, transitions = program(agent_state, sl, k_act, k_env,
+                                  jnp.zeros((), jnp.int32))
+        done = transitions["done"] > 0
+        return sl, jnp.where(done, sl.last_return, jnp.nan)
+
+    key = jax.random.PRNGKey(seed)
+    sl = init_actor_slice(v_reset, jax.random.fold_in(key, 0), n_envs)
+    keys = jax.random.split(jax.random.fold_in(key, 1), steps)
+    _, fin = jax.jit(lambda s, ks: jax.lax.scan(body, s, ks))(sl, keys)
+    fin = np.asarray(fin).ravel()
+    fin = fin[~np.isnan(fin)]
+    return float(fin.mean()) if fin.size else 0.0
+
+
+def _service_learner_worker(args):
+    """``--mode service-learner``: the sampler side — publish params,
+    drain rate-limited samples through the learner program, write
+    priorities back, checkpoint periodically, and stop the service when
+    the learn budget is spent.  With ``--exit-after`` the process
+    checkpoints and exits mid-run *without* stopping the service (the
+    restart drill); with ``--resume`` it restores the latest checkpoint
+    through the elastic reshard path and continues the count."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.runtime.loop import make_learner_program
+    from repro.service.client import ReplayClient, wait_for_service
+
+    env_fn, _, agent, _ = _dqn_cartpole(args.n_envs)
+    learn = jax.jit(make_learner_program(agent))
+    agent_state = agent.init(jax.random.PRNGKey(args.seed))
+    step0 = 0
+    manager = None
+    if args.ckpt_dir:
+        from repro.checkpoint.manager import CheckpointManager
+        manager = CheckpointManager(args.ckpt_dir, keep=3)
+        if args.resume:
+            from jax.sharding import Mesh, PartitionSpec as P
+
+            from repro.checkpoint.elastic import reshard
+
+            example = {"agent": agent_state,
+                       "learn_step": np.zeros((), np.int32)}
+            step, restored = manager.restore_latest(example)
+            if step is None:
+                raise RuntimeError(
+                    f"--resume: no checkpoint under {args.ckpt_dir}")
+            mesh = Mesh(np.asarray(jax.devices()[:1]), ("data",))
+            specs = {"agent": jax.tree.map(lambda _: P(),
+                                           restored["agent"]),
+                     "learn_step": None}
+            restored = reshard(restored, specs, mesh)
+            agent_state = restored["agent"]
+            step0 = int(restored["learn_step"])
+            print(f"RESUMED_FROM={step0}", flush=True)
+    if args.exit_after and manager is None:
+        raise RuntimeError("--exit-after requires --ckpt-dir (the resumed "
+                           "learner restores from the checkpoint)")
+
+    wait_for_service("127.0.0.1", args.serve_port, timeout=60.0)
+    client = ReplayClient("127.0.0.1", args.serve_port,
+                          timeout=args.rpc_timeout)
+    client.put_params(agent.params_for_acting(agent_state))
+
+    def save(step):
+        manager.save(step, {"agent": jax.device_get(agent_state),
+                            "learn_step": np.int32(step)})
+
+    learn_step = step0
+    last_loss = float("nan")
+    while learn_step < args.learn_steps:
+        out = client.sample(args.batch_size, beta=0.4,
+                            timeout=args.rpc_timeout)
+        if out.get("stopped"):
+            break
+        agent_state, metrics, td = learn(
+            agent_state, jax.tree.map(jnp.asarray, out["items"]),
+            jnp.asarray(out["weights"]))
+        client.update_priorities(out["sample_id"], np.asarray(td))
+        learn_step += 1
+        last_loss = float(metrics["loss"])
+        if learn_step % args.publish_every == 0:
+            client.put_params(agent.params_for_acting(agent_state))
+        if manager is not None and args.ckpt_every \
+                and learn_step % args.ckpt_every == 0:
+            save(learn_step)
+        if args.exit_after and learn_step - step0 >= args.exit_after \
+                and learn_step < args.learn_steps:
+            # planned mid-run exit: checkpoint, leave the service up —
+            # actors park in writer backpressure until the resumed
+            # learner's samples pay the debt back down
+            save(learn_step)
+            client.close()
+            print(f"LEARN_STEPS={learn_step}")
+            print("EXITED_EARLY=1")
+            return
+
+    client.put_params(agent.params_for_acting(agent_state))
+    if manager is not None and args.ckpt_every:
+        save(learn_step)
+    stats = client.stats()
+    eval_ret = _eval_policy(agent, agent_state, env_fn, n_envs=8,
+                            steps=250, seed=args.seed + 7)
+    client.stop()
+    client.close()
+    rl = stats.get("rate_limiter", {})
+    print(f"LEARN_STEPS={learn_step}")
+    print(f"FINAL_LOSS={last_loss!r}")
+    print(f"EVAL_RETURN={eval_ret!r}")
+    print(f"PARAMS_CHECKSUM={_params_checksum(agent_state.params)!r}")
+    print(f"MEAN_RECENT_RETURN={stats['mean_recent_return']!r}")
+    print(f"SERVICE_INSERTS={stats['inserts']}")
+    print(f"SERVICE_SAMPLES={stats['samples']}")
+    print(f"REALIZED_SPI={rl.get('realized_spi', 0.0)!r}")
+
+
 # -- entry -------------------------------------------------------------------
 
 
 def main(argv: Optional[Sequence[str]] = None) -> None:
     ap = argparse.ArgumentParser(
         description="wall-clock multi-process worker (spawned by launch())")
-    ap.add_argument("--coordinator", required=True,
+    ap.add_argument("--coordinator", default=None,
                     help="host:port of the jax.distributed coordinator "
-                         "(process 0 binds it)")
-    ap.add_argument("--n-procs", type=int, required=True)
-    ap.add_argument("--process-id", type=int, required=True)
+                         "(process 0 binds it); required for the SPMD "
+                         "modes, unused by the replay-service roles")
+    ap.add_argument("--n-procs", type=int, default=1)
+    ap.add_argument("--process-id", type=int, default=0)
     ap.add_argument("--handshake-timeout", type=float,
                     default=HANDSHAKE_TIMEOUT_S)
-    ap.add_argument("--mode", choices=("bench", "fused", "equiv"),
+    ap.add_argument("--mode",
+                    choices=("bench", "fused", "equiv", "replay-server",
+                             "service-actor", "service-learner"),
                     default="bench")
     ap.add_argument("--n-pods", type=int, default=1)
     ap.add_argument("--n-data", type=int, default=1)
@@ -426,7 +870,45 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
     ap.add_argument("--repeats", type=int, default=3)
     ap.add_argument("--scan-chunk", type=int, default=20)
     ap.add_argument("--seed", type=int, default=0)
+    # replay-service roles (DESIGN.md §11)
+    ap.add_argument("--serve-port", type=int, default=0)
+    ap.add_argument("--n-shards", type=int, default=1)
+    ap.add_argument("--spi", type=float, default=16.0,
+                    help="configured samples-per-insert ratio")
+    ap.add_argument("--batch-size", type=int, default=64)
+    ap.add_argument("--warmup", type=int, default=512)
+    ap.add_argument("--capacity-per-shard", type=int, default=20_000)
+    ap.add_argument("--insert-burst", type=int, default=64,
+                    help="largest single writer append the band absorbs")
+    ap.add_argument("--serve-timeout", type=float, default=600.0)
+    ap.add_argument("--actor-id", type=int, default=0)
+    ap.add_argument("--actor-chunk", type=int, default=8,
+                    help="env steps per jitted actor rollout / append")
+    ap.add_argument("--epsilon", type=float, default=0.2)
+    ap.add_argument("--learn-steps", type=int, default=1200)
+    ap.add_argument("--publish-every", type=int, default=16)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--exit-after", type=int, default=0,
+                    help="learner: checkpoint and exit after this many "
+                         "learn steps without stopping the service")
+    ap.add_argument("--resume", action="store_true",
+                    help="learner: restore the latest checkpoint")
+    ap.add_argument("--rpc-timeout", type=float, default=300.0)
+    ap.add_argument("--append-timeout", type=float, default=240.0)
     args = ap.parse_args(argv)
+
+    service_roles = {"replay-server": _replay_server_worker,
+                     "service-actor": _service_actor_worker,
+                     "service-learner": _service_learner_worker}
+    if args.mode in service_roles:
+        # service roles never join jax.distributed: independent runtimes
+        # meeting only at the TCP boundary (a dead actor cannot wedge a
+        # collective — there are none)
+        service_roles[args.mode](args)
+        return
+    if args.coordinator is None:
+        ap.error("--coordinator is required for modes bench/fused/equiv")
 
     from repro.core.distributed import initialize_distributed
 

@@ -616,6 +616,14 @@ def executor_from_plan(
     The caller must have forced ``plan.n_devices`` host devices before
     the first jax call (``--xla_force_host_platform_device_count``);
     ``examples/quickstart.py --plan`` shows the full dance.
+
+    A plan with ``n_replay_shards ≥ 1`` (the replay-service degrees of
+    freedom, runtime/planner.py) routes experience through an in-process
+    ``ReplayService`` behind a ``RateLimiter`` pinned to the plan's
+    ``samples_per_insert`` — the ``ServiceExecutor`` form of the same
+    workload (DESIGN.md §11).  Service plans run the fused (no-mesh)
+    program per process; the multi-process service gang is launched by
+    ``launch.multiprocess.launch_service`` instead.
     """
     import dataclasses as _dc
 
@@ -623,6 +631,32 @@ def executor_from_plan(
     from repro.launch.mesh import mesh_from_plan
 
     cfg = _dc.replace(cfg, update_interval=plan.update_interval)
+    n_replay_shards = getattr(plan, "n_replay_shards", 0)
+    if n_replay_shards:
+        from repro.service.executor import ServiceExecutor
+        from repro.service.rate_limiter import RateLimiter
+        from repro.service.server import ReplayService, ReplayServiceConfig
+
+        if mesh_from_plan(plan) is not None:
+            raise ValueError(
+                f"plan ({plan.describe()}) combines a device mesh with a "
+                "replay service — the service executor runs the fused "
+                "per-process program; use launch_service for a gang")
+        service = ReplayService(
+            ReplayServiceConfig(
+                capacity_per_shard=max(1, capacity // n_replay_shards),
+                n_shards=n_replay_shards, fanout=fanout,
+                backend=tree_backend, router="round_robin"),
+            example)
+        limiter = None
+        if plan.samples_per_insert:
+            limiter = RateLimiter.for_loop(
+                cfg.batch_size,
+                max(1, round(cfg.batch_size / plan.samples_per_insert)),
+                cfg.warmup, insert_burst=plan.n_envs)
+        return ServiceExecutor(agent, service, env_fn, cfg, plan.n_envs,
+                               scan_chunk=scan_chunk,
+                               rate_limiter=limiter)
     mesh = mesh_from_plan(plan)
     if mesh is None:
         if intra_pod_dtype not in (None, "f32", "float32"):

@@ -173,7 +173,74 @@ def make_actor_step(agent: Agent, v_step: Callable, n_envs: int):
     return actor_step
 
 
+# -- actor-side program (service boundary, DESIGN.md §11) --------------------
+
+
+class ActorSlice(NamedTuple):
+    """The actor-side state of the decoupled runtime: everything an actor
+    fleet process owns when the replay buffer lives behind a service —
+    env state plus the episode-return bookkeeping.  The agent params
+    arrive via the service's param channel; the replay state never
+    crosses into actor land at all."""
+
+    env_state: Pytree
+    obs: jax.Array
+    episode_return: jax.Array
+    last_return: jax.Array
+
+
+def init_actor_slice(v_reset: Callable, key: jax.Array, n_envs: int,
+                     shard_id: int = 0) -> ActorSlice:
+    env_state, obs = v_reset(jax.random.fold_in(key, shard_id))
+    return ActorSlice(env_state=env_state, obs=obs,
+                      episode_return=jnp.zeros((n_envs,)),
+                      last_return=jnp.zeros((n_envs,)))
+
+
+def make_actor_program(agent: Agent, v_step: Callable, cfg: LoopConfig,
+                       n_envs: int):
+    """The actor side of the split runtime: one jit-able program that
+    turns (acting params, env slice, rng, global env-step clock) into a
+    transition batch — no replay state, no learner coupling.  The
+    ε-schedule is computed *inside* the program from the integer
+    ``env_steps`` clock (the service reports global inserts), so a
+    host-driven actor reproduces the fused loop's exploration bit-exactly.
+
+    Returns ``program(agent_state, slice, k_act, k_env, env_steps) →
+    (slice', transitions)``; the caller jits it (once) and owns the rng
+    chain and the append to the replay service.
+    """
+    actor_step = make_actor_step(agent, v_step, n_envs)
+
+    def program(agent_state, sl: ActorSlice, k_act, k_env, env_steps):
+        eps = epsilon_schedule(cfg, env_steps)
+        env_state, obs, ep_ret, last_ret, transitions = actor_step(
+            agent_state, sl.env_state, sl.obs,
+            sl.episode_return, sl.last_return, k_act, k_env, eps)
+        return ActorSlice(env_state, obs, ep_ret, last_ret), transitions
+
+    return program
+
+
 # -- learner program ---------------------------------------------------------
+
+
+def make_learner_program(agent: Agent):
+    """The learner side of the split runtime (DESIGN.md §11): consume a
+    sampled batch handed over the service boundary, return the TD errors
+    the service needs for the priority write-back.  No replay state —
+    sample and priority update live behind the service; this program is
+    everything the learner process owns.  ``make_learner_step`` below is
+    its fused composition with an in-program replay shard.
+
+    Returns ``program(agent_state, items, weights) →
+    (agent_state, metrics, td_errors)``; the caller jits it.
+    """
+
+    def program(agent_state, items, weights):
+        return agent.learn(agent_state, items, weights)
+
+    return program
 
 
 def make_learner_step(agent: Agent, replay, cfg: LoopConfig):

@@ -61,6 +61,7 @@ BACKENDS = ("fused", "sharded", "async")
 
 FIG9_JSON = "BENCH_fig9.json"
 FIG10_JSON = "BENCH_fig10.json"
+SERVE_JSON = "BENCH_serve.json"
 PLAN_JSON = "BENCH_plan.json"
 
 
@@ -79,6 +80,14 @@ class PlannedConfig:
     the Eq. 5 lane split (0 when no curves were provided), with
     ``n_envs`` the actor lanes rounded up to a multiple of the shard
     count so the executor's divisibility checks hold.
+
+    ``n_replay_shards``/``samples_per_insert`` are the replay-service
+    degrees of freedom (DESIGN.md §11): 0/0.0 keeps the replay in-loop
+    (the fused/sharded/async programs above); ``n_replay_shards ≥ 1``
+    routes experience through a ``ReplayService`` with that many shards
+    behind a ``RateLimiter`` pinned to ``samples_per_insert`` — the
+    explicit flow-control form of ``update_interval``'s implicit ratio
+    (spi = batch_size / update_interval).
     """
 
     backend: str
@@ -92,6 +101,8 @@ class PlannedConfig:
     update_interval: int = 1
     x_actor: int = 0                   # Eq. 5 lanes; 0 = not lane-solved
     x_learner: int = 0
+    n_replay_shards: int = 0           # 0 = in-loop replay (no service)
+    samples_per_insert: float = 0.0    # 0 = implicit (update_interval)
     predicted_env_steps_per_s: float = 0.0
     source: str = "unspecified"
 
@@ -118,6 +129,15 @@ class PlannedConfig:
         if self.n_shards > 1 and self.n_envs % self.n_shards:
             raise ValueError(f"n_envs={self.n_envs} not divisible by "
                              f"{self.n_shards} shards")
+        if self.n_replay_shards < 0:
+            raise ValueError("n_replay_shards must be ≥ 0 (0 = in-loop "
+                             "replay, no service)")
+        if self.samples_per_insert < 0:
+            raise ValueError("samples_per_insert must be ≥ 0 (0 = no "
+                             "rate limit)")
+        if self.samples_per_insert and not self.n_replay_shards:
+            raise ValueError("samples_per_insert needs a replay service "
+                             "(n_replay_shards ≥ 1) to enforce it")
 
     @property
     def n_shards(self) -> int:
@@ -150,6 +170,10 @@ class PlannedConfig:
         comp = ", int8-EF cross-pod reduce" if self.compress_pod_reduce else ""
         if self.overlap_pod_reduce:
             comp += " (overlapped)"
+        if self.n_replay_shards:
+            comp += (f", replay service ({self.n_replay_shards} shard"
+                     f"{'s' if self.n_replay_shards > 1 else ''}, "
+                     f"spi {self.samples_per_insert:g})")
         return (f"{self.backend} executor ({mesh}{knobs}{comp}), "
                 f"{self.n_envs} envs, update_interval "
                 f"{self.update_interval}, predicted "
@@ -322,6 +346,45 @@ def feasible(cand: Candidate, *, update_interval: int, max_staleness: int,
     return True
 
 
+def select_replay_service(serve_points: Sequence[dict], *,
+                          insert_rate: float, update_interval: int,
+                          batch_size: int) -> Tuple[int, float]:
+    """Choose the replay-service shape from measured ``figure="serve"``
+    points (benchmarks/fig_serve.py): the service must sustain the
+    chosen executor's insert rate AND the target sample rate it implies
+
+        target_spi  = batch_size / update_interval
+        sample_rate = target_spi · insert_rate
+
+    Among configs whose *measured* inserts_per_s and samples_per_s both
+    clear those requirements (with batch divisibility for stratified
+    sampling), the fewest shards win — less cross-shard composition for
+    the same sustained flow — tie-broken by headroom (the smaller of the
+    two measured/required ratios).  Returns ``(n_replay_shards,
+    samples_per_insert)``; ``(0, 0.0)`` when no measured config can
+    sustain the flow — the plan keeps the replay in-loop rather than
+    promising a service that would rate-limit the executor below its
+    measured throughput.
+    """
+    target_spi = batch_size / max(1, update_interval)
+    need_samples = target_spi * insert_rate
+    eligible = []
+    for p in serve_points:
+        shards = int(p.get("n_shards", 1))
+        if shards < 1 or batch_size % shards:
+            continue
+        ins = float(p.get("inserts_per_s", 0.0))
+        smp = float(p.get("samples_per_s", 0.0))
+        if ins >= insert_rate and smp >= need_samples:
+            headroom = min(ins / max(insert_rate, 1e-9),
+                           smp / max(need_samples, 1e-9))
+            eligible.append((shards, -headroom, p))
+    if not eligible:
+        return 0, 0.0
+    shards, _, _ = min(eligible)
+    return shards, target_spi
+
+
 # -- the planner -------------------------------------------------------------
 
 
@@ -382,6 +445,7 @@ def plan(
     fig9_points: Sequence[dict] = (),
     fig10_points: Sequence[dict] = (),
     *,
+    serve_points: Sequence[dict] = (),
     actor_curve: Optional[Dict[int, float]] = None,
     learner_curve: Optional[Dict[int, float]] = None,
     total_lanes: int = 8,
@@ -407,6 +471,13 @@ def plan(
     only on the curve-only fallback, where nothing was measured.  Ties
     prefer fewer devices, then a smaller publish_interval (less
     staleness for the same speed).
+
+    When ``serve_points`` (measured replay-service throughput,
+    benchmarks/fig_serve.py) are provided, a second selection stage
+    picks ``n_replay_shards``/``samples_per_insert`` via
+    :func:`select_replay_service` — the service shape that sustains the
+    winning executor's measured insert rate at the implied target ratio,
+    or 0/0.0 (in-loop replay) when none can.
     """
     lanes = None
     if actor_curve and learner_curve:
@@ -455,6 +526,11 @@ def plan(
     best = min(ok, key=lambda c: (-c.env_steps_per_s,
                                   max(1, c.n_pods) * max(1, c.n_data),
                                   c.publish_interval))
+    n_replay_shards, spi = (
+        select_replay_service(serve_points, insert_rate=best.env_steps_per_s,
+                              update_interval=update_interval,
+                              batch_size=batch_size)
+        if serve_points else (0, 0.0))
     return PlannedConfig(
         backend=best.backend,
         n_pods=best.n_pods,
@@ -470,6 +546,8 @@ def plan(
         update_interval=update_interval,
         x_actor=x_actor,
         x_learner=x_learner,
+        n_replay_shards=n_replay_shards,
+        samples_per_insert=spi,
         predicted_env_steps_per_s=best.env_steps_per_s,
         source=f"{source}:{best.source}",
     )
@@ -484,23 +562,79 @@ def _load_points(path: str) -> List[dict]:
     return list(payload.get("points", ()))
 
 
+# the measurement-side fields of every figure (mirrors the union of
+# benchmarks/schema.py metrics + dispersion records; kept inline because
+# ``benchmarks`` is not importable from ``src``) — everything else on a
+# point is identity
+_MEASUREMENT_FIELDS = frozenset({
+    "env_steps_per_s", "inserts_per_s", "samples_per_s",
+    "replay_ops_per_s", "speedup_vs_sync", "repeats", "rel_spread",
+    "realized_spi",
+})
+
+
+def _point_identity(point: dict) -> Tuple:
+    return tuple(sorted(
+        (k, repr(v)) for k, v in point.items()
+        if k not in _MEASUREMENT_FIELDS))
+
+
+def merge_bench_points(bench_dir: str) -> Dict[str, List[dict]]:
+    """Walk a directory tree of BENCH artifacts — several CI runs, a
+    cron sweep, wall-clock arms dropped in subdirectories — and merge
+    the points per figure.  Two points with the same identity fields are
+    the same config measured twice: the one from the newest file (mtime)
+    wins, so a stale artifact can never shadow a fresh measurement of
+    the same config.  Plan envelopes (no ``points`` list) are skipped;
+    unreadable json is tolerated (a partially written artifact must not
+    kill planning over the rest of the directory)."""
+    by_figure: Dict[str, Dict[Tuple, Tuple[float, dict]]] = {}
+    for root, _dirs, files in sorted(os.walk(bench_dir)):
+        for name in sorted(files):
+            if not (name.startswith("BENCH_") and name.endswith(".json")):
+                continue
+            path = os.path.join(root, name)
+            try:
+                with open(path) as f:
+                    payload = json.load(f)
+            except (OSError, json.JSONDecodeError):
+                continue
+            figure = payload.get("figure") if isinstance(payload, dict) \
+                else None
+            points = payload.get("points") if isinstance(payload, dict) \
+                else None
+            if not figure or not isinstance(points, list):
+                continue
+            mtime = os.path.getmtime(path)
+            held = by_figure.setdefault(figure, {})
+            for p in points:
+                if not isinstance(p, dict):
+                    continue
+                key = _point_identity(p)
+                if key not in held or mtime > held[key][0]:
+                    held[key] = (mtime, p)
+    return {figure: [p for _, p in held.values()]
+            for figure, held in by_figure.items()}
+
+
 def plan_from_json(bench_dir: str, **kwargs) -> PlannedConfig:
-    """Plan from the BENCH json a ``benchmarks/run.py --emit-json DIR``
-    run left behind (missing files are tolerated — the planner works
-    from whichever sweeps were emitted)."""
-    fig9: List[dict] = []
-    fig10: List[dict] = []
-    p9 = os.path.join(bench_dir, FIG9_JSON)
-    p10 = os.path.join(bench_dir, FIG10_JSON)
-    if os.path.exists(p9):
-        fig9 = _load_points(p9)
-    if os.path.exists(p10):
-        fig10 = _load_points(p10)
+    """Plan from a *directory* of BENCH artifacts: every
+    ``BENCH_*.json`` under ``bench_dir`` (recursively) is merged per
+    figure with :func:`merge_bench_points` — identical configs keep the
+    freshest measurement — so the planner sees the union of however many
+    ``benchmarks/run.py --emit-json`` runs, wall-clock arms and service
+    sweeps accumulated, not just one run's files.  Missing figures are
+    tolerated; serve points (figure="serve") feed the replay-service
+    selection stage automatically."""
+    merged = merge_bench_points(bench_dir)
+    fig9 = merged.get("fig9", [])
+    fig10 = merged.get("fig10", [])
     if not fig9 and not fig10:
         raise FileNotFoundError(
-            f"neither {FIG9_JSON} nor {FIG10_JSON} found in {bench_dir!r} — "
+            f"no fig9/fig10 BENCH points found under {bench_dir!r} — "
             "run `python -m benchmarks.run --emit-json DIR` first")
     kwargs.setdefault("source", f"json:{bench_dir}")
+    kwargs.setdefault("serve_points", merged.get("serve", []))
     return plan(fig9, fig10, **kwargs)
 
 

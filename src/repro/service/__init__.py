@@ -1,0 +1,27 @@
+"""Replay-as-a-service (DESIGN.md §11).
+
+The transaction layer of ``core/replay.py`` recast as a standalone
+service: N independent ``PrioritizedReplay`` shards behind a router,
+multi-writer lazy appends with one tree-propagation ``flush`` per
+admission window, and a ``RateLimiter`` that generalizes the loop's
+``RatioSchedule`` into explicit flow control between decoupled actor
+and learner processes.
+"""
+
+from repro.service.rate_limiter import RateLimiter, ServiceStopped
+from repro.service.router import Router
+from repro.service.server import (ReplayService, ReplayServiceConfig,
+                                  serve)
+from repro.service.client import ReplayClient
+from repro.service.executor import ServiceExecutor
+
+__all__ = [
+    "RateLimiter",
+    "ServiceStopped",
+    "Router",
+    "ReplayService",
+    "ReplayServiceConfig",
+    "ReplayClient",
+    "ServiceExecutor",
+    "serve",
+]

@@ -1,0 +1,117 @@
+"""Client side of the replay service wire protocol (DESIGN.md §11).
+
+One long-lived TCP connection per worker; requests are serialized on a
+lock (each worker is single-threaded anyway — the lock guards against
+accidental sharing).  Blocking admissions (writer backpressure, sampler
+waits) happen server-side, so the client just waits on the socket; the
+socket timeout therefore defaults high and bounds *deadlock*, not flow
+control.
+"""
+
+from __future__ import annotations
+
+import pickle
+import socket
+import threading
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from repro.service.server import recv_msg, send_msg
+
+
+class ReplayClient:
+    def __init__(self, host: str, port: int, *, timeout: float = 300.0):
+        self.address = (host, port)
+        self._sock = socket.create_connection(self.address, timeout=timeout)
+        self._sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        self._lock = threading.Lock()
+
+    @classmethod
+    def from_address(cls, addr: str, **kw) -> "ReplayClient":
+        host, _, port = addr.rpartition(":")
+        return cls(host or "127.0.0.1", int(port), **kw)
+
+    def _call(self, cmd: str, **kw) -> Dict[str, Any]:
+        with self._lock:
+            send_msg(self._sock, (cmd, kw))
+            reply = recv_msg(self._sock)
+        if not reply.pop("ok", False):
+            raise RuntimeError(
+                f"replay service rejected {cmd}: "
+                f"{reply.get('error', 'unknown error')}")
+        return reply
+
+    # -- writer API ---------------------------------------------------------
+
+    def append(self, writer_id: str, items: Any, *,
+               returns: Optional[List[float]] = None,
+               timeout: Optional[float] = None) -> Dict[str, Any]:
+        items = _as_numpy(items)
+        return self._call("append", writer_id=writer_id, items=items,
+                          returns=returns, timeout=timeout)
+
+    # -- learner API --------------------------------------------------------
+
+    def sample(self, batch: int, beta: float = 0.4, *,
+               timeout: Optional[float] = None) -> Dict[str, Any]:
+        return self._call("sample", batch=batch, beta=float(beta),
+                          timeout=timeout)
+
+    def update_priorities(self, sample_id: int,
+                          td_errors: np.ndarray) -> bool:
+        return self._call("update_priorities", sample_id=sample_id,
+                          td_errors=np.asarray(td_errors))["applied"]
+
+    # -- param channel ------------------------------------------------------
+
+    def put_params(self, params: Any) -> int:
+        blob = pickle.dumps(_as_numpy(params),
+                            protocol=pickle.HIGHEST_PROTOCOL)
+        return self._call("put_params", blob=blob)["version"]
+
+    def get_params(self, min_version: int = 1,
+                   timeout: Optional[float] = None) -> Dict[str, Any]:
+        reply = self._call("get_params", min_version=min_version,
+                           timeout=timeout)
+        if reply.get("blob") is not None:
+            reply["params"] = pickle.loads(reply["blob"])
+        return reply
+
+    # -- lifecycle + stats --------------------------------------------------
+
+    def stats(self) -> Dict[str, Any]:
+        return self._call("stats")["stats"]
+
+    def stop(self) -> None:
+        self._call("stop")
+
+    def ping(self) -> bool:
+        return self._call("ping")["pong"]
+
+    def close(self) -> None:
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+
+
+def _as_numpy(tree: Any) -> Any:
+    import jax
+    return jax.tree.map(np.asarray, tree)
+
+
+def wait_for_service(host: str, port: int, timeout: float = 30.0) -> None:
+    """Poll until the server accepts (gang startup ordering)."""
+    import time
+    deadline = time.monotonic() + timeout
+    while True:
+        try:
+            with socket.create_connection((host, port), timeout=1.0):
+                return
+        except OSError:
+            if time.monotonic() >= deadline:
+                raise RuntimeError(
+                    f"replay service at {host}:{port} not reachable "
+                    f"within {timeout:.0f}s") from None
+            time.sleep(0.2)

@@ -1,0 +1,246 @@
+"""In-process service executor (DESIGN.md §11).
+
+``ServiceExecutor`` drives a ``ReplayService``'s shard states with the
+split actor/learner programs of ``runtime/loop.py`` — the host owns the
+window loop, the ``RateLimiter`` owns the learn cadence, and every
+window compiles to ONE jit program composed from the service's pure
+shard ops.  This is the single-process form of the decoupled runtime:
+the same ops the TCP server applies per request, driven lockstep.
+
+**Equivalence contract** (tested in tests/test_service.py): at
+``n_shards=1`` with the limiter derived from the loop's ratio
+(``RateLimiter.for_loop``), the executor is bit-exact with
+``FusedExecutor`` from the same seed.  Two ingredients make that true:
+
+- the window program replicates ``make_step``'s op order — actor →
+  insert_begin(lazy) → flush (the admission window boundary) → L×
+  (sample → learn → priority write-back, inter-learn flushes) →
+  insert_commit(lazy) — and its exact rng chain
+  (``split → fold_in(shard) → split3``, ``fold_in(k_sample, i)`` per
+  learn), all inside one jit so XLA sees the same program;
+- the greedy limiter drain (take batch-sized sample admissions until
+  the debt band blocks) reproduces ``RatioSchedule``'s cadence exactly
+  when ``error_buffer = max(batch, spi · n_envs)`` — the per-window
+  sample quota — and ``warmup`` is a multiple of the learn period's env
+  steps (otherwise the limiter starts learning up to one period earlier
+  than the modulo-phased schedule; the *ratio* still holds, the phase
+  differs).
+
+At ``n_shards > 1`` the window routes each transition batch round-robin
+across shards and samples stratified (B/N per shard) with importance
+weights normalized against the cross-shard global distribution — the
+host-composed form of ``ShardedPrioritizedReplay``'s psum/pmax math.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.agents.base import Agent
+from repro.runtime.executors import Executor
+from repro.runtime.loop import (METRIC_KEYS, LoopConfig, LoopState,
+                                RatioSchedule, epsilon_schedule,
+                                make_actor_step, make_learner_step)
+from repro.service.rate_limiter import RateLimiter
+from repro.service.server import ReplayService
+
+Pytree = Any
+
+
+class ServiceExecutor(Executor):
+    """Train against an in-process ``ReplayService``.
+
+    The service's shard states ride inside the carried ``LoopState``
+    (``state.replay`` is the tuple of shard states), so the standard
+    ``Executor.run`` driver works unchanged; the service object supplies
+    the pure shard ops, the router policy and the rate limiter.
+    """
+
+    def __init__(
+        self,
+        agent: Agent,
+        service: ReplayService,
+        env_fn: Callable[[int], tuple],
+        cfg: LoopConfig,
+        n_envs: int,
+        scan_chunk: int = 64,
+        rate_limiter: Optional[RateLimiter] = None,
+    ):
+        n = service.config.n_shards
+        if cfg.batch_size % n:
+            raise ValueError(
+                f"batch_size={cfg.batch_size} must divide evenly over "
+                f"n_shards={n} (stratified sampling draws B/N per shard)")
+        self.agent = agent
+        self.service = service
+        self.cfg = cfg
+        self.n_envs = n_envs
+        self.n_shards = n
+        self.scan_chunk = scan_chunk
+        self.spec, self._v_reset, self._v_step = env_fn(n_envs)
+        self.schedule = RatioSchedule.from_config(cfg, n_envs)
+        self.limiter = (rate_limiter or service.limiter
+                        or RateLimiter.from_schedule(
+                            self.schedule, cfg.batch_size, cfg.warmup))
+        self._window_count = 0
+        self._actor = make_actor_step(agent, self._v_step, n_envs)
+        self._learn1 = make_learner_step(agent, service.replay, cfg)
+        self._windows: Dict[Tuple[int, int], Callable] = {}
+        self._chunks: Dict[int, Callable] = {}
+
+    # -- the window program (one jit per (target shard, learn count)) -------
+
+    def _window(self, target: int, n_learns: int) -> Callable:
+        rb, cfg, n = self.service.replay, self.cfg, self.n_shards
+        per = cfg.batch_size // n
+
+        def stratified_learn(agent_state, states, ki):
+            # host-composed ShardedPrioritizedReplay math: global stats
+            # and the global max normalizer reduce over the shard tuple
+            # instead of psum/pmax over a mesh axis
+            g_tot = sum(s.tree[0] for s in states)
+            g_cnt = sum(s.count for s in states)
+            idxs, pris, parts = [], [], []
+            for i, s in enumerate(states):
+                u = jax.random.uniform(jax.random.fold_in(ki, i), (per,))
+                if rb.config.fused_sample_gather_resolved:
+                    idx, pri, items = rb.ops.sample_gather(
+                        rb.spec, s.tree, u, s.storage)
+                else:
+                    idx, pri = rb.ops.sample(rb.spec, s.tree, u)
+                    items = rb._gather(s.storage, idx)
+                idxs.append(idx)
+                pris.append(pri)
+                parts.append(items)
+            pri = jnp.concatenate(pris)
+            prob = pri / jnp.maximum(g_tot, 1e-12)
+            w = (jnp.maximum(g_cnt, 1).astype(jnp.float32)
+                 * jnp.maximum(prob, 1e-12)) ** (-cfg.beta)
+            w = jnp.where(pri > 0, w, 0.0)
+            w = w / jnp.maximum(jnp.max(w), 1e-12)
+            items = jax.tree.map(lambda *xs: jnp.concatenate(xs), *parts)
+            agent_state, metrics, td = self.agent.learn(
+                agent_state, items, w)
+            states = tuple(
+                rb.update_priorities(s, idxs[i], td[i * per:(i + 1) * per],
+                                     lazy=True)
+                for i, s in enumerate(states))
+            return agent_state, states, metrics["loss"]
+
+        def window(state: LoopState):
+            # the exact rng chain of make_step (shard_id 0: the service
+            # executor is one writer fleet — per-process decorrelation
+            # happens through the service, not an rng fold)
+            rng_next, k = jax.random.split(state.rng)
+            k = jax.random.fold_in(k, 0)
+            k_act, k_env, k_sample = jax.random.split(k, 3)
+            eps = epsilon_schedule(cfg, state.env_steps)
+
+            # 1. actor program
+            env_state, obs_next, ep_ret, last_ret, transitions = self._actor(
+                state.agent, state.env_state, state.obs,
+                state.episode_return, state.last_return, k_act, k_env, eps)
+
+            # 2. writer transaction phase 1 on the routed shard
+            states = list(state.replay)
+            states[target], slots = rb.insert_begin(states[target],
+                                                    self.n_envs, lazy=True)
+
+            # 3. the admission-window boundary: one propagation pass per
+            #    shard with pending lazy writes
+            states = [rb.flush(s) for s in states]
+
+            # 4. learner program, as many times as the limiter admitted
+            agent_state = state.agent
+            loss = jnp.zeros(())
+            for i in range(n_learns):
+                if i:
+                    states = [rb.flush(s) for s in states]
+                ki = jax.random.fold_in(k_sample, i)
+                if n == 1:
+                    agent_state, states[0], lmetrics, _ = self._learn1(
+                        agent_state, states[0], ki)
+                    loss = loss + lmetrics["loss"]
+                else:
+                    agent_state, states, l = stratified_learn(
+                        agent_state, tuple(states), ki)
+                    states = list(states)
+                    loss = loss + l
+
+            # 5. writer transaction phase 2
+            states[target] = rb.insert_commit(states[target], slots,
+                                              transitions, lazy=True)
+
+            new_state = state._replace(
+                agent=agent_state,
+                replay=tuple(states),
+                env_state=env_state,
+                obs=obs_next,
+                rng=rng_next,
+                env_steps=state.env_steps + self.n_envs,
+                episode_return=ep_ret,
+                last_return=last_ret,
+                learn_steps=state.learn_steps + n_learns,
+            )
+            metrics = {
+                "loss": loss / max(1, n_learns),
+                "mean_episode_return": jnp.mean(last_ret),
+                "env_steps": new_state.env_steps,
+                "learn_steps": new_state.learn_steps,
+                "buffer_size": sum(s.count for s in states),
+                "epsilon": eps,
+                "compress_error_norm": jnp.zeros(()),
+            }
+            assert set(metrics) == set(METRIC_KEYS)
+            return new_state, metrics
+
+        return jax.jit(window)
+
+    # -- Executor API -------------------------------------------------------
+
+    def _build_chunk(self, length: int) -> Callable:
+        def run(state: LoopState):
+            history = []
+            for _ in range(length):
+                # greedy limiter drain: the learn cadence is whatever
+                # flow control admits — RatioSchedule generalized
+                n_learns = 0
+                while self.limiter.can_sample(self.cfg.batch_size):
+                    self.limiter.note_sample(self.cfg.batch_size)
+                    n_learns += 1
+                target = self.service.router.route(
+                    f"window-{self._window_count}")
+                self._window_count += 1
+                key = (target, n_learns)
+                fn = self._windows.get(key)
+                if fn is None:
+                    fn = self._windows[key] = self._window(*key)
+                state, metrics = fn(state)
+                self.limiter.note_insert(self.n_envs)
+                history.append(metrics)
+            stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *history)
+            return state, stacked
+        return run
+
+    def init(self, key: jax.Array) -> LoopState:
+        k1, k2, k3 = jax.random.split(key, 3)
+        env_state, obs = self._v_reset(jax.random.fold_in(k1, 0))
+        agent_state = self.agent.init(k2)
+        return LoopState(
+            agent=agent_state,
+            replay=tuple(self.service.replay.init()
+                         for _ in range(self.n_shards)),
+            env_state=env_state,
+            obs=obs,
+            rng=k3,
+            env_steps=jnp.zeros((), jnp.int32),
+            episode_return=jnp.zeros((self.n_envs,)),
+            last_return=jnp.zeros((self.n_envs,)),
+            learn_steps=jnp.zeros((), jnp.int32),
+        )
+
+    def realized_samples_per_insert(self) -> float:
+        return self.limiter.realized_samples_per_insert()

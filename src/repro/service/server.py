@@ -1,0 +1,379 @@
+"""The replay server (DESIGN.md §11).
+
+``ReplayService`` is the transaction layer of ``core/replay.py`` recast
+as a long-lived service: N independent ``PrioritizedReplay`` shards
+addressed by a ``Router``, written by any number of writers through the
+lazy ledger (every append is leaf-only + ledger bump; the interior
+rebuild happens in **one** ``flush`` per shard per admission window —
+the window boundary is the next sample that touches the shard), and
+sampled by learners with importance weights computed against the
+*global* cross-shard priority distribution (the same stratified-sample
+math as ``ShardedPrioritizedReplay``, with the psum/pmax collectives
+replaced by host-side reductions over the shard list).
+
+Flow control is delegated to the ``RateLimiter``: append admissions
+back-pressure writers, sample admissions block the learner, and the
+realized samples-per-insert ratio is pinned to the configured one.
+
+The wire layer is deliberately minimal: length-prefixed pickles over
+localhost TCP (the gang launcher binds 127.0.0.1 and every worker runs
+on the same host — this is a research harness transport, not an
+authenticated RPC stack).  All numerical payloads cross as numpy.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import pickle
+import socket
+import socketserver
+import struct
+import threading
+from collections import deque
+from functools import partial
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.replay import PrioritizedReplay, ReplayConfig, ReplayState
+from repro.service.rate_limiter import RateLimiter, ServiceStopped
+from repro.service.router import Router
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplayServiceConfig:
+    capacity_per_shard: int
+    n_shards: int = 1
+    fanout: int = 128
+    alpha: float = 0.6
+    eps: float = 1e-6
+    backend: Optional[str] = None   # TreeOps backend: "xla" | "pallas"
+    fused_sample_gather: Optional[bool] = None
+    router: str = "hash"            # Router.POLICIES
+    seed: int = 0                   # server-side sample rng stream
+
+    def __post_init__(self):
+        if self.n_shards < 1:
+            raise ValueError(f"n_shards={self.n_shards}: must be ≥ 1")
+        if self.capacity_per_shard < 1:
+            raise ValueError(
+                f"capacity_per_shard={self.capacity_per_shard}: must be ≥ 1")
+
+
+class ReplayService:
+    """Host-side service core.  Thread-safe: every shard mutation runs
+    under one lock (the jitted shard ops release the GIL into XLA, so
+    writer handler threads still overlap compute with the wire); blocking
+    admissions happen *outside* the lock in the ``RateLimiter``."""
+
+    def __init__(self, config: ReplayServiceConfig, example_item: Pytree,
+                 rate_limiter: Optional[RateLimiter] = None):
+        self.config = config
+        self.replay = PrioritizedReplay(
+            ReplayConfig(
+                capacity=config.capacity_per_shard,
+                fanout=config.fanout,
+                alpha=config.alpha,
+                eps=config.eps,
+                backend=config.backend,
+                fused_sample_gather=config.fused_sample_gather,
+            ),
+            example_item,
+        )
+        self.router = Router(config.n_shards, config.router)
+        self.limiter = rate_limiter
+        self.states: List[ReplayState] = [
+            self.replay.init() for _ in range(config.n_shards)]
+        self._lock = threading.RLock()
+        self._stopped = threading.Event()
+        # jitted shard ops — one cache for all shards (same shapes)
+        self._append_op = jax.jit(partial(self.replay.append, lazy=True))
+        self._update_op = jax.jit(
+            partial(self.replay.update_priorities, lazy=True))
+        self._sample_fns: Dict[int, Any] = {}
+        self._sample_key = jax.random.PRNGKey(config.seed)
+        # counters + learner-facing bookkeeping
+        self._inserts = 0
+        self._samples = 0
+        self._sample_count = 0
+        self._outstanding: Dict[int, Tuple[np.ndarray, ...]] = {}
+        # param channel (PUT/GET with versions; blobs are opaque bytes)
+        self._params_cond = threading.Condition()
+        self._params_blob: Optional[bytes] = None
+        self._params_version = 0
+        # writer-reported finished-episode returns (progress metric)
+        self._returns: deque = deque(maxlen=256)
+
+    # -- write path ---------------------------------------------------------
+
+    def append(self, writer_id: str, items: Pytree, *,
+               returns: Optional[List[float]] = None,
+               timeout: Optional[float] = None) -> Dict[str, Any]:
+        """One writer transaction: rate-limited admission, route to a
+        shard, lazy leaf-only append (sampleable at the shard's next
+        flush).  Returns progress the writer needs (global insert clock
+        for its ε-schedule, current params version, stop flag) so the
+        common actor loop costs one round trip per batch."""
+        batch = int(jax.tree.leaves(items)[0].shape[0])
+        if self.limiter is not None:
+            try:
+                self.limiter.await_insert(batch, timeout)
+            except ServiceStopped:
+                return {"stopped": True, "inserts": self.total_inserts(),
+                        "params_version": self.params_version()}
+        shard = self.router.route(writer_id)
+        with self._lock:
+            self.states[shard] = self._append_op(self.states[shard], items)
+            self._inserts += batch
+            if returns:
+                self._returns.extend(float(r) for r in returns)
+            total = self._inserts
+        return {"stopped": self._stopped.is_set(), "shard": shard,
+                "inserts": total, "params_version": self.params_version()}
+
+    # -- read path ----------------------------------------------------------
+
+    def _make_sample_fn(self, batch: int):
+        """One jit per batch size: flush every shard that has pending
+        lazy writes (the admission-window boundary), then draw the
+        stratified batch with globally-normalized importance weights."""
+        rb, n = self.replay, self.config.n_shards
+        if batch % n:
+            raise ValueError(
+                f"sample batch={batch} must divide evenly over "
+                f"n_shards={n} (stratified sampling draws B/N per shard)")
+        per = batch // n
+
+        @jax.jit
+        def fn(states: Tuple[ReplayState, ...], rng, beta):
+            states = tuple(rb.flush(s) for s in states)
+            if n == 1:
+                idx, items, w = rb.sample(states[0], rng, batch, beta)
+                return states, (idx,), items, w
+            g_tot = sum(s.tree[0] for s in states)
+            g_cnt = sum(s.count for s in states)
+            idxs, pris, parts = [], [], []
+            for i, s in enumerate(states):
+                u = jax.random.uniform(jax.random.fold_in(rng, i), (per,))
+                if rb.config.fused_sample_gather_resolved:
+                    idx, pri, items = rb.ops.sample_gather(
+                        rb.spec, s.tree, u, s.storage)
+                else:
+                    idx, pri = rb.ops.sample(rb.spec, s.tree, u)
+                    items = rb._gather(s.storage, idx)
+                idxs.append(idx)
+                pris.append(pri)
+                parts.append(items)
+            pri = jnp.concatenate(pris)
+            prob = pri / jnp.maximum(g_tot, 1e-12)
+            w = (jnp.maximum(g_cnt, 1).astype(jnp.float32)
+                 * jnp.maximum(prob, 1e-12)) ** (-beta)
+            w = jnp.where(pri > 0, w, 0.0)
+            w = w / jnp.maximum(jnp.max(w), 1e-12)
+            items = jax.tree.map(lambda *xs: jnp.concatenate(xs), *parts)
+            return states, tuple(idxs), items, w
+
+        return fn
+
+    def sample(self, batch: int, beta: float = 0.4, *,
+               timeout: Optional[float] = None) -> Dict[str, Any]:
+        """One learner read: rate-limited admission, per-window flush,
+        stratified draw.  Returns a ``sample_id`` handle the learner
+        echoes into ``update_priorities`` — the service keeps the
+        (shard → indices) map server-side so priorities route back
+        without the learner knowing the sharding."""
+        if self.limiter is not None:
+            try:
+                self.limiter.await_sample(batch, timeout)
+            except ServiceStopped:
+                return {"stopped": True}
+        fn = self._sample_fns.setdefault(batch, self._make_sample_fn(batch))
+        with self._lock:
+            rng = jax.random.fold_in(self._sample_key, self._sample_count)
+            states, idxs, items, w = fn(tuple(self.states), rng,
+                                        jnp.float32(beta))
+            self.states[:] = states
+            self._sample_count += 1
+            self._samples += batch
+            sid = self._sample_count
+            self._outstanding[sid] = tuple(np.asarray(i) for i in idxs)
+            if len(self._outstanding) > 64:
+                # a learner that never writes priorities back leaks
+                # handles; drop the oldest (write-after-read is already
+                # tolerated, a dropped update is a stale priority)
+                self._outstanding.pop(next(iter(self._outstanding)))
+        return {
+            "stopped": self._stopped.is_set(),
+            "sample_id": sid,
+            "items": jax.tree.map(np.asarray, items),
+            "weights": np.asarray(w),
+        }
+
+    def update_priorities(self, sample_id: int,
+                          td_errors: np.ndarray) -> Dict[str, Any]:
+        with self._lock:
+            idxs = self._outstanding.pop(sample_id, None)
+            if idxs is None:
+                return {"applied": False}  # handle aged out — stale is ok
+            td = np.asarray(td_errors)
+            off = 0
+            for shard, idx in enumerate(idxs):
+                chunk = td[off:off + idx.shape[0]]
+                off += idx.shape[0]
+                self.states[shard] = self._update_op(
+                    self.states[shard], jnp.asarray(idx), jnp.asarray(chunk))
+        return {"applied": True}
+
+    # -- param channel ------------------------------------------------------
+
+    def put_params(self, blob: bytes) -> int:
+        with self._params_cond:
+            self._params_blob = blob
+            self._params_version += 1
+            self._params_cond.notify_all()
+            return self._params_version
+
+    def get_params(self, min_version: int = 1,
+                   timeout: Optional[float] = None) -> Dict[str, Any]:
+        with self._params_cond:
+            if not self._params_cond.wait_for(
+                    lambda: (self._params_version >= min_version
+                             or self._stopped.is_set()),
+                    timeout):
+                raise TimeoutError(
+                    f"get_params: version ≥ {min_version} not published "
+                    f"within {timeout}s (at {self._params_version})")
+            return {"version": self._params_version,
+                    "blob": self._params_blob,
+                    "stopped": self._stopped.is_set()}
+
+    def params_version(self) -> int:
+        with self._params_cond:
+            return self._params_version
+
+    # -- lifecycle + stats --------------------------------------------------
+
+    def stop(self) -> None:
+        self._stopped.set()
+        if self.limiter is not None:
+            self.limiter.stop()
+        with self._params_cond:
+            self._params_cond.notify_all()
+
+    @property
+    def stopped(self) -> bool:
+        return self._stopped.is_set()
+
+    def total_inserts(self) -> int:
+        with self._lock:
+            return self._inserts
+
+    def stats(self) -> Dict[str, Any]:
+        with self._lock:
+            per_shard = [int(s.count) for s in self.states]
+            recent = list(self._returns)
+            out = {
+                "inserts": self._inserts,
+                "samples": self._samples,
+                "sample_calls": self._sample_count,
+                "per_shard_count": per_shard,
+                "params_version": self.params_version(),
+                "mean_recent_return": (float(np.mean(recent))
+                                       if recent else 0.0),
+                "n_returns": len(recent),
+                "stopped": self._stopped.is_set(),
+                "router": self.router.describe(),
+            }
+        if self.limiter is not None:
+            out["rate_limiter"] = self.limiter.stats()
+        return out
+
+
+# -- wire layer (length-prefixed pickle over localhost TCP) ------------------
+
+_LEN = struct.Struct("!Q")
+
+
+def send_msg(sock: socket.socket, obj: Any) -> None:
+    blob = pickle.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL)
+    sock.sendall(_LEN.pack(len(blob)) + blob)
+
+
+def recv_msg(sock: socket.socket) -> Any:
+    header = _recv_exact(sock, _LEN.size)
+    (n,) = _LEN.unpack(header)
+    return pickle.loads(_recv_exact(sock, n))
+
+
+def _recv_exact(sock: socket.socket, n: int) -> bytes:
+    buf = bytearray()
+    while len(buf) < n:
+        chunk = sock.recv(n - len(buf))
+        if not chunk:
+            raise ConnectionError("replay-service peer closed connection")
+        buf.extend(chunk)
+    return bytes(buf)
+
+
+class _Handler(socketserver.BaseRequestHandler):
+    def handle(self):  # one connection = one client, many requests
+        service: ReplayService = self.server.service  # type: ignore
+        while True:
+            try:
+                cmd, kw = recv_msg(self.request)
+            except (ConnectionError, EOFError):
+                return
+            try:
+                reply = self._dispatch(service, cmd, kw)
+                reply.setdefault("ok", True)
+            except Exception as e:  # noqa: BLE001 — cross the wire, don't die
+                reply = {"ok": False, "error": f"{type(e).__name__}: {e}"}
+            try:
+                send_msg(self.request, reply)
+            except (ConnectionError, BrokenPipeError):
+                return
+
+    @staticmethod
+    def _dispatch(service: ReplayService, cmd: str, kw: dict) -> dict:
+        if cmd == "append":
+            return service.append(**kw)
+        if cmd == "sample":
+            return service.sample(**kw)
+        if cmd == "update_priorities":
+            return service.update_priorities(**kw)
+        if cmd == "put_params":
+            return {"version": service.put_params(**kw)}
+        if cmd == "get_params":
+            return service.get_params(**kw)
+        if cmd == "stats":
+            return {"stats": service.stats()}
+        if cmd == "stop":
+            service.stop()
+            return {"stopped": True}
+        if cmd == "ping":
+            return {"pong": True}
+        raise ValueError(f"unknown replay-service command {cmd!r}")
+
+
+class _Server(socketserver.ThreadingTCPServer):
+    daemon_threads = True
+    allow_reuse_address = True
+    # blocking admissions park handler threads; the default request
+    # queue of 5 is fine (one connection per worker, long-lived)
+
+
+def serve(service: ReplayService, host: str = "127.0.0.1",
+          port: int = 0) -> Tuple[_Server, int]:
+    """Start serving on a background thread; returns (server, bound
+    port).  ``port=0`` lets the OS pick — the gang launcher passes the
+    bound port to the workers.  Call ``server.shutdown()`` to stop."""
+    server = _Server((host, port), _Handler)
+    server.service = service  # type: ignore[attr-defined]
+    thread = threading.Thread(target=server.serve_forever,
+                              name="replay-service", daemon=True)
+    thread.start()
+    return server, server.server_address[1]

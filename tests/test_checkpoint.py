@@ -95,3 +95,54 @@ def test_elastic_reshard_roundtrip(tmp_path):
     specs = {"w": P(("pod", "data"), "model")}   # checkpointed at 2 pods
     out = reshard(restored, specs, mesh)
     np.testing.assert_array_equal(np.asarray(out["w"]), np.asarray(t["w"]))
+
+
+def test_elastic_reshard_agent_state(tmp_path):
+    """The service learner's resume path (launch/multiprocess.py): a full
+    AgentState — registered dataclass containers, optax NamedTuple
+    chains, integer step counters — checkpoints on one topology and
+    reshards replicated onto the current 1-device mesh in one call."""
+    from repro.agents.dqn import DQNConfig, make_dqn
+    from repro.envs.classic import make_vec
+
+    spec, _, _ = make_vec("cartpole", 1)
+    agent = make_dqn(spec, DQNConfig())
+    state = agent.init(jax.random.PRNGKey(3))
+
+    mgr = CheckpointManager(str(tmp_path))
+    payload = {"agent": state, "learn_step": np.asarray(41, np.int32)}
+    mgr.save(41, payload)
+
+    zeros = {"agent": jax.tree.map(jnp.zeros_like, state),
+             "learn_step": np.zeros((), np.int32)}
+    step, restored = mgr.restore_latest(zeros)
+    assert step == 41
+
+    mesh = jax.sharding.Mesh(np.asarray(jax.devices()[:1]), ("data",))
+    specs = {"agent": jax.tree.map(lambda _: P(), restored["agent"]),
+             "learn_step": None}
+    out = reshard(restored, specs, mesh)
+
+    assert int(out["learn_step"]) == 41
+    ref = jax.tree_util.tree_leaves(state)
+    got = jax.tree_util.tree_leaves(out["agent"])
+    assert len(ref) == len(got)
+    for a, b in zip(ref, got):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+    for leaf in got:    # every leaf landed fully replicated on the mesh
+        assert leaf.sharding.is_fully_replicated
+
+
+def test_elastic_reshard_mixed_specs():
+    """Spec trees mix PartitionSpec leaves and None (= replicated); a
+    sharded spec whose axes are absent from the mesh degrades to
+    replicated instead of erroring (elastic shrink)."""
+    mesh = jax.sharding.Mesh(np.asarray(jax.devices()[:1]), ("data",))
+    t = {"a": jnp.arange(8.0), "nest": {"b": jnp.ones((4, 4))}}
+    specs = {"a": P("model"),            # 'model' not in this mesh
+             "nest": {"b": None}}
+    out = reshard(t, specs, mesh)
+    np.testing.assert_array_equal(np.asarray(out["a"]), np.arange(8.0))
+    assert out["a"].sharding.is_fully_replicated
+    assert out["nest"]["b"].sharding.is_fully_replicated

@@ -551,3 +551,160 @@ def test_quickstart_trains_from_plan_json(tmp_path):
     assert r.returncode == 0, r.stdout + r.stderr
     assert "planner-selected sharded executor on 2 device(s)" in r.stdout
     assert "final mean episode return" in r.stdout
+
+
+# -- replay-service degree of freedom (DESIGN.md §11) ------------------------
+
+
+def _serve_point(writers=2, n_shards=1, inserts=2000.0, samples=16000.0,
+                 spi=8.0, batch=64):
+    return {"writers": writers, "n_shards": n_shards, "spi": spi,
+            "batch_size": batch, "inserts_per_s": inserts,
+            "samples_per_s": samples, "realized_spi": spi,
+            "repeats": 3, "rel_spread": 0.01}
+
+
+def test_select_replay_service_feasibility():
+    # spi target = 64/8 = 8 → need 8·insert_rate samples/s
+    pts = [_serve_point(n_shards=1, inserts=2000.0, samples=16000.0),
+           _serve_point(n_shards=2, inserts=4000.0, samples=32000.0)]
+    # both clear 1000 inserts/s and 8000 samples/s — fewest shards win
+    assert planner.select_replay_service(
+        pts, insert_rate=1000.0, update_interval=8,
+        batch_size=64) == (1, 8.0)
+    # only the 2-shard config clears 3000 inserts/s
+    assert planner.select_replay_service(
+        pts, insert_rate=3000.0, update_interval=8,
+        batch_size=64) == (2, 8.0)
+    # nothing clears 5000 inserts/s → keep the replay in-loop
+    assert planner.select_replay_service(
+        pts, insert_rate=5000.0, update_interval=8,
+        batch_size=64) == (0, 0.0)
+    # insert rate fine but sample rate short → in-loop
+    assert planner.select_replay_service(
+        [_serve_point(inserts=2000.0, samples=100.0)],
+        insert_rate=1000.0, update_interval=8, batch_size=64) == (0, 0.0)
+    # batch must divide over shards (stratified sampling)
+    assert planner.select_replay_service(
+        [_serve_point(n_shards=3, inserts=9000.0, samples=72000.0)],
+        insert_rate=1000.0, update_interval=8, batch_size=64) == (0, 0.0)
+    assert planner.select_replay_service(
+        [], insert_rate=1.0, update_interval=1, batch_size=64) == (0, 0.0)
+
+
+def test_select_replay_service_headroom_tiebreak():
+    roomy = _serve_point(writers=1, inserts=8000.0, samples=64000.0)
+    tight = _serve_point(writers=4, inserts=1100.0, samples=8800.0)
+    for pts in ([roomy, tight], [tight, roomy]):    # order-independent
+        shards, spi = planner.select_replay_service(
+            pts, insert_rate=1000.0, update_interval=8, batch_size=64)
+        assert (shards, spi) == (1, 8.0)
+
+
+def test_plan_threads_serve_points_into_config():
+    fig9 = [_fig9_point("fused", steps=1000.0)]
+    serve = [_serve_point(n_shards=2, inserts=4000.0, samples=32000.0)]
+    pc = planner.plan(fig9, [], serve_points=serve, update_interval=8,
+                      batch_size=64)
+    assert pc.n_replay_shards == 2
+    assert pc.samples_per_insert == 8.0
+    assert "replay service" in pc.describe()
+    # round trip keeps the service shape
+    assert planner.PlannedConfig(**pc.to_dict()) == pc
+    # no serve points → in-loop replay, and describe stays quiet
+    pc0 = planner.plan(fig9, [])
+    assert (pc0.n_replay_shards, pc0.samples_per_insert) == (0, 0.0)
+    assert "replay service" not in pc0.describe()
+
+
+def test_planned_config_service_validation():
+    with pytest.raises(ValueError, match="n_replay_shards"):
+        planner.PlannedConfig(backend="fused", n_replay_shards=-1)
+    with pytest.raises(ValueError, match="samples_per_insert"):
+        planner.PlannedConfig(backend="fused", samples_per_insert=4.0)
+    with pytest.raises(ValueError, match="samples_per_insert"):
+        planner.PlannedConfig(backend="fused", n_replay_shards=1,
+                              samples_per_insert=-1.0)
+
+
+def test_merge_bench_points_newest_wins(tmp_path):
+    old = tmp_path / "old"
+    new = tmp_path / "nested" / "new"
+    old.mkdir()
+    new.mkdir(parents=True)
+    stale = _fig9_point("fused", steps=111.0)
+    fresh = _fig9_point("fused", steps=999.0)    # same identity, new rate
+    other = _fig9_point("async", publish_interval=4, steps=500.0)
+    (old / planner.FIG9_JSON).write_text(json.dumps(
+        {"figure": "fig9", "metric": "env_steps_per_s",
+         "points": [stale, other]}))
+    (new / planner.FIG9_JSON).write_text(json.dumps(
+        {"figure": "fig9", "metric": "env_steps_per_s",
+         "points": [fresh]}))
+    os.utime(old / planner.FIG9_JSON, (1_000_000, 1_000_000))
+    os.utime(new / planner.FIG9_JSON, (2_000_000, 2_000_000))
+    # plan envelopes and junk are skipped, not fatal
+    (tmp_path / "BENCH_plan.json").write_text(json.dumps(
+        {"figure": "plan", "config": {}}))
+    (tmp_path / "BENCH_broken.json").write_text("{not json")
+
+    merged = planner.merge_bench_points(str(tmp_path))
+    fig9 = merged["fig9"]
+    assert len(fig9) == 2
+    by_backend = {p["backend"]: p for p in fig9}
+    assert by_backend["fused"]["env_steps_per_s"] == 999.0   # freshest wins
+    assert by_backend["async"]["env_steps_per_s"] == 500.0
+
+
+def test_plan_from_json_merges_serve(tmp_path):
+    (tmp_path / planner.FIG9_JSON).write_text(json.dumps(
+        {"figure": "fig9", "metric": "env_steps_per_s",
+         "points": [_fig9_point("fused", steps=1200.0)]}))
+    (tmp_path / planner.SERVE_JSON).write_text(json.dumps(
+        {"figure": "serve", "metric": "inserts_per_s",
+         "points": [_serve_point(inserts=40000.0, samples=320000.0)]}))
+    pc = planner.plan_from_json(str(tmp_path), update_interval=8,
+                                batch_size=64)
+    assert pc.backend == "fused"
+    assert pc.n_replay_shards == 1
+    assert pc.samples_per_insert == 8.0
+
+
+def test_schema_serve_payloads():
+    from benchmarks import schema
+
+    good = {"figure": "serve", "metric": "inserts_per_s", "smoke": True,
+            "points": [_serve_point()]}
+    assert schema.validate(good) == "serve"
+    bad = _serve_point()
+    del bad["samples_per_s"]
+    with pytest.raises(schema.SchemaError, match="samples_per_s"):
+        schema.validate({"figure": "serve", "metric": "inserts_per_s",
+                         "points": [bad]})
+    bad = _serve_point()
+    bad["n_shards"] = "two"
+    with pytest.raises(schema.SchemaError, match="n_shards"):
+        schema.validate({"figure": "serve", "metric": "inserts_per_s",
+                         "points": [bad]})
+
+
+def test_executor_from_plan_replay_service():
+    from repro.runtime.executors import executor_from_plan
+    from repro.service import ServiceExecutor
+
+    agent, env_fn, example = _agent_and_example()
+    cfg = LoopConfig(batch_size=32, warmup=64, epsilon=0.3)
+    pc = planner.PlannedConfig(backend="fused", n_envs=4, update_interval=4,
+                               n_replay_shards=2, samples_per_insert=8.0)
+    ex = executor_from_plan(pc, agent, env_fn, cfg, example)
+    assert isinstance(ex, ServiceExecutor)
+    assert ex.n_shards == 2
+    assert ex.limiter.samples_per_insert == 8.0
+    state, hist = ex.train(48, jax.random.PRNGKey(0))
+    assert int(hist["env_steps"][-1]) == 192
+
+    # a device mesh and a replay service cannot be combined
+    pc = planner.PlannedConfig(backend="sharded", n_data=1, n_envs=4,
+                               n_replay_shards=1)
+    with pytest.raises(ValueError, match="mesh"):
+        executor_from_plan(pc, agent, env_fn, cfg, example)

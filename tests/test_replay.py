@@ -133,7 +133,7 @@ def test_insert_batch_larger_than_capacity_rejected():
 def test_kernel_backed_buffer_equivalent():
     rb_j = make(capacity=512)
     rb_k = PrioritizedReplay(
-        ReplayConfig(capacity=512, fanout=128, use_kernels=True), EXAMPLE)
+        ReplayConfig(capacity=512, fanout=128, backend="pallas"), EXAMPLE)
     st_j, st_k = rb_j.init(), rb_k.init()
     data = items(256, seed=3)
     st_j, st_k = rb_j.insert(st_j, data), rb_k.insert(st_k, data)

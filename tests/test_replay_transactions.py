@@ -159,38 +159,32 @@ def test_fused_sample_gather_matches_split(backend):
         assert it_f["action"].dtype == jnp.int32
 
 
-# -- the tree_backend alias fix -----------------------------------------------
+# -- tree_backend selection (post use_kernels removal) ------------------------
 
 
-def test_use_kernels_conflicting_backend_raises():
-    """Regression: use_kernels=True used to silently override an
-    explicit backend="xla"."""
-    with pytest.raises(ValueError, match="conflicting"):
-        PrioritizedReplay(
-            ReplayConfig(capacity=64, backend="xla", use_kernels=True),
-            EXAMPLE)
-    # the redundant-but-consistent spelling stays allowed (deprecated)
-    with pytest.warns(DeprecationWarning, match="use_kernels"):
-        rb = PrioritizedReplay(
-            ReplayConfig(capacity=64, backend="pallas", use_kernels=True),
-            EXAMPLE)
-    assert rb.config.tree_backend == "pallas"
-    with pytest.warns(DeprecationWarning, match="use_kernels"):
-        rb = PrioritizedReplay(
-            ReplayConfig(capacity=64, use_kernels=True), EXAMPLE)
-    assert rb.config.tree_backend == "pallas"
+def test_use_kernels_alias_is_gone():
+    """The deprecated ``use_kernels`` alias completed its deprecation
+    cycle: the field no longer exists on either config, and backend
+    selection goes through ``backend=`` alone."""
+    with pytest.raises(TypeError, match="use_kernels"):
+        ReplayConfig(capacity=64, use_kernels=True)
     assert ReplayConfig(capacity=64).tree_backend == "xla"
     assert ReplayConfig(capacity=64, backend="pallas").tree_backend == "pallas"
 
 
-def test_sharded_config_conflict_raises_too():
-    from repro.core.distributed import (ShardedPrioritizedReplay,
-                                        ShardedReplayConfig)
-    with pytest.raises(ValueError, match="conflicting"):
-        ShardedPrioritizedReplay(
-            ShardedReplayConfig(capacity_per_shard=64, backend="xla",
-                                use_kernels=True), EXAMPLE)
+def test_unknown_backend_rejected_at_construction():
+    with pytest.raises(ValueError, match="unknown tree-ops backend"):
+        PrioritizedReplay(
+            ReplayConfig(capacity=64, backend="cuda"), EXAMPLE)
+
+
+def test_sharded_config_backend_selection():
+    from repro.core.distributed import ShardedReplayConfig
+    with pytest.raises(TypeError, match="use_kernels"):
+        ShardedReplayConfig(capacity_per_shard=64, use_kernels=True)
     assert ShardedReplayConfig(capacity_per_shard=64).tree_backend == "xla"
+    assert ShardedReplayConfig(capacity_per_shard=64,
+                               backend="pallas").tree_backend == "pallas"
 
 
 # -- exactly one propagation pass per loop iteration (op-count trace) ---------

@@ -1,0 +1,373 @@
+"""Replay-as-a-service (DESIGN.md §11): rate-limiter flow control,
+router addressing, the in-process ServiceExecutor's bit-exact
+equivalence with the fused loop, and the TCP server/client wire path."""
+
+import functools
+import pickle
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.agents.dqn import DQNConfig, make_dqn
+from repro.core.replay import PrioritizedReplay, ReplayConfig
+from repro.envs.classic import make_vec
+from repro.runtime.executors import FusedExecutor
+from repro.runtime.loop import LoopConfig, RatioSchedule
+from repro.service import (RateLimiter, ReplayClient, ReplayService,
+                           ReplayServiceConfig, Router, ServiceExecutor,
+                           ServiceStopped, serve)
+
+EXAMPLE = {
+    "obs": jnp.zeros((4,), jnp.float32),
+    "action": jnp.zeros((), jnp.int32),
+    "reward": jnp.zeros(()),
+    "next_obs": jnp.zeros((4,), jnp.float32),
+    "done": jnp.zeros(()),
+}
+
+
+def items(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "obs": rng.normal(size=(n, 4)).astype(np.float32),
+        "action": rng.integers(0, 2, n).astype(np.int32),
+        "reward": rng.uniform(0, 1, n).astype(np.float32),
+        "next_obs": rng.normal(size=(n, 4)).astype(np.float32),
+        "done": np.zeros(n, np.float32),
+    }
+
+
+def transition_example(spec):
+    return {
+        "obs": jnp.zeros((spec.obs_dim,), jnp.float32),
+        "action": jnp.zeros((), jnp.int32),
+        "reward": jnp.zeros(()),
+        "next_obs": jnp.zeros((spec.obs_dim,), jnp.float32),
+        "done": jnp.zeros(()),
+    }
+
+
+def params_checksum(agent_state) -> float:
+    total = 0.0
+    for leaf in jax.tree.leaves(jax.device_get(agent_state.params)):
+        total += float(np.abs(np.asarray(leaf, np.float64)).sum())
+    return total
+
+
+# -- rate limiter ------------------------------------------------------------
+
+
+def test_rate_limiter_band():
+    lim = RateLimiter(samples_per_insert=2.0, min_size_to_sample=10,
+                      error_buffer=4.0)
+    # below min size: inserts fine, samples blocked
+    assert lim.can_insert(10) and not lim.can_sample(1)
+    lim.note_insert(10)
+    # at min size, debt 0: sample of up to error_buffer admitted
+    assert lim.can_sample(4) and not lim.can_sample(5)
+    lim.note_sample(4)          # debt -4 — sampler at the band edge
+    assert not lim.can_sample(1)
+    # writer credit: 1 insert adds spi=2 credit
+    lim.note_insert(1)
+    assert lim.can_sample(2) and not lim.can_sample(3)
+    # writer backpressure: debt -2, insert of b adds 2b credit;
+    # 3 ≤ (4+2)/2 admitted, 4 is not
+    assert lim.can_insert(3) and not lim.can_insert(4)
+
+
+def test_rate_limiter_blocking_and_stop():
+    lim = RateLimiter(samples_per_insert=1.0, min_size_to_sample=1,
+                      error_buffer=1.0)
+    got = []
+
+    def sampler():
+        try:
+            lim.await_sample(1, timeout=10.0)
+            got.append("sampled")
+        except ServiceStopped:
+            got.append("stopped")
+
+    t = threading.Thread(target=sampler)
+    t.start()
+    time.sleep(0.05)
+    assert got == []            # parked: no inserts yet
+    lim.note_insert(2)
+    t.join(timeout=5.0)
+    assert got == ["sampled"]
+
+    # writers parked in backpressure must wake on stop()
+    t2 = threading.Thread(target=lambda: got.append(
+        "insert-stopped" if _raises_stopped(lim) else "insert-ok"))
+    t2.start()
+    time.sleep(0.05)
+    lim.stop()
+    t2.join(timeout=5.0)
+    assert got[-1] == "insert-stopped"
+
+
+def _raises_stopped(lim):
+    try:
+        lim.await_insert(10_000, timeout=10.0)
+        return False
+    except ServiceStopped:
+        return True
+
+
+def test_rate_limiter_timeout():
+    lim = RateLimiter(samples_per_insert=1.0, min_size_to_sample=1,
+                      error_buffer=1.0)
+    with pytest.raises(TimeoutError, match="not admitted"):
+        lim.await_sample(1, timeout=0.05)
+
+
+def test_rate_limiter_validation():
+    with pytest.raises(ValueError, match="samples_per_insert"):
+        RateLimiter(0.0, 1, 1.0)
+    with pytest.raises(ValueError, match="min_size_to_sample"):
+        RateLimiter(1.0, 0, 1.0)
+    with pytest.raises(ValueError, match="deadlock"):
+        RateLimiter(4.0, 1, 1.0)
+
+
+def test_from_schedule_reproduces_ratio_cadence():
+    """The tight-band limiter admits exactly the RatioSchedule cadence
+    under a greedy drain — flow control generalizes the schedule."""
+    for cfg, n_envs in [(LoopConfig(batch_size=64, update_interval=1,
+                                    warmup=400), 8),
+                        (LoopConfig(batch_size=64, update_interval=16,
+                                    warmup=384), 8)]:
+        sched = RatioSchedule.from_config(cfg, n_envs)
+        lim = RateLimiter.from_schedule(sched, cfg.batch_size, cfg.warmup)
+        learns_per_window = []
+        for w in range(120):
+            n = 0
+            while lim.can_sample(cfg.batch_size):
+                lim.note_sample(cfg.batch_size)
+                n += 1
+            learns_per_window.append(n)
+            lim.note_insert(n_envs)
+        expect = [sched.learns
+                  if (8 * w >= cfg.warmup and w % sched.period == 0) else 0
+                  for w in range(120)]
+        assert learns_per_window == expect
+
+
+# -- router ------------------------------------------------------------------
+
+
+def test_router_policies():
+    r = Router(4, "hash")
+    # stable per writer, spread across shards for distinct writers
+    assert all(r.route("actor-3") == r.route("actor-3") for _ in range(5))
+    assert len({r.route(f"actor-{i}") for i in range(64)}) == 4
+    rr = Router(3, "round_robin")
+    assert [rr.route("x") for x in range(6)] == [0, 1, 2, 0, 1, 2]
+    with pytest.raises(ValueError, match="unknown router policy"):
+        Router(2, "modulo")
+    with pytest.raises(ValueError, match="n_shards"):
+        Router(0)
+
+
+# -- service core ------------------------------------------------------------
+
+
+def test_service_append_sample_update_roundtrip():
+    svc = ReplayService(ReplayServiceConfig(capacity_per_shard=128,
+                                            n_shards=2, fanout=8), EXAMPLE)
+    expect = [0, 0]
+    for i in range(4):
+        out = svc.append(f"w{i}", items(32, seed=i))
+        assert not out["stopped"] and out["inserts"] == 32 * (i + 1)
+        expect[Router(2, "hash").route(f"w{i}")] += 32
+    st = svc.stats()
+    assert st["inserts"] == 128 and st["per_shard_count"] == expect
+    out = svc.sample(batch=32, beta=0.4)
+    assert out["items"]["obs"].shape == (32, 4)
+    assert out["weights"].shape == (32,) and out["weights"].max() <= 1 + 1e-6
+    assert svc.update_priorities(out["sample_id"],
+                                 np.ones(32, np.float32))["applied"]
+    # a second write-back on the same handle is stale, not an error
+    assert not svc.update_priorities(out["sample_id"],
+                                     np.ones(32, np.float32))["applied"]
+
+
+def test_service_sample_batch_must_divide_shards():
+    svc = ReplayService(ReplayServiceConfig(capacity_per_shard=64,
+                                            n_shards=3, fanout=8), EXAMPLE)
+    svc.append("w", items(48))
+    with pytest.raises(ValueError, match="divide evenly"):
+        svc.sample(batch=32)
+
+
+def test_service_lazy_appends_flush_once_per_window():
+    """Appends are leaf-only (pending ledger grows); the sample boundary
+    runs ONE propagation pass and the flushed tree is bit-exact with the
+    eager per-op path (the per-shard lazy ≡ eager contract through the
+    service API)."""
+    svc = ReplayService(ReplayServiceConfig(capacity_per_shard=256,
+                                            n_shards=1, fanout=8,
+                                            seed=7), EXAMPLE)
+    eager = PrioritizedReplay(ReplayConfig(capacity=256, fanout=8), EXAMPLE)
+    est = eager.init()
+    for i in range(3):
+        batch = items(64, seed=i)
+        svc.append("w", batch)
+        est = eager.insert(est, batch)      # eager: propagate per op
+    assert int(svc.states[0].pending) > 0   # ledger carries 3 appends
+    svc.sample(batch=64)                    # the admission window boundary
+    assert int(svc.states[0].pending) == 0
+    np.testing.assert_array_equal(np.asarray(svc.states[0].tree),
+                                  np.asarray(est.tree))
+
+
+def test_service_param_channel():
+    svc = ReplayService(ReplayServiceConfig(capacity_per_shard=64), EXAMPLE)
+    assert svc.params_version() == 0
+    with pytest.raises(TimeoutError):
+        svc.get_params(min_version=1, timeout=0.05)
+    v = svc.put_params(pickle.dumps({"w": np.ones(3)}))
+    assert v == 1
+    out = svc.get_params(min_version=1, timeout=1.0)
+    assert out["version"] == 1
+    np.testing.assert_array_equal(pickle.loads(out["blob"])["w"], np.ones(3))
+
+
+def test_service_rate_limited_ratio():
+    """2 writer threads + 1 sampler thread against a live service: the
+    realized samples-per-insert ratio lands inside the limiter band."""
+    lim = RateLimiter(samples_per_insert=0.5, min_size_to_sample=64,
+                      error_buffer=64.0)
+    svc = ReplayService(ReplayServiceConfig(capacity_per_shard=512,
+                                            n_shards=2, fanout=8),
+                        EXAMPLE, rate_limiter=lim)
+    stop_at = 2048   # inserts target
+
+    def writer(wid):
+        i = 0
+        while not svc.stopped and svc.total_inserts() < stop_at:
+            try:
+                svc.append(f"writer-{wid}", items(32, seed=i), timeout=10.0)
+            except ServiceStopped:
+                return
+            i += 1
+
+    def sampler():
+        while not svc.stopped:
+            out = svc.sample(batch=32, beta=0.4, timeout=10.0)
+            if out.get("stopped"):
+                return
+            svc.update_priorities(out["sample_id"],
+                                  np.ones(32, np.float32))
+
+    threads = [threading.Thread(target=writer, args=(w,)) for w in (0, 1)]
+    threads.append(threading.Thread(target=sampler))
+    for t in threads:
+        t.start()
+    for t in threads[:2]:
+        t.join(timeout=60.0)
+    svc.stop()
+    threads[2].join(timeout=60.0)
+    assert not any(t.is_alive() for t in threads)
+    st = lim.stats()
+    assert st["inserts"] >= stop_at
+    # band: |realized − configured| ≤ error_buffer / (inserts − min_size)
+    slack = lim.error_buffer / (st["inserts"] - lim.min_size_to_sample)
+    assert abs(st["realized_spi"] - 0.5) <= slack + 1e-6
+
+
+# -- wire path ---------------------------------------------------------------
+
+
+def test_tcp_server_client_roundtrip():
+    svc = ReplayService(ReplayServiceConfig(capacity_per_shard=256,
+                                            n_shards=2, fanout=8), EXAMPLE)
+    server, port = serve(svc)
+    try:
+        c = ReplayClient("127.0.0.1", port)
+        assert c.ping()
+        out = c.append("actor-0", items(64))
+        assert out["inserts"] == 64
+        c.put_params({"w": np.arange(4.0)})
+        got = c.get_params(min_version=1, timeout=5.0)
+        assert got["version"] == 1
+        np.testing.assert_array_equal(got["params"]["w"], np.arange(4.0))
+        s = c.sample(batch=32)
+        assert s["items"]["obs"].shape == (32, 4)
+        assert c.update_priorities(s["sample_id"], np.ones(32, np.float32))
+        # errors cross the wire as exceptions, not dead connections
+        with pytest.raises(RuntimeError, match="divide evenly"):
+            c.sample(batch=31)
+        assert c.stats()["inserts"] == 64
+        c.stop()
+        assert svc.stopped
+        c.close()
+    finally:
+        server.shutdown()
+
+
+# -- in-process service executor ---------------------------------------------
+
+
+def _dqn_setup(n_envs=8):
+    env_fn = functools.partial(make_vec, "cartpole")
+    spec, _, _ = env_fn(1)
+    agent = make_dqn(spec, DQNConfig())
+    return env_fn, spec, agent
+
+
+def test_service_executor_bit_exact_vs_fused():
+    """The acceptance contract: a 1-shard in-process service at the
+    loop-derived 1:1 rate limit is bit-exact with FusedExecutor — same
+    seed, identical params checksum and trajectory metrics."""
+    env_fn, spec, agent = _dqn_setup()
+    cfg = LoopConfig(batch_size=32, warmup=64, epsilon=0.3,
+                     update_interval=1, epsilon_decay_steps=500)
+    key = jax.random.PRNGKey(3)
+    iters = 40
+
+    replay = PrioritizedReplay(ReplayConfig(capacity=1024, fanout=8),
+                               transition_example(spec))
+    fused = FusedExecutor(agent, replay, env_fn, cfg, n_envs=8,
+                          scan_chunk=16)
+    f_state, f_hist = fused.train(iters, key)
+
+    svc = ReplayService(ReplayServiceConfig(capacity_per_shard=1024,
+                                            n_shards=1, fanout=8),
+                        transition_example(spec))
+    ex = ServiceExecutor(agent, svc, env_fn, cfg, n_envs=8, scan_chunk=16)
+    s_state, s_hist = ex.train(iters, key)
+
+    assert params_checksum(s_state.agent) == params_checksum(f_state.agent)
+    assert int(s_state.learn_steps) == int(f_state.learn_steps) > 0
+    np.testing.assert_array_equal(np.asarray(s_state.obs),
+                                  np.asarray(f_state.obs))
+    np.testing.assert_array_equal(np.asarray(s_hist["loss"]),
+                                  np.asarray(f_hist["loss"]))
+    # the limiter realized exactly the loop's samples-per-insert ratio
+    realized = ex.realized_samples_per_insert()
+    assert realized == pytest.approx(cfg.batch_size / cfg.update_interval
+                                     / 8 * 8, rel=0.05)
+
+
+def test_service_executor_multi_shard_trains():
+    """2-shard service: windows route round-robin across shards, learner
+    samples stratified with globally-normalized weights — training runs
+    and both shards fill."""
+    env_fn, spec, agent = _dqn_setup()
+    cfg = LoopConfig(batch_size=32, warmup=64, epsilon=0.3,
+                     update_interval=2, epsilon_decay_steps=500)
+    svc = ReplayService(ReplayServiceConfig(capacity_per_shard=512,
+                                            n_shards=2, fanout=8,
+                                            router="round_robin"),
+                        transition_example(spec))
+    ex = ServiceExecutor(agent, svc, env_fn, cfg, n_envs=8, scan_chunk=16)
+    state, hist = ex.train(48, jax.random.PRNGKey(0))
+    assert int(state.learn_steps) > 0
+    assert np.isfinite(np.asarray(hist["loss"])).all()
+    counts = [int(s.count) for s in state.replay]
+    assert len(counts) == 2 and min(counts) > 0
+    assert abs(counts[0] - counts[1]) <= 8   # round-robin balance
