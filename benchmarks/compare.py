@@ -13,7 +13,10 @@ cold CI runners) gets exactly that much extra slack, while tight
 points keep the tight gate.  Missing points on either side are
 tolerated with a note — sweeps grow and shrink across PRs, and a
 baseline measured on different hardware only gates *relative*
-regressions on matching points.  CI runs this as a **blocking** step
+regressions on matching points — but a baseline file whose points
+*all* fail to match (an identity-field rename de-matching the whole
+sweep) is a hard failure: a gate that matched nothing checked
+nothing.  CI runs this as a **blocking** step
 (the bench-smoke job fails on regression).
 
 THRESHOLD is the one place the base tolerance lives — CI, the cron
@@ -124,13 +127,16 @@ def compare_dirs(fresh_dir: str, baseline_dir: str, threshold: float,
         for line in regressions:
             print(f"   REGRESSION {line}")
         matched = len(set(baseline_pts) & set(fresh_pts))
-        if not matched:
+        if baseline_pts and not matched:
             # an identity-field change (e.g. a new sweep env count) can
-            # de-match every point at once — say so loudly, or a real
-            # regression would sail through a vacuously green gate
-            print(f"   WARNING: 0 matching points between baseline and "
+            # de-match every point at once, which would make the gate
+            # vacuously green exactly when it matters most — a committed
+            # baseline with zero matching fresh points is a hard failure,
+            # not a note
+            print(f"   FAIL: 0 matching points between baseline and "
                   f"fresh {name} — the gate checked nothing; "
                   "re-commit baselines from a fresh --emit-json run")
+            total_regressions += 1
         total_regressions += len(regressions)
     if not compared_any:
         print("no BENCH file present on both sides — nothing gated")

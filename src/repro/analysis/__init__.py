@@ -1,0 +1,19 @@
+"""repro-lint: repo-specific static analysis (DESIGN.md §12).
+
+Four stdlib-``ast`` passes over ``src/``, ``benchmarks/``,
+``examples/`` — donation safety (D1xx), collective uniformity (C2xx),
+lock discipline (L3xx), retrace hazards (R4xx) — run by
+``python -m repro.analysis`` and blocking in CI.
+
+Nothing in this package may import jax, numpy, or anything beyond the
+standard library: the CI lint stage runs it without the ML deps, and
+tests/test_analysis.py asserts the import list.
+"""
+
+from repro.analysis import collectives, donation, locks, retrace
+from repro.analysis.common import RULES, Finding, SourceFile
+
+# the pass registry the CLI runs, in report order
+PASSES = (donation.run, collectives.run, locks.run, retrace.run)
+
+__all__ = ["PASSES", "RULES", "Finding", "SourceFile"]

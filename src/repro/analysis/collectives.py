@@ -1,0 +1,183 @@
+"""Pass 2 — collective uniformity inside mapped functions (rules
+C201/C202).
+
+The gang-launch argument of DESIGN.md §10: under gloo, every process
+must issue the *same sequence* of collectives or the gang deadlocks at
+the first mismatched rendezvous.  A function traced once per process is
+uniform by construction — closures and config branches resolve
+identically everywhere — so the only way to diverge is to branch on
+something that genuinely differs per host:
+
+  * **C201 collective-divergent-control** — a collective
+    (``psum``/``pmean``/``pmax``/``all_gather``/… plus the repo's
+    ``compressed_pmean``/``fused_tree_reduce``) lexically under an
+    ``if``/``while`` test or ``for`` iterable that reads a *nonuniform
+    host source*: ``jax.process_index``, ``time.*``, ``random.*``,
+    ``os.environ``/``os.getenv``, ``socket.gethostname``.  Uniform
+    closure branches (``for ax in self._axes: pmean(...)``) are
+    deliberately not flagged — they trace the same everywhere.
+  * **C202 collective-unknown-axis** — an axis-name string literal in a
+    collective call outside the known mesh axis set {``pod``, ``data``,
+    ``model``}: a typo'd axis name fails only at run time, on the mesh
+    that actually binds axes, i.e. the multi-host job and not the unit
+    test.
+
+C201 only looks inside functions demonstrably passed to
+``shard_map``/``pmap`` (resolved through names, lambdas, and decorator
+forms); C202 applies to every collective call site — an axis literal is
+wrong no matter where it is spelled.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Set
+
+from repro.analysis.common import (Finding, SourceFile, ancestors,
+                                   register_rules, resolve_local_def)
+
+register_rules({
+    "C201": "collective-divergent-control",
+    "C202": "collective-unknown-axis",
+})
+
+KNOWN_MESH_AXES = {"pod", "data", "model"}
+
+# last path segment of a collective call target
+COLLECTIVE_NAMES = {
+    "psum", "pmean", "pmax", "pmin", "all_gather", "all_to_all",
+    "ppermute", "pshuffle", "psum_scatter",
+    "compressed_pmean", "fused_tree_reduce",
+}
+
+# dotted prefixes whose reads differ between processes of one gang
+_NONUNIFORM_PREFIXES = (
+    "jax.process_index",
+    "time.", "random.", "numpy.random.",
+    "os.environ", "os.getenv", "os.urandom", "os.getpid",
+    "socket.gethostname", "uuid.",
+)
+
+
+def _is_collective(sf: SourceFile, call: ast.Call) -> bool:
+    qn = sf.qualname(call.func)
+    return qn is not None and qn.split(".")[-1] in COLLECTIVE_NAMES
+
+
+def _is_mapper(qn: Optional[str]) -> bool:
+    if qn is None:
+        return False
+    tail = qn.split(".")[-1]
+    return tail in ("shard_map", "pmap", "xmap")
+
+
+def _nonuniform_source(sf: SourceFile, expr: ast.AST) -> Optional[str]:
+    for node in ast.walk(expr):
+        qn = sf.qualname(node)
+        if qn is None:
+            continue
+        qn_dotted = qn + "."
+        for prefix in _NONUNIFORM_PREFIXES:
+            if qn == prefix.rstrip(".") or qn_dotted.startswith(prefix):
+                return qn
+    return None
+
+
+def _mapped_functions(sf: SourceFile) -> Set[ast.AST]:
+    """Function nodes demonstrably handed to shard_map/pmap."""
+    mapped: Set[ast.AST] = set()
+
+    def resolve(node: ast.AST) -> None:
+        if isinstance(node, ast.Lambda):
+            mapped.add(node)
+        elif isinstance(node, ast.Name):
+            target = resolve_local_def(node.id, node)
+            if target is not None:
+                mapped.add(target)
+
+    for node in ast.walk(sf.tree):
+        if isinstance(node, ast.Call) and _is_mapper(sf.qualname(node.func)):
+            if node.args:
+                resolve(node.args[0])
+            for kw in node.keywords:
+                if kw.arg in ("f", "fun"):
+                    resolve(kw.value)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                # @shard_map(...)/@pmap and @partial(shard_map, ...)
+                if _is_mapper(sf.qualname(dec)):
+                    mapped.add(node)
+                elif isinstance(dec, ast.Call):
+                    if _is_mapper(sf.qualname(dec.func)):
+                        mapped.add(node)
+                    elif dec.args and _is_mapper(sf.qualname(dec.args[0])):
+                        mapped.add(node)
+    return mapped
+
+
+def _check_divergence(sf: SourceFile, call: ast.Call, mapped_fn: ast.AST,
+                      findings: List[Finding]) -> None:
+    for anc in ancestors(call):
+        if anc is mapped_fn:
+            break
+        cond: Optional[ast.AST] = None
+        if isinstance(anc, (ast.If, ast.While)):
+            cond = anc.test
+        elif isinstance(anc, ast.For):
+            cond = anc.iter
+        elif isinstance(anc, ast.IfExp):
+            cond = anc.test
+        if cond is None:
+            continue
+        src = _nonuniform_source(sf, cond)
+        if src is not None:
+            findings.append(sf.finding(
+                call, "C201",
+                f"collective under control flow conditioned on `{src}` — "
+                "processes of the gang can disagree on whether this "
+                "collective launches, which deadlocks the gloo rendezvous "
+                "(hoist the branch out of the mapped function)"))
+
+
+_AXIS_KEYWORDS = {"axis", "axes", "axis_name", "axis_names", "compress_axis"}
+
+
+def _check_axes(sf: SourceFile, call: ast.Call,
+                findings: List[Finding]) -> None:
+    """Axis-position arguments only: positional args after the operand
+    that are string literals (or tuples/lists of them), plus keywords
+    with axis-ish names — dtype strings and the like stay out."""
+    candidates: List[ast.AST] = list(call.args[1:])
+    candidates += [kw.value for kw in call.keywords
+                   if kw.arg in _AXIS_KEYWORDS]
+    strings: List[str] = []
+    for arg in candidates:
+        if isinstance(arg, ast.Constant) and isinstance(arg.value, str):
+            strings.append(arg.value)
+        elif isinstance(arg, (ast.Tuple, ast.List)):
+            strings.extend(el.value for el in arg.elts
+                           if isinstance(el, ast.Constant)
+                           and isinstance(el.value, str))
+    for s in strings:
+        if s not in KNOWN_MESH_AXES:
+            findings.append(sf.finding(
+                call, "C202",
+                f"axis name '{s}' is not in the known mesh axis set "
+                f"{sorted(KNOWN_MESH_AXES)} — a typo'd axis only fails on "
+                "the real multi-host mesh, not in unit tests"))
+
+
+def run(sf: SourceFile) -> List[Finding]:
+    findings: List[Finding] = []
+    mapped = _mapped_functions(sf)
+    for fn in mapped:
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call) and _is_collective(sf, node):
+                _check_divergence(sf, node, fn, findings)
+    seen_lines = set()
+    for node in ast.walk(sf.tree):
+        if isinstance(node, ast.Call) and _is_collective(sf, node) \
+                and node.lineno not in seen_lines:
+            seen_lines.add(node.lineno)
+            _check_axes(sf, node, findings)
+    return findings

@@ -1,0 +1,262 @@
+"""Pass 1 — donation safety (DESIGN.md §12, rules D101/D102).
+
+The replay-donation contract of DESIGN.md §9: every executor chunk
+donates the replay state (tree + storage) at the jit boundary, so the
+caller must treat the donated binding as *consumed* — reading it after
+the call is a use-after-free that XLA only reports lazily (``Array has
+been deleted``) and only on paths that actually materialize the buffer.
+
+  * **D101 use-after-donate** — for every call through a
+    ``jax.jit(..., donate_argnums=…)`` value, any read of the expression
+    passed at a donated position after the call (before the binding is
+    reassigned) is flagged.  Tracked bindings are plain names and dotted
+    attribute paths (``state.replay``); reads of a *sub*-path
+    (``state.replay.tree``) count too.
+  * **D102 argnum-misalignment** — a ``donate_argnums``/``static_argnums``
+    index that falls outside the resolved callee's positional signature
+    (the silent drift mode: someone adds a leading argument to the
+    chunk function and the donation quietly lands on the wrong buffer
+    or errors at trace time).  Callees are resolved through lexical
+    ``def``s, lambdas, and one level of ``shard_map(fn, …)``;
+    ``functools.partial`` shifts positions unpredictably and is skipped.
+
+Both rules also cover ``@functools.partial(jax.jit, donate_argnums=…)``
+decorators and immediately-invoked ``jax.jit(f, …)(args)`` forms.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.analysis.common import (Finding, SourceFile, ancestors,
+                                   const_int_tuple, enclosing_function,
+                                   positional_params, register_rules,
+                                   resolve_local_def)
+
+register_rules({
+    "D101": "donation-use-after-donate",
+    "D102": "donation-argnum-mismatch",
+})
+
+Path = Tuple[str, ...]
+
+
+def _is_jit(qn: Optional[str]) -> bool:
+    return qn in ("jax.jit", "jax.experimental.pjit.pjit")
+
+
+def _is_shard_map(qn: Optional[str]) -> bool:
+    return qn is not None and qn.split(".")[-1] == "shard_map"
+
+
+def _is_partial(qn: Optional[str]) -> bool:
+    return qn in ("functools.partial", "partial")
+
+
+def _argnums(call: ast.Call, name: str) -> Optional[Tuple[int, ...]]:
+    for kw in call.keywords:
+        if kw.arg == name:
+            return const_int_tuple(kw.value)
+    return None
+
+
+def _expr_path(node: ast.AST) -> Optional[Path]:
+    """("state", "replay") for ``state.replay``; None for anything
+    dynamic (calls, subscripts, literals)."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return tuple(reversed(parts))
+    return None
+
+
+def _resolve_callee(node: ast.AST, sf: SourceFile) -> Optional[ast.AST]:
+    """The function whose signature the jit argnums index: a lexical
+    def, a lambda, or (through one shard_map wrapper) either."""
+    if isinstance(node, ast.Lambda):
+        return node
+    if isinstance(node, ast.Name):
+        return resolve_local_def(node.id, node)
+    if isinstance(node, ast.Call):
+        qn = sf.qualname(node.func)
+        if _is_shard_map(qn) and node.args:
+            return _resolve_callee(node.args[0], sf)
+    return None
+
+
+class _DonatedFn:
+    def __init__(self, jit_call: ast.Call, donate: Tuple[int, ...],
+                 static: Tuple[int, ...], callee: Optional[ast.AST]):
+        self.jit_call = jit_call
+        self.donate = donate
+        self.static = static
+        self.callee = callee
+
+
+def _check_alignment(sf: SourceFile, fn: _DonatedFn,
+                     findings: List[Finding]) -> None:
+    overlap = sorted(set(fn.donate) & set(fn.static))
+    if overlap:
+        findings.append(sf.finding(
+            fn.jit_call, "D102",
+            f"argnums {overlap} are both donated and static — a static "
+            "argument has no buffer to alias"))
+    if fn.callee is None:
+        return
+    params = positional_params(fn.callee)
+    if fn.callee.args.vararg is not None:
+        return  # *args absorbs any index
+    for label, nums in (("donate_argnums", fn.donate),
+                        ("static_argnums", fn.static)):
+        for i in nums:
+            if i >= len(params) or i < -len(params):
+                findings.append(sf.finding(
+                    fn.jit_call, "D102",
+                    f"{label} index {i} is out of range for the callee's "
+                    f"{len(params)} positional parameter(s) "
+                    f"({', '.join(params) or 'none'}) — the argnums have "
+                    "drifted out of alignment with the signature"))
+
+
+def _contains(outer: ast.AST, inner: ast.AST) -> bool:
+    return any(a is outer for a in ancestors(inner)) or outer is inner
+
+
+def _stores_in(scope: ast.AST) -> List[Tuple[int, Path]]:
+    """(line, path) of every rebind: assignment targets, aug-assigns,
+    for-targets, with-as names — the events that end a donated
+    binding's lifetime."""
+    out: List[Tuple[int, Path]] = []
+
+    def targets(node):
+        if isinstance(node, (ast.Tuple, ast.List)):
+            for el in node.elts:
+                yield from targets(el)
+        elif isinstance(node, ast.Starred):
+            yield from targets(node.value)
+        else:
+            yield node
+
+    for node in ast.walk(scope):
+        tgts: Sequence[ast.AST] = ()
+        if isinstance(node, ast.Assign):
+            tgts = [t for tgt in node.targets for t in targets(tgt)]
+        elif isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+            tgts = list(targets(node.target))
+        elif isinstance(node, ast.For):
+            tgts = list(targets(node.target))
+        elif isinstance(node, ast.withitem) and node.optional_vars:
+            tgts = list(targets(node.optional_vars))
+        for t in tgts:
+            path = _expr_path(t)
+            if path is not None:
+                out.append((getattr(t, "lineno", 0), path))
+    return out
+
+
+def _loads_of(scope: ast.AST, path: Path,
+              exclude_within: ast.AST) -> List[int]:
+    """Lines where ``path`` (or a sub-path of it) is read, outside the
+    donating call itself.  Deduped per line."""
+    lines = set()
+    for node in ast.walk(scope):
+        if not isinstance(node, (ast.Name, ast.Attribute)):
+            continue
+        if not isinstance(getattr(node, "ctx", None), ast.Load):
+            continue
+        p = _expr_path(node)
+        if p is None or p[:len(path)] != path:
+            continue
+        if _contains(exclude_within, node):
+            continue
+        lines.add(node.lineno)
+    return sorted(lines)
+
+
+def _check_use_after(sf: SourceFile, call: ast.Call, donated: _DonatedFn,
+                     findings: List[Finding]) -> None:
+    for pos in donated.donate:
+        if pos < 0 or pos >= len(call.args):
+            continue
+        path = _expr_path(call.args[pos])
+        if path is None:
+            continue  # dynamic expression: no binding survives to read
+        scope = enclosing_function(call) or sf.tree
+        stores = _stores_in(scope)
+        rebind_lines = sorted(
+            line for line, spath in stores
+            if spath == path or spath == path[:1])
+        first_rebind = min((ln for ln in rebind_lines
+                            if ln >= call.lineno), default=None)
+        loop = next((a for a in ancestors(call)
+                     if isinstance(a, (ast.For, ast.While))), None)
+        for line in _loads_of(scope, path, call):
+            after_linear = (line > call.lineno
+                            and (first_rebind is None or line < first_rebind))
+            # a read earlier in a loop body still follows the donation on
+            # the next iteration unless the binding is rebound in the loop
+            in_loop = (loop is not None
+                       and loop.lineno <= line <= (loop.end_lineno or line)
+                       and not any(loop.lineno <= ln <= (loop.end_lineno or 0)
+                                   for ln in rebind_lines))
+            if after_linear or in_loop:
+                findings.append(Finding(
+                    sf.relpath, line, "D101",
+                    f"`{'.'.join(path)}` is read after being donated to "
+                    f"the jitted call on line {call.lineno} "
+                    "(donate_argnums aliases the buffer — use the "
+                    "returned value instead)"))
+
+
+def run(sf: SourceFile) -> List[Finding]:
+    findings: List[Finding] = []
+    jitted_by_name: Dict[str, _DonatedFn] = {}
+
+    for node in ast.walk(sf.tree):
+        if not isinstance(node, ast.Call) or not _is_jit(sf.qualname(node.func)):
+            continue
+        donate = _argnums(node, "donate_argnums") or ()
+        static = _argnums(node, "static_argnums") or ()
+        if not donate and not static:
+            continue
+        callee = _resolve_callee(node.args[0], sf) if node.args else None
+        fn = _DonatedFn(node, donate, static, callee)
+        _check_alignment(sf, fn, findings)
+        if not donate:
+            continue
+        parent = getattr(node, "_rl_parent", None)
+        if isinstance(parent, ast.Assign) and len(parent.targets) == 1 \
+                and isinstance(parent.targets[0], ast.Name):
+            jitted_by_name[parent.targets[0].id] = fn
+        elif isinstance(parent, ast.Call) and parent.func is node:
+            # immediately invoked: jax.jit(f, donate_argnums=…)(x, y)
+            _check_use_after(sf, parent, fn, findings)
+
+    # decorator form: @functools.partial(jax.jit, donate_argnums=…)
+    for node in ast.walk(sf.tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        for dec in node.decorator_list:
+            if not isinstance(dec, ast.Call) or not dec.args:
+                continue
+            if not (_is_partial(sf.qualname(dec.func))
+                    and _is_jit(sf.qualname(dec.args[0]))):
+                continue
+            donate = _argnums(dec, "donate_argnums") or ()
+            static = _argnums(dec, "static_argnums") or ()
+            if donate or static:
+                fn = _DonatedFn(dec, donate, static, node)
+                _check_alignment(sf, fn, findings)
+                if donate:
+                    jitted_by_name[node.name] = fn
+
+    # call sites of named donated functions
+    for node in ast.walk(sf.tree):
+        if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+                and node.func.id in jitted_by_name:
+            _check_use_after(sf, node, jitted_by_name[node.func.id], findings)
+    return findings

@@ -1,0 +1,287 @@
+"""Pass 4 — retrace hazards in jitted/scanned functions (rules
+R401/R402/R403).
+
+Three ways a traced function goes wrong that the type system cannot
+see and unit tests only catch if they hit the exact shape/path:
+
+  * **R401 retrace-traced-branch** — a Python ``if``/``while`` on a
+    traced parameter of a jitted/scanned function.  At best this is a
+    TracerBoolConversionError at trace time; with ``static_argnums`` it
+    silently becomes a retrace per distinct value.  Exemptions cover
+    the legitimate trace-time predicates: ``x is None`` /
+    ``is not None``, shape/dtype introspection (``.shape``/``.ndim``/
+    ``.dtype``/``.size``), ``len()``/``isinstance()``/``hasattr()``,
+    and ``jax.tree`` structure queries — those resolve during tracing,
+    uniformly.  Parameters named static by ``static_argnums``/
+    ``static_argnames`` are exempt by construction.
+  * **R402 retrace-mutable-closure** — a traced function that *writes*
+    ``self.<attr>`` or a ``global``/``nonlocal`` binding.  The write
+    happens once, at trace time; every later call silently skips it
+    (or worse, a retrace re-runs it), so the state and the compiled
+    computation drift apart.
+  * **R403 retrace-unhashable-static** — a call to a jitted function
+    passing a ``list``/``dict``/``set`` literal at a position named in
+    ``static_argnums``: static args key the compile cache and must be
+    hashable — this raises at call time, but only on the call path that
+    uses the literal.
+
+Traced functions are collected from ``jax.jit``/``jax.lax.scan``/
+``shard_map``/``pmap`` call sites (resolved through names and lambdas)
+and ``@jax.jit``/``@partial(jax.jit, …)`` decorators.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.common import (Finding, SourceFile, ancestors,
+                                   const_int_tuple, positional_params,
+                                   register_rules, resolve_local_def)
+
+register_rules({
+    "R401": "retrace-traced-branch",
+    "R402": "retrace-mutable-closure",
+    "R403": "retrace-unhashable-static",
+})
+
+_SHAPE_ATTRS = {"shape", "ndim", "dtype", "size"}
+_TRACE_TIME_CALLS = {
+    "len", "isinstance", "hasattr", "getattr", "type", "callable",
+}
+_TRACE_TIME_CALL_PREFIXES = ("jax.tree.", "jax.tree_util.")
+
+
+def _is_jit(qn: Optional[str]) -> bool:
+    return qn in ("jax.jit", "jax.experimental.pjit.pjit")
+
+
+def _is_tracer_entry(qn: Optional[str]) -> bool:
+    if qn is None:
+        return False
+    if _is_jit(qn) or qn in ("jax.lax.scan", "jax.lax.while_loop",
+                             "jax.lax.fori_loop", "jax.checkpoint",
+                             "jax.remat", "jax.vmap", "jax.grad",
+                             "jax.value_and_grad"):
+        return True
+    return qn.split(".")[-1] in ("shard_map", "pmap")
+
+
+def _static_names(call: ast.Call, fn: ast.AST) -> Set[str]:
+    """Parameter names excluded from tracing by static_argnums/names."""
+    params = positional_params(fn)
+    names: Set[str] = set()
+    for kw in call.keywords:
+        if kw.arg == "static_argnums":
+            for i in const_int_tuple(kw.value) or ():
+                if -len(params) <= i < len(params):
+                    names.add(params[i])
+        elif kw.arg == "static_argnames":
+            vals = [kw.value] if isinstance(kw.value, ast.Constant) \
+                else list(getattr(kw.value, "elts", []))
+            for el in vals:
+                if isinstance(el, ast.Constant) and isinstance(el.value, str):
+                    names.add(el.value)
+    return names
+
+
+class _TracedFn:
+    def __init__(self, fn: ast.AST, static: Set[str], how: str):
+        self.fn = fn
+        self.static = static
+        self.how = how  # "jax.jit", "jax.lax.scan", ... for messages
+
+
+def _collect_traced(sf: SourceFile) -> List[_TracedFn]:
+    out: List[_TracedFn] = []
+    seen: Set[int] = set()
+
+    def add(fn_ref: ast.AST, call: Optional[ast.Call], how: str) -> None:
+        fn: Optional[ast.AST] = None
+        if isinstance(fn_ref, ast.Lambda):
+            fn = fn_ref
+        elif isinstance(fn_ref, ast.Name):
+            fn = resolve_local_def(fn_ref.id, fn_ref)
+        elif isinstance(fn_ref, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            fn = fn_ref
+        if fn is None or id(fn) in seen:
+            return
+        seen.add(id(fn))
+        static = _static_names(call, fn) if call is not None else set()
+        out.append(_TracedFn(fn, static, how))
+
+    for node in ast.walk(sf.tree):
+        if isinstance(node, ast.Call):
+            qn = sf.qualname(node.func)
+            if _is_tracer_entry(qn) and node.args:
+                add(node.args[0], node, qn or "jit")
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                qn = sf.qualname(dec)
+                if _is_tracer_entry(qn):
+                    add(node, None, qn or "jit")
+                elif isinstance(dec, ast.Call):
+                    qn = sf.qualname(dec.func)
+                    if _is_tracer_entry(qn):
+                        add(node, dec, qn or "jit")
+                    elif dec.args and _is_tracer_entry(sf.qualname(dec.args[0])):
+                        add(node, dec, sf.qualname(dec.args[0]) or "jit")
+    return out
+
+
+def _exempted(name_node: ast.Name, test: ast.AST, sf: SourceFile) -> bool:
+    """Is this reference to a traced param inside a construct that
+    resolves at trace time (is-None check, shape probe, len/isinstance,
+    tree-structure query)?"""
+    prev: ast.AST = name_node
+    for anc in ancestors(name_node):
+        if isinstance(anc, ast.Compare) and all(
+                isinstance(op, (ast.Is, ast.IsNot)) for op in anc.ops):
+            return True
+        if isinstance(anc, ast.Attribute) and anc.attr in _SHAPE_ATTRS:
+            return True
+        if isinstance(anc, ast.Call) and prev is not anc.func:
+            qn = sf.qualname(anc.func)
+            if qn is not None and (
+                    qn in _TRACE_TIME_CALLS
+                    or any(qn.startswith(p)
+                           for p in _TRACE_TIME_CALL_PREFIXES)):
+                return True
+        if anc is test:
+            return False
+        prev = anc
+    return False
+
+
+def _check_traced_branch(sf: SourceFile, traced: _TracedFn,
+                         findings: List[Finding]) -> None:
+    params = set(positional_params(traced.fn)) | {
+        a.arg for a in traced.fn.args.kwonlyargs}
+    params -= traced.static
+    params.discard("self")
+    for node in ast.walk(traced.fn):
+        test: Optional[ast.AST] = None
+        if isinstance(node, (ast.If, ast.While, ast.IfExp)):
+            test = node.test
+        elif isinstance(node, ast.Assert):
+            test = node.test
+        if test is None:
+            continue
+        for ref in ast.walk(test):
+            if isinstance(ref, ast.Name) and ref.id in params \
+                    and isinstance(ref.ctx, ast.Load) \
+                    and not _exempted(ref, test, sf):
+                findings.append(sf.finding(
+                    node, "R401",
+                    f"Python branch on traced parameter `{ref.id}` inside "
+                    f"a function traced by {traced.how} — this is a "
+                    "TracerBoolConversionError at best and a per-value "
+                    "retrace at worst; use jax.lax.cond/select or mark "
+                    "the argument static"))
+                break
+
+
+def _module_mutables(sf: SourceFile) -> Set[str]:
+    """Module-level names rebound more than once, or rebound from inside
+    a function via ``global`` — the mutable module state a traced
+    closure silently freezes."""
+    top_assigns: Dict[str, int] = {}
+    body = getattr(sf.tree, "body", [])
+    for stmt in body:
+        targets: List[ast.AST] = []
+        if isinstance(stmt, ast.Assign):
+            targets = stmt.targets
+        elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+            targets = [stmt.target]
+        for t in targets:
+            if isinstance(t, ast.Name):
+                top_assigns[t.id] = top_assigns.get(t.id, 0) + \
+                    (2 if isinstance(stmt, ast.AugAssign) else 1)
+    from_global: Set[str] = set()
+    for node in ast.walk(sf.tree):
+        if isinstance(node, ast.Global):
+            from_global.update(node.names)
+    return {n for n, c in top_assigns.items() if c > 1} | from_global
+
+
+def _check_mutable_closure(sf: SourceFile, traced: _TracedFn,
+                           mutables: Set[str],
+                           findings: List[Finding]) -> None:
+    reported: Set[Tuple[int, str]] = set()
+
+    def report(node: ast.AST, what: str, detail: str) -> None:
+        key = (getattr(node, "lineno", 0), what)
+        if key in reported:
+            return
+        reported.add(key)
+        findings.append(sf.finding(
+            node, "R402",
+            f"traced function ({traced.how}) {detail} — the effect "
+            "happens once at trace time, then the compiled function and "
+            "the Python state silently diverge"))
+
+    for node in ast.walk(traced.fn):
+        if isinstance(node, (ast.Global, ast.Nonlocal)):
+            report(node, ",".join(node.names),
+                   f"rebinds {node.__class__.__name__.lower()} "
+                   f"name(s) {', '.join(node.names)}")
+        elif isinstance(node, ast.Attribute) \
+                and isinstance(getattr(node, "ctx", None), ast.Store) \
+                and isinstance(node.value, ast.Name) \
+                and node.value.id == "self":
+            report(node, node.attr, f"writes self.{node.attr}")
+        elif isinstance(node, ast.Name) \
+                and isinstance(node.ctx, ast.Load) and node.id in mutables:
+            report(node, node.id,
+                   f"closes over mutable module-level `{node.id}` "
+                   "(rebound elsewhere in this module)")
+
+
+def _check_unhashable_static(sf: SourceFile, findings: List[Finding]) -> None:
+    # named jitted fns with static positions: var = jax.jit(f, static_argnums=…)
+    jitted: Dict[str, Tuple[Tuple[int, ...], ast.AST]] = {}
+    for node in ast.walk(sf.tree):
+        if not isinstance(node, ast.Call) or not _is_jit(sf.qualname(node.func)):
+            continue
+        static = None
+        for kw in node.keywords:
+            if kw.arg == "static_argnums":
+                static = const_int_tuple(kw.value)
+        if not static:
+            continue
+        parent = getattr(node, "_rl_parent", None)
+        if isinstance(parent, ast.Assign) and len(parent.targets) == 1 \
+                and isinstance(parent.targets[0], ast.Name):
+            jitted[parent.targets[0].id] = (static, node)
+        elif isinstance(parent, ast.Call) and parent.func is node:
+            _flag_unhashable(sf, parent, static, findings)
+    for node in ast.walk(sf.tree):
+        if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+                and node.func.id in jitted:
+            _flag_unhashable(sf, node, jitted[node.func.id][0], findings)
+
+
+def _flag_unhashable(sf: SourceFile, call: ast.Call,
+                     static: Tuple[int, ...],
+                     findings: List[Finding]) -> None:
+    for i in static:
+        if 0 <= i < len(call.args):
+            arg = call.args[i]
+            if isinstance(arg, (ast.List, ast.Dict, ast.Set, ast.DictComp,
+                                ast.ListComp, ast.SetComp)):
+                kind = arg.__class__.__name__.lower().replace("comp", "")
+                findings.append(sf.finding(
+                    arg, "R403",
+                    f"{kind} literal passed at static_argnums position {i} "
+                    "— static args key the jit cache and must be hashable "
+                    "(use a tuple / frozenset / frozen dataclass)"))
+
+
+def run(sf: SourceFile) -> List[Finding]:
+    findings: List[Finding] = []
+    mutables = _module_mutables(sf)
+    for traced in _collect_traced(sf):
+        _check_traced_branch(sf, traced, findings)
+        _check_mutable_closure(sf, traced, mutables, findings)
+    _check_unhashable_static(sf, findings)
+    return findings

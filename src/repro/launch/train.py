@@ -57,6 +57,7 @@ def _make_param_averager(n_procs: int):
     def pmean(tree):
         # local view of each stacked leaf is this worker's (1, …) slot;
         # drop it so the replicated output has the original leaf shape
+        # repro-lint: disable=C202(local one-axis gang mesh, not the pod/data/model training mesh)
         return jax.tree.map(lambda x: jax.lax.pmean(x[0], "proc"), tree)
 
     reduce_fn = jax.jit(shard_map(

@@ -95,7 +95,13 @@ class RateLimiter:
 
     # -- accounting ---------------------------------------------------------
 
-    def _debt(self) -> float:
+    # The three predicates below read the guarded counters without taking
+    # self._cond themselves: every caller already holds it — the public
+    # queries lock explicitly, and the await_* lambdas are evaluated
+    # inside _await's `with self._cond:` loop.  Taking the (non-reentrant)
+    # Condition here would deadlock.
+
+    def _debt(self) -> float:  # repro-lint: disable=L301(callers hold self._cond)
         return ((self._inserts - self.min_size_to_sample)
                 * self.samples_per_insert - self._samples)
 
@@ -103,7 +109,7 @@ class RateLimiter:
         return (self._debt() + batch * self.samples_per_insert
                 <= self.error_buffer)
 
-    def _sample_ok(self, batch: int) -> bool:
+    def _sample_ok(self, batch: int) -> bool:  # repro-lint: disable=L301(callers hold self._cond)
         return (self._inserts >= self.min_size_to_sample
                 and self._debt() - batch >= -self.error_buffer)
 

@@ -1,0 +1,32 @@
+# ruff: noqa
+"""Known-bad collective fixtures.
+
+C201: collectives under control flow fed by nonuniform host sources —
+each gang process can disagree on the launch count and deadlock gloo.
+C202: axis-name literals outside the known mesh axis set.
+"""
+import time
+
+import jax
+from jax.experimental.shard_map import shard_map
+
+
+def time_divergent(x):
+    if time.monotonic() > 100.0:
+        x = jax.lax.psum(x, "data")    # C201: time differs per host
+    return x
+
+
+def rank_divergent(x):
+    if jax.process_index() == 0:
+        x = jax.lax.pmax(x, "pod")     # C201: only rank 0 launches
+    return x
+
+
+def typo_axis(x):
+    return jax.lax.pmean(x, "pods")    # C202: not pod/data/model
+
+
+m1 = shard_map(time_divergent, mesh=None, in_specs=None, out_specs=None)
+m2 = shard_map(rank_divergent, mesh=None, in_specs=None, out_specs=None)
+m3 = shard_map(typo_axis, mesh=None, in_specs=None, out_specs=None)

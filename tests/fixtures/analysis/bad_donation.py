@@ -1,0 +1,36 @@
+# ruff: noqa
+"""Known-bad donation fixtures — every marked line must be flagged.
+
+D101: reads of a donated binding after the donating call.
+D102: argnums misaligned with the callee signature.
+"""
+import jax
+
+
+def chunk(replay, rest):
+    return rest, replay
+
+
+fn = jax.jit(chunk, donate_argnums=(0,))
+
+
+def use_after_donate(state):
+    out = fn(state.replay, state)
+    size = state.replay.count          # D101: donated buffer read
+    return out, size
+
+
+def use_after_donate_in_loop(state):
+    acc = None
+    for _ in range(4):
+        acc = state.replay.count       # D101: stale on iteration 2+
+        _out = fn(state.replay, state)
+    return acc
+
+
+def two_arg(a, b):
+    return a
+
+
+misaligned = jax.jit(two_arg, donate_argnums=(5,))                    # D102
+overlapped = jax.jit(two_arg, donate_argnums=(0,), static_argnums=(0,))  # D102

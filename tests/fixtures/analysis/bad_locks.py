@@ -1,0 +1,37 @@
+# ruff: noqa
+"""Known-bad lock-discipline fixtures.
+
+L301: guarded attribute touched without the lock.
+L302: Condition.wait outside a predicate while-loop.
+L303: notify on an unheld Condition.
+"""
+import threading
+
+
+class Unguarded:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._count = 0
+
+    def bump(self):
+        with self._lock:
+            self._count += 1
+
+    def peek(self):
+        return self._count             # L301: no lock held
+
+
+class BareWait:
+    def __init__(self):
+        self._cond = threading.Condition()
+        self._ready = False
+
+    def publish(self):
+        with self._cond:
+            self._ready = True
+        self._cond.notify_all()        # L303: lock already released
+
+    def consume(self):
+        with self._cond:
+            if not self._ready:
+                self._cond.wait()      # L302: if, not while

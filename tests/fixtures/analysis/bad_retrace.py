@@ -1,0 +1,48 @@
+# ruff: noqa
+"""Known-bad retrace fixtures.
+
+R401: Python branch on a traced parameter.
+R402: traced function mutating or freezing mutable external state.
+R403: unhashable literal at a static_argnums position.
+"""
+import jax
+
+_STEP_SIZE = 0.1
+
+
+def set_step(v):
+    global _STEP_SIZE
+    _STEP_SIZE = v
+
+
+@jax.jit
+def traced_branch(x, n):
+    if n > 0:                          # R401: n is traced
+        x = x + 1.0
+    return x
+
+
+@jax.jit
+def stale_closure(x):
+    return x * _STEP_SIZE              # R402: frozen at trace time
+
+
+class Counter:
+    def __init__(self):
+        self.n = 0
+
+    @jax.jit
+    def bump(self, x):
+        self.n = self.n + 1            # R402: trace-time write to self
+        return x + self.n
+
+
+def f(x, cfg):
+    return x
+
+
+jitted = jax.jit(f, static_argnums=(1,))
+
+
+def call_bad(x):
+    return jitted(x, [1, 2, 3])        # R403: list is unhashable

@@ -1,0 +1,22 @@
+# ruff: noqa
+"""Known-good collective fixtures — zero findings expected.
+
+Closure-driven loops and trace-time shape probes are uniform across the
+gang (the function traces once, identically, on every process), and the
+axis names come from the known mesh set.
+"""
+import jax
+from jax.experimental.shard_map import shard_map
+
+AXES = ("pod", "data")
+
+
+def uniform(x):
+    for ax in AXES:
+        x = jax.lax.pmean(x, ax)
+    if x.ndim == 2:
+        x = jax.lax.psum(x, "pod")
+    return x
+
+
+mapped = shard_map(uniform, mesh=None, in_specs=None, out_specs=None)

@@ -1,0 +1,26 @@
+# ruff: noqa
+"""Known-good donation fixtures — zero findings expected.
+
+The donated binding is consumed exactly once; later code uses the
+returned value (linear handoff) or rebinds the root (loop handoff).
+"""
+import jax
+
+
+def chunk(replay, rest):
+    return rest, replay
+
+
+fn = jax.jit(chunk, donate_argnums=(0,))
+aligned = jax.jit(chunk, donate_argnums=(0,), static_argnums=(1,))
+
+
+def linear_handoff(state):
+    rest, replay = fn(state.replay, state)
+    return rest, replay.count
+
+
+def loop_handoff(state):
+    for _ in range(4):
+        state = fn(state.replay, state)[0]
+    return state

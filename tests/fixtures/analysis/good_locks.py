@@ -1,0 +1,34 @@
+# ruff: noqa
+"""Known-good lock-discipline fixtures — zero findings expected."""
+import threading
+
+
+class Guarded:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._cond = threading.Condition()
+        self._count = 0
+        self._ready = False
+
+    def bump(self):
+        with self._lock:
+            self._count += 1
+
+    def peek(self):
+        with self._lock:
+            return self._count
+
+    def publish(self):
+        with self._cond:
+            self._ready = True
+            self._cond.notify_all()
+
+    def consume(self):
+        with self._cond:
+            while not self._ready:
+                self._cond.wait()
+            return self._ready
+
+    def consume_predicate(self):
+        with self._cond:
+            self._cond.wait_for(lambda: self._ready)

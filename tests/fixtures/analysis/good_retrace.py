@@ -1,0 +1,39 @@
+# ruff: noqa
+"""Known-good retrace fixtures — zero findings expected.
+
+is-None defaults, shape/dtype probes and len() resolve at trace time;
+static args marked via static_argnums may be branched on and must be
+hashable at call sites.
+"""
+import jax
+
+_SCALE = 2.0
+
+
+@jax.jit
+def trace_time_predicates(x, y=None):
+    if y is None:
+        y = 0.0
+    if x.ndim == 2:
+        x = x.sum(axis=0)
+    if len(x.shape) == 1:
+        x = x * _SCALE
+    return x + y
+
+
+def f(x, cfg):
+    return x * len(cfg)
+
+
+jitted = jax.jit(f, static_argnums=(1,))
+
+
+def call_good(x):
+    return jitted(x, (1, 2, 3))
+
+
+def static_branch_ok(x, n):
+    return x + n
+
+
+jitted_static = jax.jit(static_branch_ok, static_argnums=(1,))

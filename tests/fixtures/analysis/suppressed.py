@@ -1,0 +1,35 @@
+# ruff: noqa
+"""Suppression-mechanics fixtures.
+
+Expected findings: exactly one X001 (empty reason) and one L301 (the
+empty-reason waiver does not suppress).  Everything else is waived with
+a justification — def-line waivers cover the body, standalone comments
+cover the next statement.
+"""
+import threading
+
+
+class CallerHolds:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._cond = threading.Condition()
+        self._n = 0
+        self._flag = False
+
+    def bump(self):
+        with self._lock:
+            self._n += 1
+
+    def set_flag(self):
+        with self._cond:
+            self._flag = True
+
+    def _peek(self):  # repro-lint: disable=L301(caller holds self._lock)
+        return self._n
+
+    def peek_unlocked(self):  # repro-lint: disable=L301()
+        return self._n
+
+    def poke(self):
+        # repro-lint: disable=L303(benchmark-only poke; the race is acceptable here)
+        self._cond.notify_all()

@@ -1,0 +1,318 @@
+"""repro-lint (src/repro/analysis, DESIGN.md §12) — the four passes
+against the fixtures corpus, suppression and baseline mechanics, CLI
+exit codes, and the stale-baseline / lint-clean-repo meta-gates.
+
+Everything runs the analyzer in-process (it's stdlib-only and fast);
+one subprocess test pins the tools/repro_lint.py entry point.
+"""
+
+import subprocess
+import sys
+from pathlib import Path
+
+from repro.analysis import PASSES, RULES, SourceFile
+from repro.analysis import baseline as baseline_mod
+from repro.analysis.cli import (DEFAULT_ROOTS, analyze_file, main,
+                                run_paths)
+
+REPO = Path(__file__).resolve().parents[1]
+FIXTURES = REPO / "tests" / "fixtures" / "analysis"
+
+
+def lint(name: str):
+    """Unsuppressed (finding, snippet) pairs for one fixture."""
+    return analyze_file(str(FIXTURES / name), name)[0]
+
+
+def lint_text(text: str):
+    sf = SourceFile("<mem>", "mem.py", text=text)
+    found = list(sf.bad_suppressions)
+    for p in PASSES:
+        found.extend(p(sf))
+    return sorted(f for f in found if not sf.is_suppressed(f))
+
+
+def rules_at(found):
+    return sorted((f.rule, f.line) for f, _ in found)
+
+
+# -- pass 1: donation safety ------------------------------------------------
+
+def test_bad_donation_fixture():
+    got = rules_at(lint("bad_donation.py"))
+    assert got == [("D101", 19), ("D101", 26), ("D102", 35), ("D102", 36)]
+
+
+def test_good_donation_fixture():
+    assert lint("good_donation.py") == []
+
+
+# -- pass 2: collective uniformity ------------------------------------------
+
+def test_bad_collectives_fixture():
+    got = rules_at(lint("bad_collectives.py"))
+    assert got == [("C201", 16), ("C201", 22), ("C202", 27)]
+
+
+def test_good_collectives_fixture():
+    assert lint("good_collectives.py") == []
+
+
+# -- pass 3: lock discipline ------------------------------------------------
+
+def test_bad_locks_fixture():
+    got = rules_at(lint("bad_locks.py"))
+    assert got == [("L301", 21), ("L302", 37), ("L303", 32)]
+
+
+def test_good_locks_fixture():
+    assert lint("good_locks.py") == []
+
+
+# -- pass 4: retrace hazards ------------------------------------------------
+
+def test_bad_retrace_fixture():
+    got = rules_at(lint("bad_retrace.py"))
+    assert got == [("R401", 20), ("R402", 27), ("R402", 36), ("R403", 48)]
+
+
+def test_good_retrace_fixture():
+    assert lint("good_retrace.py") == []
+
+
+def test_static_argnums_branch_is_exempt():
+    text = (
+        "import jax\n"
+        "def f(x, n):\n"
+        "    if n > 0:\n"
+        "        return x + n\n"
+        "    return x\n"
+        "g = jax.jit(f, static_argnums=(1,))\n")
+    assert lint_text(text) == []
+    # …but without the static marking the same branch is a finding
+    assert [f.rule for f in lint_text(text.replace(
+        ", static_argnums=(1,)", ""))] == ["R401"]
+
+
+def test_wait_for_is_exempt_from_l302():
+    text = (
+        "import threading\n"
+        "class C:\n"
+        "    def __init__(self):\n"
+        "        self._cond = threading.Condition()\n"
+        "        self._ok = False\n"
+        "    def set(self):\n"
+        "        with self._cond:\n"
+        "            self._ok = True\n"
+        "    def get(self):\n"
+        "        with self._cond:\n"
+        "            self._cond.wait_for(lambda: self._ok)\n")
+    assert lint_text(text) == []
+
+
+# -- suppressions -----------------------------------------------------------
+
+def test_suppression_fixture():
+    # the justified waivers (def-line and standalone-comment forms) hold;
+    # the empty-reason waiver yields X001 *and* leaves its L301 alive
+    got = rules_at(lint("suppressed.py"))
+    assert got == [("L301", 31), ("X001", 30)]
+
+
+def test_rule_registry_covers_all_emitted_rules():
+    for name in ("D101", "D102", "C201", "C202", "L301", "L302", "L303",
+                 "R401", "R402", "R403", "X000", "X001"):
+        assert name in RULES
+
+
+def test_parse_error_is_a_finding(tmp_path):
+    bad = tmp_path / "broken.py"
+    bad.write_text("def f(:\n")
+    found = analyze_file(str(bad), "broken.py")[0]
+    assert [f.rule for f, _ in found] == ["X000"]
+
+
+# -- baseline ---------------------------------------------------------------
+
+def test_baseline_round_trip(tmp_path):
+    found = lint("bad_locks.py")
+    payload = baseline_mod.to_payload(found)
+    path = tmp_path / "baseline.json"
+    path.write_text(baseline_mod.render(payload))
+    fresh, absorbed = baseline_mod.subtract(found, baseline_mod.load(str(path)))
+    assert fresh == [] and absorbed == len(found)
+
+
+def test_baseline_matches_on_snippet_not_line(tmp_path):
+    # an unrelated edit that shifts every line must not resurrect
+    # baselined findings: matching is (file, rule, stripped source line)
+    found = lint("bad_locks.py")
+    path = tmp_path / "baseline.json"
+    path.write_text(baseline_mod.render(baseline_mod.to_payload(found)))
+    shifted = tmp_path / "bad_locks.py"
+    shifted.write_text("# an unrelated leading comment\n\n"
+                       + (FIXTURES / "bad_locks.py").read_text())
+    moved = analyze_file(str(shifted), "bad_locks.py")[0]
+    assert {f.line for f, _ in moved} != {f.line for f, _ in found}
+    fresh, absorbed = baseline_mod.subtract(moved, baseline_mod.load(str(path)))
+    assert fresh == [] and absorbed == len(found)
+
+
+def test_baseline_is_a_multiset(tmp_path):
+    found = lint("bad_locks.py")
+    path = tmp_path / "baseline.json"
+    path.write_text(baseline_mod.render(baseline_mod.to_payload(found[:1])))
+    fresh, absorbed = baseline_mod.subtract(found, baseline_mod.load(str(path)))
+    assert absorbed == 1 and len(fresh) == len(found) - 1
+
+
+# -- CLI --------------------------------------------------------------------
+
+def test_cli_check_fails_on_each_bad_fixture(tmp_path):
+    empty = str(tmp_path / "none.json")
+    for name in ("bad_donation.py", "bad_collectives.py", "bad_locks.py",
+                 "bad_retrace.py"):
+        code = main([str(FIXTURES / name), "--check", "--baseline", empty])
+        assert code == 1, name
+
+
+def test_cli_check_passes_on_good_fixtures(tmp_path):
+    empty = str(tmp_path / "none.json")
+    for name in ("good_donation.py", "good_collectives.py",
+                 "good_locks.py", "good_retrace.py"):
+        code = main([str(FIXTURES / name), "--check", "--baseline", empty])
+        assert code == 0, name
+
+
+def test_cli_without_check_reports_but_exits_zero(tmp_path):
+    code = main([str(FIXTURES / "bad_locks.py"),
+                 "--baseline", str(tmp_path / "none.json")])
+    assert code == 0
+
+
+def test_cli_usage_error_on_missing_path():
+    assert main(["/no/such/path.py", "--check"]) == 2
+
+
+def test_cli_write_baseline_then_check(tmp_path):
+    base = str(tmp_path / "baseline.json")
+    target = str(FIXTURES / "bad_retrace.py")
+    assert main([target, "--write-baseline", "--baseline", base]) == 0
+    assert main([target, "--check", "--baseline", base]) == 0
+
+
+def test_cli_report_artifact(tmp_path):
+    import json
+    report = tmp_path / "report.json"
+    main([str(FIXTURES / "bad_donation.py"),
+          "--baseline", str(tmp_path / "none.json"),
+          "--report", str(report)])
+    payload = json.loads(report.read_text())
+    assert {f["rule"] for f in payload["findings"]} == {"D101", "D102"}
+    assert all({"file", "line", "rule", "name", "message"} <= set(f)
+               for f in payload["findings"])
+
+
+def test_tools_entry_point_gates_the_repo():
+    # the acceptance gate itself: the committed tree must be lint-clean
+    # (fixed, suppressed-with-reason, or baselined) through the
+    # PYTHONPATH-free entry point CI uses
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "tools" / "repro_lint.py"), "--check"],
+        cwd=str(REPO), capture_output=True, text=True, timeout=120)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+# -- meta-gates -------------------------------------------------------------
+
+def repo_findings():
+    paths = [str(REPO / d) for d in DEFAULT_ROOTS if (REPO / d).is_dir()]
+    return run_paths(paths, str(REPO))
+
+
+def test_committed_baseline_is_fresh():
+    # stale-baseline detector: --write-baseline over the committed tree
+    # must reproduce analysis/baseline.json byte for byte
+    committed = (REPO / "analysis" / "baseline.json").read_text()
+    fresh = baseline_mod.render(baseline_mod.to_payload(repo_findings()))
+    assert fresh == committed, (
+        "analysis/baseline.json is stale — rerun "
+        "`python -m repro.analysis --write-baseline` and commit it")
+
+
+def test_analysis_package_is_stdlib_only():
+    # the CI lint stage runs repro-lint without the ML deps installed;
+    # the analyzer must never grow a jax/numpy import
+    import ast
+    allowed = {"__future__", "argparse", "ast", "dataclasses", "io", "json",
+               "os", "re", "sys", "tokenize", "typing"}
+    pkg = REPO / "src" / "repro" / "analysis"
+    for py in pkg.glob("*.py"):
+        tree = ast.parse(py.read_text())
+        for node in ast.walk(tree):
+            mods = []
+            if isinstance(node, ast.Import):
+                mods = [a.name for a in node.names]
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                mods = [node.module]
+            for m in mods:
+                root = m.split(".")[0]
+                assert root in allowed or m.startswith("repro.analysis"), (
+                    f"{py.name} imports {m} — repro.analysis is stdlib-only")
+
+
+# -- the audited production sites stay pinned -------------------------------
+
+def _lint_real(relpath: str):
+    path = REPO / relpath
+    return analyze_file(str(path), relpath)[0]
+
+
+def test_audited_sites_are_clean():
+    for rel in ("src/repro/runtime/executors.py",
+                "src/repro/service/server.py",
+                "src/repro/service/rate_limiter.py",
+                "src/repro/launch/multiprocess.py"):
+        assert _lint_real(rel) == [], rel
+
+
+def test_unguarding_server_shard_state_is_caught(tmp_path):
+    # acceptance demo: dedent a guarded read out of `with self._lock:`
+    # in ReplayService.insert and L301 must fire
+    src = (REPO / "src" / "repro" / "service" / "server.py").read_text()
+    before = '            total = self._inserts\n        return {"stopped"'
+    after = '        total = self._inserts\n        return {"stopped"'
+    assert before in src
+    mutated = tmp_path / "server.py"
+    mutated.write_text(src.replace(before, after, 1))
+    found = analyze_file(str(mutated), "server.py")[0]
+    assert ("L301", "_inserts") in [
+        (f.rule, "_inserts" if "_inserts" in f.message else "")
+        for f, _ in found]
+
+
+def test_reading_donated_replay_after_jit_is_caught(tmp_path):
+    # acceptance demo: read state.replay after the donating chunk call
+    # in FusedExecutor and D101 must fire
+    src = (REPO / "src" / "repro" / "runtime" / "executors.py").read_text()
+    before = ("        def run(state: LoopState):\n"
+              "            return fn(state.replay, state._replace(replay=()))\n")
+    after = ("        def run(state: LoopState):\n"
+             "            out = fn(state.replay, state._replace(replay=()))\n"
+             "            leftover = state.replay.count\n"
+             "            return out, leftover\n")
+    assert before in src
+    mutated = tmp_path / "executors.py"
+    mutated.write_text(src.replace(before, after, 1))
+    found = analyze_file(str(mutated), "executors.py")[0]
+    assert "D101" in {f.rule for f, _ in found}
+
+
+def test_misaligned_donate_argnum_is_caught(tmp_path):
+    src = (REPO / "src" / "repro" / "runtime" / "executors.py").read_text()
+    assert "donate_argnums=(0,)" in src
+    mutated = tmp_path / "executors.py"
+    mutated.write_text(src.replace("donate_argnums=(0,)",
+                                   "donate_argnums=(7,)", 1))
+    found = analyze_file(str(mutated), "executors.py")[0]
+    assert "D102" in {f.rule for f, _ in found}

@@ -440,10 +440,10 @@ def test_compare_gate(tmp_path):
     assert compare.THRESHOLD == 0.30
 
 
-def test_compare_warns_when_no_points_match(tmp_path, capsys):
+def test_compare_fails_hard_when_no_points_match(tmp_path, capsys):
     """An identity-field change (e.g. a new sweep env count) de-matches
-    every point: the gate must say it checked nothing rather than print
-    a vacuous OK."""
+    every point: a baseline whose points all fail to match gated
+    nothing, so the gate must fail hard, not print a vacuous OK."""
     from benchmarks import compare
 
     base_dir = tmp_path / "base"
@@ -457,8 +457,15 @@ def test_compare_warns_when_no_points_match(tmp_path, capsys):
             {"figure": "fig9", "metric": "env_steps_per_s",
              "points": [pt]}))
     assert compare.compare_dirs(str(fresh_dir), str(base_dir),
-                                compare.THRESHOLD) == 0   # tolerated...
-    assert "0 matching points" in capsys.readouterr().out  # ...but loud
+                                compare.THRESHOLD) == 1   # blocking
+    assert "0 matching points" in capsys.readouterr().out
+
+    # an *empty* baseline points list still gates nothing quietly —
+    # only a baseline that has identities to match can fail this way
+    (base_dir / "BENCH_fig9.json").write_text(json.dumps(
+        {"figure": "fig9", "metric": "env_steps_per_s", "points": []}))
+    assert compare.compare_dirs(str(fresh_dir), str(base_dir),
+                                compare.THRESHOLD) == 0
 
 
 # -- plan → executor instantiation -------------------------------------------

@@ -1,0 +1,19 @@
+#!/usr/bin/env python3
+"""Standalone entry point for repro-lint — usable without PYTHONPATH:
+
+    python tools/repro_lint.py [--check] [paths…]
+
+Equivalent to ``PYTHONPATH=src python -m repro.analysis``; see
+DESIGN.md §12 for the rule table and suppression workflow.
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+from repro.analysis.cli import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main())
