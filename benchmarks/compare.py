@@ -38,17 +38,21 @@ from typing import Dict, Iterable, List, Tuple
 THRESHOLD = 0.30
 
 BENCH_FILES = ("BENCH_fig9.json", "BENCH_fig10.json", "BENCH_replay.json",
-               "BENCH_serve.json")
+               "BENCH_serve.json", "BENCH_actor.json")
 
 # fields that identify a point (everything but the measurements); the
 # median-of-N dispersion record (repeats/rel_spread) is measurement-side
 # so old baselines without it still match.  samples_per_s and
-# realized_spi are the serve figure's secondary measurements — the gate
-# compares its primary metric (inserts_per_s) only.
+# realized_spi are the serve figure's secondary measurements, and the
+# actor figure's latencies/swap counts are likewise secondary — each
+# gate compares its figure's primary metric only.
 _MEASUREMENT_FIELDS = {"env_steps_per_s", "replay_ops_per_s",
                        "inserts_per_s", "speedup_vs_sync",
                        "repeats", "rel_spread",
-                       "samples_per_s", "realized_spi"}
+                       "samples_per_s", "realized_spi",
+                       "requests_per_s", "p50_ms", "p99_ms",
+                       "p99_before_swap_ms", "p99_after_swap_ms",
+                       "param_swaps"}
 
 
 def point_key(point: dict) -> Tuple:

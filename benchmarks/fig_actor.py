@@ -1,0 +1,280 @@
+"""Actor-serve load generator: latency p50/p99 + sustained requests/s
+for the continuous-batching inference frontend (DESIGN.md §13).
+
+The training sweeps measure the learn loop; this measures the traffic
+surface — N simulated users submitting token prompts at a target
+request rate against a live ``ActorServer``.  Each measured run also
+performs the production param drill: at 40% completion a new parameter
+version is published through the REPLAY SERVICE's versioned params
+channel (service/server.py ``put_params`` — the same publisher a
+training learner uses), and the point records p99 latency before and
+after the hot swap, so the §13 no-latency-spike contract is a measured
+number, not a claim.
+
+Cells are (users × target_rps) with one deliberate **overload** cell
+(target far above capacity): sub-capacity cells answer "can the server
+hold the rate" (the CI ``--check`` floor), the overload cell measures
+raw serving capacity — the number the >30% compare gate bites on.
+
+Metric: ``requests_per_s`` (primary, gated) with p50/p99 and the swap
+drill's p99 split as measurement-side companions; median-of-N with
+recorded dispersion (benchmarks/timing.py).  ``--emit-json DIR`` writes
+``BENCH_actor.json`` (figure "actor", benchmarks/schema.py); the
+committed repo-root baseline rides the same perf gate as the other
+figures.  ``--check`` makes the smoke run self-asserting for CI:
+sustained floor on sub-capacity cells + an observed version advance.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pickle
+import sys
+import threading
+import time
+
+import numpy as np
+
+from benchmarks.timing import REPEATS
+
+ACTOR_JSON = "BENCH_actor.json"
+
+ARCH = "granite_8b"        # dense smoke config — the servable family
+SLOTS = 4
+GEN_TOKENS = 8
+BUCKETS = (4, 8)
+MAX_LEN = BUCKETS[-1] + GEN_TOKENS
+PUBLISH_AT = 0.4           # fraction of completions before the param swap
+SUSTAIN_FLOOR = 0.6        # --check: sub-capacity cells must hold this
+
+# (users, target_rps, overload) sweep cells
+FULL_CELLS = ((1, 2.0, False), (2, 2.0, False), (4, 4.0, False),
+              (2, 16.0, True))
+SMOKE_CELLS = ((1, 2.0, False), (2, 2.0, False), (2, 16.0, True))
+
+
+def build_server():
+    """One warm server + its replay-service param publisher."""
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import backbone
+    from repro.serve import ActorServeConfig, ActorServer
+    from repro.service import ReplayService, ReplayServiceConfig
+
+    cfg = get_config(ARCH, smoke=True)
+    params = backbone.init_params(cfg, jax.random.PRNGKey(0))
+    # the publisher: the same versioned channel a training learner's
+    # put_params rides (service/server.py); replay shards are unused here
+    service = ReplayService(
+        ReplayServiceConfig(capacity_per_shard=8, n_shards=1),
+        {"obs": np.zeros((2,), np.float32)})
+    # version 0 aligns the buffer with the service channel's counter
+    # (put_params publishes version 1, 2, ... — the poll floor must
+    # start below the first publish)
+    server = ActorServer(
+        cfg, params,
+        ActorServeConfig(slots=SLOTS, max_len=MAX_LEN, buckets=BUCKETS,
+                         max_new_tokens=GEN_TOKENS),
+        params_version=0, param_source=service)
+    blob = pickle.dumps(jax.tree.map(np.asarray, params),
+                        protocol=pickle.HIGHEST_PROTOCOL)
+    return cfg, server, service, blob
+
+
+def load_run(cfg, server, service, blob, *, users: int, n_requests: int,
+             target_rps: float, seed: int) -> dict:
+    """One measured run: open-loop Poisson arrivals split across
+    ``users`` submitter threads, one mid-run param publication through
+    the service channel, client-side latency collection."""
+    rng = np.random.RandomState(seed)
+    per_user = n_requests // users
+    n_total = per_user * users
+    prompts = [rng.randint(0, cfg.vocab_size, size=int(n))
+               for n in rng.randint(1, BUCKETS[-1] + 1, size=n_total)]
+    # deterministic open-loop spacing at exactly the target rate: the
+    # measured dispersion then reflects the SERVER, not arrival noise
+    # (Poisson gaps at n≈12 made rel_spread arrival-dominated, which
+    # would widen the compare gate's tolerance to uselessness)
+    gap = users / target_rps
+    gaps = np.full((users, per_user), gap)
+    gaps[:, 0] = gap * (np.arange(users) + 1) / users  # stagger users
+
+    handles = [[None] * per_user for _ in range(users)]
+    submitted = threading.Barrier(users + 1)
+
+    def user(u: int):
+        submitted.wait()
+        for i in range(per_user):
+            time.sleep(gaps[u][i])
+            handles[u][i] = server.submit(prompts[u * per_user + i])
+
+    threads = [threading.Thread(target=user, args=(u,)) for u in range(users)]
+    for t in threads:
+        t.start()
+    v0 = server.params.version
+    submitted.wait()
+    t0 = time.perf_counter()
+
+    # the swap drill: publish once PUBLISH_AT of the requests completed
+    flat = lambda: [h for row in handles for h in row if h is not None]  # noqa: E731
+    swap_t = None
+    while True:
+        done = sum(h.done() for h in flat())
+        if done >= max(1, int(PUBLISH_AT * n_total)):
+            service.put_params(blob)
+            swap_t = time.perf_counter()
+            break
+        if done >= n_total:
+            break
+        time.sleep(0.005)
+
+    for t in threads:
+        t.join()
+    completions = [h.result(timeout=300.0) for h in flat()]
+    t_end = max(c.finished_at for c in completions)
+    lat_ms = np.asarray([c.latency_s for c in completions]) * 1e3
+    record = {
+        "requests_per_s": n_total / (t_end - t0),
+        "p50_ms": float(np.percentile(lat_ms, 50)),
+        "p99_ms": float(np.percentile(lat_ms, 99)),
+        "param_swaps": int(server.params.version - v0),
+    }
+    if swap_t is not None:
+        before = [c.latency_s * 1e3 for c in completions
+                  if c.finished_at < swap_t]
+        after = [c.latency_s * 1e3 for c in completions
+                 if c.finished_at >= swap_t]
+        if before:
+            record["p99_before_swap_ms"] = float(np.percentile(before, 99))
+        if after:
+            record["p99_after_swap_ms"] = float(np.percentile(after, 99))
+    return record
+
+
+def actor_points(cells=FULL_CELLS, n_requests: int = 12,
+                 repeats: int = REPEATS, verbose: bool = False):
+    """The committed sweep: one warm server serves every cell; each cell
+    is median-of-``repeats`` runs keyed on sustained requests/s."""
+    cfg, server, service, blob = build_server()
+    server.start()
+    try:
+        # warm both prefill buckets + the decode program out of the
+        # measurement window
+        warm = [server.submit(np.arange(1 + (BUCKETS[-1] - 1) * i,
+                                        dtype=np.int32) % cfg.vocab_size)
+                for i in (0, 1)]
+        for h in warm:
+            h.result(timeout=300.0)
+        points = []
+        for users, target_rps, overload in cells:
+            runs = []
+            for r in range(max(1, repeats)):
+                runs.append(load_run(
+                    cfg, server, service, blob, users=users,
+                    n_requests=n_requests, target_rps=target_rps,
+                    seed=1000 * users + r))
+            runs.sort(key=lambda rec: rec["requests_per_s"])
+            med = runs[len(runs) // 2]
+            rates = [rec["requests_per_s"] for rec in runs]
+            spread = ((max(rates) - min(rates)) / med["requests_per_s"]
+                      if med["requests_per_s"] > 0 else 0.0)
+            point = {
+                "users": users,
+                "target_rps": target_rps,
+                "overload": overload,
+                "slots": SLOTS,
+                "gen_tokens": GEN_TOKENS,
+                "arch": cfg.name,
+                "prompt_buckets": "/".join(str(b) for b in BUCKETS),
+                "repeats": max(1, repeats),
+                "rel_spread": round(spread, 4),
+                **{k: (round(v, 2) if isinstance(v, float) else v)
+                   for k, v in med.items()},
+            }
+            points.append(point)
+            if verbose:
+                print(f"# users={users} rate={target_rps} "
+                      f"overload={overload}: "
+                      f"{point['requests_per_s']} req/s, "
+                      f"p99 {point['p99_ms']} ms, "
+                      f"swaps {point['param_swaps']}", file=sys.stderr)
+        return points, server.stats()
+    finally:
+        server.stop()
+        service.stop()
+
+
+def check_points(points, stats) -> int:
+    """CI self-check: sub-capacity cells hold the target rate; the
+    mid-run publication was observed (version counter advanced) with
+    the p99 split recorded.  Returns the number of failures."""
+    failures = 0
+    for p in points:
+        label = f"users={p['users']} rate={p['target_rps']}"
+        if not p["overload"]:
+            floor = SUSTAIN_FLOOR * p["target_rps"]
+            ok = p["requests_per_s"] >= floor
+            print(f"{'PASS' if ok else 'FAIL'} {label}: sustained "
+                  f"{p['requests_per_s']} req/s (floor {floor:.2f})")
+            failures += not ok
+        swapped = p.get("param_swaps", 0) >= 1
+        recorded = "p99_before_swap_ms" in p
+        print(f"{'PASS' if swapped and recorded else 'FAIL'} {label}: "
+              f"param swap observed={swapped} "
+              f"p99 before/after = {p.get('p99_before_swap_ms')}"
+              f"/{p.get('p99_after_swap_ms')} ms")
+        failures += not (swapped and recorded)
+    print(f"PARAM_VERSION={stats['params_version']} "
+          f"SWAPS={stats['param_swaps']}")
+    return failures
+
+
+def emit_json(out_dir: str, smoke: bool = False, check: bool = False) -> str:
+    points, stats = actor_points(
+        cells=SMOKE_CELLS if smoke else FULL_CELLS, verbose=True)
+    payload = {
+        "figure": "actor",
+        "metric": "requests_per_s",
+        "smoke": smoke,
+        "points": points,
+    }
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, ACTOR_JSON)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"# wrote {path} ({len(points)} points)", file=sys.stderr)
+    if check and check_points(points, stats):
+        raise SystemExit("actor-serve check failed")
+    return path
+
+
+def run(csv=True):
+    """CSV mode for the benchmarks.run harness."""
+    points, _ = actor_points(cells=SMOKE_CELLS, n_requests=8, repeats=1)
+    rows = [(f"actor/u{p['users']}_r{p['target_rps']}"
+             + ("_overload" if p["overload"] else ""),
+             1e6 / p["requests_per_s"], p["requests_per_s"])
+            for p in points]
+    if csv:
+        for name, us, derived in rows:
+            print(f"{name},{us:.3f},{derived:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--emit-json", default=None, metavar="DIR")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized sweep, same schema and code paths")
+    ap.add_argument("--check", action="store_true",
+                    help="fail unless sub-capacity cells sustain the "
+                         "target and the mid-run param swap is observed")
+    args = ap.parse_args()
+    if args.emit_json:
+        emit_json(args.emit_json, smoke=args.smoke, check=args.check)
+    else:
+        run(csv=True)

@@ -28,6 +28,10 @@ Machine-readable perf trajectory: ``--emit-json DIR`` writes
     BENCH_serve.json — replay-service sustained insert/sample rates vs
                        concurrent writer count (benchmarks/fig_serve) —
                        the planner's service-shape inputs
+    BENCH_actor.json — actor-serve load generator (benchmarks/fig_actor):
+                       sustained requests/s + p50/p99 latency of the
+                       continuous-batching inference frontend under N
+                       simulated users, with the mid-run param-swap drill
 
 Every point is a median-of-N repeat with its dispersion recorded
 (benchmarks/timing.py — the groundwork for a blocking perf gate).
@@ -50,12 +54,13 @@ import traceback
 
 def emit_json(out_dir: str, smoke: bool = False,
               wallclock: bool = False) -> None:
-    from benchmarks import fig10_scalability, fig_serve, replay_micro
+    from benchmarks import fig10_scalability, fig_actor, fig_serve, replay_micro
     from repro.runtime import planner
 
     os.makedirs(out_dir, exist_ok=True)
     replay_micro.emit_json(out_dir, smoke=smoke)
     fig_serve.emit_json(out_dir, smoke=smoke)
+    fig_actor.emit_json(out_dir, smoke=smoke)
     prof = planner.profile(smoke=smoke)
     fig10_points = list(prof["fig10_points"])
     if wallclock:
@@ -144,7 +149,7 @@ def main() -> None:
 
     if args.only or not args.emit_json:
         from benchmarks import (fig8_baseline, fig9_fanout, fig10_scalability,
-                                fig11_plugin, fig12_dse, fig_serve,
+                                fig11_plugin, fig12_dse, fig_actor, fig_serve,
                                 replay_micro, roofline)
         suites = {
             "fig8": fig8_baseline.run,
@@ -154,6 +159,7 @@ def main() -> None:
             "fig12": fig12_dse.run,
             "replay": replay_micro.run,
             "serve": fig_serve.run,
+            "actor": fig_actor.run,
             "roofline": roofline.run,
         }
         chosen = (args.only.split(",") if args.only else list(suites))

@@ -43,6 +43,7 @@ FIGURE_METRICS: Dict[str, str] = {
     "fig10": "env_steps_per_s",
     "replay": "replay_ops_per_s",
     "serve": "inserts_per_s",
+    "actor": "requests_per_s",
 }
 
 POINT_FIELDS: Dict[str, Dict[str, tuple]] = {
@@ -85,6 +86,27 @@ POINT_FIELDS: Dict[str, Dict[str, tuple]] = {
         "spi": ((int, float), True),       # configured samples-per-insert
         "batch_size": (int, True),
         "realized_spi": ((int, float), False),
+    },
+    # actor-serve load generator (benchmarks/fig_actor.py): sustained
+    # request rate + client latency of the continuous-batching inference
+    # frontend (repro/serve) under N simulated users, with the mid-run
+    # param-publication drill's p99 split.  Latencies and swap counts
+    # are measurement-side (compare.py gates requests_per_s only).
+    "actor": {
+        **_COMMON_POINT,
+        "requests_per_s": ((int, float), True),
+        "users": (int, True),
+        "target_rps": ((int, float), True),
+        "overload": (bool, True),
+        "slots": (int, True),
+        "gen_tokens": (int, True),
+        "arch": (str, True),
+        "prompt_buckets": (str, True),
+        "p50_ms": ((int, float), True),
+        "p99_ms": ((int, float), True),
+        "p99_before_swap_ms": ((int, float), False),
+        "p99_after_swap_ms": ((int, float), False),
+        "param_swaps": (int, False),
     },
     # replay-transaction microbenchmark (benchmarks/replay_micro.py)
     "replay": {

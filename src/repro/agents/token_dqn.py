@@ -156,7 +156,20 @@ def train_step(
 
 
 def serve_step(cfg: ModelConfig, shd: ShardingConfig, params, cache,
-               tokens) -> Tuple[jax.Array, Any]:
-    """Actor act(): one KV-cached decode step → greedy Q action + cache."""
-    logits, cache = backbone.decode_step(cfg, shd, params, cache, tokens)
-    return jnp.argmax(logits[:, -1, :], axis=-1), cache
+               tokens, slot_mask=None) -> Tuple[jax.Array, Any]:
+    """Actor act(): one KV-cached decode step → greedy Q action + cache.
+
+    ``slot_mask`` is the continuous-batching hook (DESIGN.md §13): a
+    boolean that must broadcast against every cache leaf — scalar under
+    the serve engine's per-slot vmap.  A masked-out (free) slot still
+    rides the batched compute, but its cache (including ``pos``) is
+    frozen in place and its action pinned to 0, so a stale slot can
+    never advance state between a release and the next admission.
+    """
+    logits, new_cache = backbone.decode_step(cfg, shd, params, cache, tokens)
+    action = jnp.argmax(logits[:, -1, :], axis=-1)
+    if slot_mask is None:
+        return action, new_cache
+    new_cache = jax.tree.map(
+        lambda new, old: jnp.where(slot_mask, new, old), new_cache, cache)
+    return jnp.where(slot_mask, action, jnp.zeros_like(action)), new_cache

@@ -1,0 +1,32 @@
+"""Continuous-batching actor-inference frontend (DESIGN.md §13).
+
+The act() path at user scale: a request queue feeding dynamic batches
+with prompt-length padding buckets (retraces bounded to the bucket
+set), a scheduler that admits new requests into free decode slots each
+serve step (continuous batching over per-slot KV caches, finished
+sequences evicted in place), and double-buffered parameter publication
+reusing the ``params_for_acting`` contract — the replay service's
+versioned params channel (service/server.py) is the publisher, so a
+training learner hot-swaps policy weights under live traffic.
+"""
+
+from repro.serve.buckets import BucketSpec
+from repro.serve.engine import DecodeEngine, DecodeState, SUPPORTED_FAMILIES
+from repro.serve.params import ParamDoubleBuffer, ServiceParamChannel
+from repro.serve.scheduler import Completion, Request, Scheduler
+from repro.serve.server import ActorServeConfig, ActorServer, ServeHandle
+
+__all__ = [
+    "ActorServeConfig",
+    "ActorServer",
+    "BucketSpec",
+    "Completion",
+    "DecodeEngine",
+    "DecodeState",
+    "ParamDoubleBuffer",
+    "Request",
+    "Scheduler",
+    "ServeHandle",
+    "ServiceParamChannel",
+    "SUPPORTED_FAMILIES",
+]

@@ -1,0 +1,116 @@
+"""Double-buffered parameter publication for the serve path (DESIGN.md §13).
+
+The serving analogue of the training runtime's ``params_for_acting``
+double buffer (agents/base.py, AsyncExecutor): the learner updates
+fresh params on its own clock, the actor acts on a stable copy, and the
+handoff happens at a controlled boundary.  Here the boundary is the
+``serve_step``: ``ParamDoubleBuffer.stage`` may be called from any
+thread at any time (it only touches the *staged* half), and the serve
+loop calls ``swap_if_staged`` exactly once per step, so one batch step
+can never mix two parameter versions — and the swap itself is a pointer
+flip, not a copy, so live traffic sees no latency spike.
+
+``ServiceParamChannel`` plugs the replay service's versioned params
+channel (service/server.py ``put_params``/``get_params``) in as the
+publisher: a training learner pushes ``params_for_acting``-shaped trees
+to the replay server it already talks to, and the actor frontend polls
+the same channel — no second wire protocol.  Works against both the
+in-process ``ReplayService`` (blob bytes) and the TCP ``ReplayClient``
+(pre-unpickled ``params``).
+"""
+
+from __future__ import annotations
+
+import pickle
+import threading
+from typing import Any, Optional, Tuple
+
+Pytree = Any
+
+
+class ParamDoubleBuffer:
+    """live/staged versioned parameter pair with boundary-only swaps."""
+
+    def __init__(self, params: Pytree, version: int = 0):
+        self._lock = threading.Lock()
+        self._live = params
+        self._live_version = int(version)
+        self._staged: Optional[Tuple[int, Pytree]] = None
+        self._swaps = 0
+
+    def stage(self, params: Pytree, version: Optional[int] = None) -> int:
+        """Publish a new tree (any thread).  Does NOT touch the live
+        half — the serve loop picks it up at its next step boundary.
+        Monotonic versions only; a stale publish is dropped."""
+        with self._lock:
+            if version is None:
+                staged_v = self._staged[0] if self._staged else self._live_version
+                version = staged_v + 1
+            version = int(version)
+            if version <= self._live_version or (
+                    self._staged is not None and version <= self._staged[0]):
+                return self._live_version  # stale publish — keep what we have
+            self._staged = (version, params)
+            return version
+
+    def swap_if_staged(self) -> Tuple[Pytree, int, bool]:
+        """Serve-loop boundary: promote the staged tree if any.  Returns
+        ``(live params, live version, swapped)``."""
+        with self._lock:
+            if self._staged is not None:
+                self._live_version, self._live = self._staged
+                self._staged = None
+                self._swaps += 1
+                return self._live, self._live_version, True
+            return self._live, self._live_version, False
+
+    @property
+    def version(self) -> int:
+        with self._lock:
+            return self._live_version
+
+    @property
+    def staged_version(self) -> Optional[int]:
+        with self._lock:
+            return self._staged[0] if self._staged else None
+
+    @property
+    def swaps(self) -> int:
+        with self._lock:
+            return self._swaps
+
+
+class ServiceParamChannel:
+    """Poll the replay service's versioned param channel into a
+    ``ParamDoubleBuffer``.  ``source`` is duck-typed: anything with
+    ``get_params(min_version=..., timeout=...)`` — the in-process
+    ``ReplayService`` or the TCP ``ReplayClient``."""
+
+    def __init__(self, source: Any, buffer: ParamDoubleBuffer):
+        self.source = source
+        self.buffer = buffer
+        self._seen = buffer.version
+
+    def poll(self) -> bool:
+        """Non-blocking pull: stage the channel's tree iff it carries a
+        version newer than anything we've seen.  Returns True on a new
+        stage."""
+        floor = self._seen
+        staged = self.buffer.staged_version
+        if staged is not None:
+            floor = max(floor, staged)
+        try:
+            reply = self.source.get_params(min_version=floor + 1, timeout=0.0)
+        except TimeoutError:
+            return False
+        if reply.get("stopped") and reply.get("version", 0) <= floor:
+            return False
+        version = int(reply["version"])
+        if version <= floor:
+            return False
+        params = reply.get("params")
+        if params is None:
+            params = pickle.loads(reply["blob"])
+        self._seen = version
+        self.buffer.stage(params, version)
+        return True

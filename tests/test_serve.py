@@ -1,0 +1,443 @@
+"""Continuous-batching actor-server tests (DESIGN.md §13).
+
+The invariants that make the serve frontend trustworthy, each pinned:
+bucket assignment is a pure deterministic function with hard edges;
+prefill retraces are bounded to the bucket set (compile-counter spy) and
+the vmapped decode compiles exactly once; a finished slot is reused by
+the next queued request (continuous batching, no global drain); a batch
+step never mixes two parameter versions and a mid-step publication only
+lands at the next step boundary; continuous batching is BIT-EXACT
+against solo greedy decodes (slot isolation + pad-shadowing, the
+strongest single check); token accounting is closed-form exact; the
+"actor" BENCH schema accepts the emitted shape and rejects malformed
+payloads; and the bench-archive merge tool is superset-safe including
+the silent-cache-miss drill.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from benchmarks import schema
+from repro.agents import token_dqn
+from repro.configs import get_config
+from repro.models import backbone
+from repro.models.config import NO_SHARDING
+from repro.serve import (ActorServeConfig, ActorServer, BucketSpec,
+                         DecodeEngine, ParamDoubleBuffer, Scheduler,
+                         ServiceParamChannel)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(scope="module")
+def smoke():
+    cfg = get_config("granite_8b", smoke=True)
+    params = backbone.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _drain(sched, params, version=0, max_steps=500):
+    completions = []
+    for _ in range(max_steps):
+        if not sched.busy:
+            return completions
+        completions.extend(sched.serve_step(params, version))
+    raise AssertionError(f"scheduler did not drain in {max_steps} steps")
+
+
+def _solo_greedy(cfg, params, prompt, n_tokens, max_len):
+    """Reference: exact-length prefill + plain decode loop, batch 1."""
+    logits, cache = backbone.prefill(
+        cfg, NO_SHARDING, params, prompt.reshape(1, -1), max_len=max_len)
+    off = logits.shape[1] - prompt.shape[0]
+    tok = int(np.argmax(np.asarray(logits[0, off + prompt.shape[0] - 1])))
+    out = [tok]
+    for _ in range(n_tokens - 1):
+        lg, cache = backbone.decode_step(
+            cfg, NO_SHARDING, params, cache,
+            np.full((1, 1), out[-1], np.int32))
+        out.append(int(np.argmax(np.asarray(lg[0, -1]))))
+    return out
+
+
+# -- buckets ------------------------------------------------------------------
+
+def test_bucket_assignment_deterministic():
+    spec = BucketSpec((4, 8, 32))
+    assert [spec.bucket_for(n) for n in (1, 4, 5, 8, 9, 32)] == \
+        [4, 4, 8, 8, 32, 32]
+    # pure function of (edges, length): same answer every time
+    assert spec.bucket_for(5) == spec.bucket_for(5) == 8
+    padded = spec.pad(np.arange(1, 6, dtype=np.int32))
+    assert padded.shape == (1, 8)
+    assert padded[0, :5].tolist() == [1, 2, 3, 4, 5]
+    assert padded[0, 5:].tolist() == [0, 0, 0]
+
+
+def test_bucket_errors():
+    with pytest.raises(ValueError, match="at least one edge"):
+        BucketSpec(())
+    with pytest.raises(ValueError, match="strictly increasing"):
+        BucketSpec((8, 4))
+    with pytest.raises(ValueError, match="strictly increasing"):
+        BucketSpec((4, 4))
+    spec = BucketSpec((4, 8))
+    with pytest.raises(ValueError, match="must be >= 1"):
+        spec.bucket_for(0)
+    with pytest.raises(ValueError, match="exceeds the largest bucket edge"):
+        spec.bucket_for(9)
+    with pytest.raises(ValueError, match="must be 1-D"):
+        spec.pad(np.zeros((1, 4), np.int32))
+
+
+def test_engine_admission_checks(smoke):
+    cfg, params = smoke
+    with pytest.raises(ValueError, match="exceeds.*max_len"):
+        DecodeEngine(cfg, slots=1, max_len=4, buckets=BucketSpec((8,)))
+    eng = DecodeEngine(cfg, slots=1, max_len=8, buckets=BucketSpec((4,)))
+    eng.fits(4, 5)                      # last write at position 7: fits
+    with pytest.raises(ValueError, match="overrun the KV cache"):
+        eng.fits(4, 6)                  # last write at position 8: overrun
+    with pytest.raises(ValueError, match="exceeds the largest bucket edge"):
+        eng.fits(5, 1)
+    with pytest.raises(ValueError, match="must be >= 1"):
+        eng.fits(4, 0)
+
+
+def test_engine_rejects_recurrent_families(smoke):
+    import dataclasses
+
+    cfg, _ = smoke
+    bad = dataclasses.replace(cfg, family="ssm")
+    with pytest.raises(ValueError, match="pad-then-rewind"):
+        DecodeEngine(bad, slots=1, max_len=8, buckets=BucketSpec((4,)))
+
+
+# -- retraces + continuous batching ------------------------------------------
+
+def test_retraces_bounded_to_bucket_set(smoke):
+    """The §13 invariant: prefill compiles == buckets TOUCHED (never more),
+    decode compiles exactly once regardless of traffic shape."""
+    cfg, params = smoke
+    eng = DecodeEngine(cfg, slots=2, max_len=12,
+                       buckets=BucketSpec((4, 8)))
+    sched = Scheduler(eng)
+    rng = np.random.RandomState(0)
+    # lengths 1..4 land in bucket 4; only it should compile
+    for n in (1, 3, 4, 2, 4):
+        sched.submit(rng.randint(0, cfg.vocab_size, size=n), 4)
+    _drain(sched, params)
+    assert eng.prime_compiles == 1, eng.prime_compiles
+    assert eng.decode_compiles == 1, eng.decode_compiles
+    # lengths 5..8 touch the second bucket: exactly one more compile
+    for n in (5, 8, 6):
+        sched.submit(rng.randint(0, cfg.vocab_size, size=n), 4)
+    _drain(sched, params)
+    assert eng.prime_compiles == 2, eng.prime_compiles
+    assert eng.decode_compiles == 1, eng.decode_compiles
+
+
+def test_finished_slot_reused(smoke):
+    """3 requests on 2 slots: the third admits into a slot freed by an
+    eviction, at a later step — continuous batching, not a drain."""
+    cfg, params = smoke
+    eng = DecodeEngine(cfg, slots=2, max_len=12, buckets=BucketSpec((4,)))
+    sched = Scheduler(eng)
+    rng = np.random.RandomState(1)
+    rids = [sched.submit(rng.randint(0, cfg.vocab_size, size=3), 4)
+            for _ in range(3)]
+    completions = _drain(sched, params)
+    assert sorted(c.rid for c in completions) == rids
+    log = {rid: (slot, step) for rid, slot, step in sched.admission_log}
+    first_two_slots = {log[rids[0]][0], log[rids[1]][0]}
+    assert first_two_slots == {0, 1}
+    reused_slot, admit_step = log[rids[2]]
+    assert reused_slot in first_two_slots           # a recycled slot
+    assert admit_step > log[rids[0]][1]             # admitted later,
+    # after the slot's previous occupant finished (4 tokens = 3 decode
+    # steps past admission)
+    assert admit_step >= 3
+
+
+def test_continuous_matches_solo_greedy(smoke):
+    """The strongest check: tokens from 3 requests interleaved on 2
+    slots (mixed buckets, mid-flight admission) are bit-identical to
+    each request decoded alone with exact-length prefill — slot
+    isolation AND pad-shadowing in one assertion."""
+    cfg, params = smoke
+    max_len = 16
+    eng = DecodeEngine(cfg, slots=2, max_len=max_len,
+                       buckets=BucketSpec((4, 8)))
+    sched = Scheduler(eng)
+    rng = np.random.RandomState(2)
+    prompts = [rng.randint(0, cfg.vocab_size, size=n).astype(np.int32)
+               for n in (3, 6, 5)]                  # buckets 4, 8, 8
+    gen = 6
+    for p in prompts:
+        sched.submit(p, gen)
+    completions = {c.rid: c for c in _drain(sched, params)}
+    for rid, p in enumerate(prompts):
+        ref = _solo_greedy(cfg, params, p, gen, max_len)
+        assert completions[rid].tokens == ref, (rid, completions[rid].tokens,
+                                                ref)
+
+
+def test_slot_mask_freezes_free_slot(smoke):
+    """A masked-out slot's cache (including pos) must not advance and
+    its action is pinned to 0 — the release/admission gap is inert."""
+    cfg, params = smoke
+    eng = DecodeEngine(cfg, slots=2, max_len=8, buckets=BucketSpec((4,)))
+    tok, slot_cache = eng.prime(params, np.arange(1, 4, dtype=np.int32))
+    state = eng.init_state()
+    state = eng.insert(state, 0, slot_cache, tok)   # slot 1 stays free
+    frozen_before = jax.tree.map(
+        lambda x: np.asarray(x[1]).copy(), state.cache)
+    actions, state = eng.step(params, state)
+    acts = np.asarray(actions)
+    assert acts[1] == 0                              # pinned, not decoded
+    frozen_after = jax.tree.map(
+        lambda x: np.asarray(x[1]), state.cache)
+    jax.tree.map(np.testing.assert_array_equal, frozen_before, frozen_after)
+
+
+def test_exact_token_accounting(smoke):
+    """admissions + decoded_tokens == every token handed out, including
+    the budget-1 edge case (complete at admission, zero decode steps)."""
+    cfg, params = smoke
+    eng = DecodeEngine(cfg, slots=2, max_len=12, buckets=BucketSpec((4,)))
+    sched = Scheduler(eng)
+    rng = np.random.RandomState(3)
+    budgets = [1, 4, 2, 1, 3]
+    for b in budgets:
+        sched.submit(rng.randint(0, cfg.vocab_size, size=3), b)
+    completions = _drain(sched, params)
+    out = sum(len(c.tokens) for c in completions)
+    assert out == sum(budgets)
+    assert [len(c.tokens) for c in
+            sorted(completions, key=lambda c: c.rid)] == budgets
+    assert sched.admissions == len(budgets)
+    assert sched.generated_tokens == sched.admissions + sched.decoded_tokens
+    assert sched.generated_tokens == out
+
+
+# -- parameter publication ----------------------------------------------------
+
+def test_double_buffer_swap_discipline():
+    buf = ParamDoubleBuffer({"w": 0}, version=1)
+    assert buf.swap_if_staged() == ({"w": 0}, 1, False)
+    assert buf.stage({"w": 1}) == 2                 # auto-increment
+    assert buf.version == 1                          # live half untouched
+    params, version, swapped = buf.swap_if_staged()
+    assert (params, version, swapped) == ({"w": 1}, 2, True)
+    # stale publishes are dropped
+    assert buf.stage({"w": 9}, version=2) == 2
+    assert buf.swap_if_staged()[2] is False
+    # staged-but-unswapped is superseded by a newer stage
+    buf.stage({"w": 3}, version=3)
+    buf.stage({"w": 4}, version=5)
+    assert buf.swap_if_staged() == ({"w": 4}, 5, True)
+    assert buf.swaps == 2
+
+
+def test_no_version_mix_within_step(smoke):
+    """A publication staged while a step is in flight lands at the NEXT
+    boundary: every step_log entry carries exactly one version, version
+    changes only between steps, and the swap_log step matches the first
+    step that saw the new version."""
+    cfg, params = smoke
+    server = ActorServer(
+        cfg, params,
+        ActorServeConfig(slots=2, max_len=12, buckets=(4,),
+                         max_new_tokens=6),
+        params_version=1)
+    rng = np.random.RandomState(4)
+    handles = [server.submit(rng.randint(0, cfg.vocab_size, size=3))
+               for _ in range(2)]
+    server.serve_step()                              # steps at v1
+    server.serve_step()
+    v2 = server.publish(params)                      # staged, not live
+    assert server.params.version == 1                # not yet swapped
+    log_before = list(server.scheduler.step_log)
+    assert {v for _, v, _ in log_before} == {1}
+    server.serve_step()                              # boundary: v2 lands
+    while server.scheduler.busy:
+        server.serve_step()
+    for h in handles:
+        assert h.done()
+    log = list(server.scheduler.step_log)
+    versions = [v for _, v, _ in log]
+    # single version per entry by construction; the sequence is a clean
+    # monotonic 1→2 split with no interleaving
+    assert versions == sorted(versions)
+    assert set(versions) == {1, v2}
+    first_v2_step = next(s for s, v, _ in log if v == v2)
+    assert list(server._swap_log) == [(first_v2_step, v2)]
+    assert all(s < first_v2_step for s, v, _ in log if v == 1)
+
+
+def test_service_channel_publishes_under_traffic(smoke):
+    """End-to-end publication drill through the replay service's
+    versioned params channel against a live background serve loop."""
+    import pickle
+
+    from repro.service import ReplayService, ReplayServiceConfig
+
+    cfg, params = smoke
+    service = ReplayService(ReplayServiceConfig(capacity_per_shard=8,
+                                                n_shards=1),
+                            {"obs": np.zeros((2,), np.float32)})
+    server = ActorServer(
+        cfg, params,
+        ActorServeConfig(slots=2, max_len=12, buckets=(4,),
+                         max_new_tokens=4, idle_wait_s=0.005),
+        params_version=0, param_source=service)
+    blob = pickle.dumps(jax.tree.map(np.asarray, params),
+                        protocol=pickle.HIGHEST_PROTOCOL)
+    try:
+        server.start()
+        rng = np.random.RandomState(5)
+        first = [server.submit(rng.randint(0, cfg.vocab_size, size=3))
+                 for _ in range(3)]
+        for h in first:
+            h.result(timeout=120.0)
+        service.put_params(blob)                     # learner-side publish
+        second = [server.submit(rng.randint(0, cfg.vocab_size, size=3))
+                  for _ in range(3)]
+        done = [h.result(timeout=120.0) for h in second]
+        stats = server.stats()
+        assert stats["params_version"] == 1          # channel version landed
+        assert stats["param_swaps"] == 1
+        assert stats["completed"] == 6
+        # requests finished after the swap carry the new version
+        assert all(c.params_version in (0, 1) for c in done)
+        assert any(c.params_version == 1 for c in done)
+        assert stats["generated_tokens"] == 6 * 4
+    finally:
+        server.stop()
+        service.stop()
+
+
+def test_channel_poll_is_nonblocking_and_deduped(smoke):
+    """poll() returns False on an empty channel and never re-stages a
+    version it has already seen."""
+    import pickle
+
+    from repro.service import ReplayService, ReplayServiceConfig
+
+    service = ReplayService(ReplayServiceConfig(capacity_per_shard=8,
+                                                n_shards=1),
+                            {"obs": np.zeros((2,), np.float32)})
+    try:
+        buf = ParamDoubleBuffer({"w": 0}, version=0)
+        chan = ServiceParamChannel(service, buf)
+        assert chan.poll() is False                  # nothing published
+        service.put_params(pickle.dumps({"w": 1}))
+        assert chan.poll() is True
+        assert buf.staged_version == 1
+        assert chan.poll() is False                  # same version: deduped
+        _, v, swapped = buf.swap_if_staged()
+        assert (v, swapped) == (1, True)
+        assert chan.poll() is False
+    finally:
+        service.stop()
+
+
+# -- schema + archive tooling -------------------------------------------------
+
+def _actor_point(**over):
+    point = {
+        "users": 1, "target_rps": 2.0, "overload": False, "slots": 4,
+        "gen_tokens": 8, "arch": "granite-smoke", "prompt_buckets": "4/8",
+        "requests_per_s": 2.0, "p50_ms": 5.0, "p99_ms": 9.0,
+        "param_swaps": 1, "repeats": 3, "rel_spread": 0.01,
+    }
+    point.update(over)
+    return point
+
+
+def _actor_payload(points):
+    return {"figure": "actor", "metric": "requests_per_s", "smoke": True,
+            "points": points}
+
+
+def test_schema_actor_accepts_emitted_shape():
+    assert schema.validate(_actor_payload([
+        _actor_point(),
+        _actor_point(users=2, target_rps=16.0, overload=True,
+                     p99_before_swap_ms=7.0, p99_after_swap_ms=8.0),
+    ])) == "actor"
+    # the committed baseline itself must validate
+    assert schema.validate_file(
+        os.path.join(REPO, "BENCH_actor.json")) == "actor"
+
+
+def test_schema_actor_rejects_malformed():
+    with pytest.raises(schema.SchemaError, match="missing required"):
+        p = _actor_point()
+        del p["users"]
+        schema.validate(_actor_payload([p]))
+    with pytest.raises(schema.SchemaError, match="must be > 0"):
+        schema.validate(_actor_payload([_actor_point(requests_per_s=0.0)]))
+    with pytest.raises(schema.SchemaError, match="unknown fields"):
+        schema.validate(_actor_payload([_actor_point(surprise=1)]))
+    with pytest.raises(schema.SchemaError, match="metric must be"):
+        bad = _actor_payload([_actor_point()])
+        bad["metric"] = "env_steps_per_s"
+        schema.validate(bad)
+    with pytest.raises(schema.SchemaError, match="expected.*got bool"):
+        schema.validate(_actor_payload([_actor_point(users=True)]))
+
+
+def _run_archive(archive, fresh, run_id):
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    return subprocess.run(
+        [sys.executable, os.path.join(REPO, "tools", "bench_archive.py"),
+         "--archive", str(archive), "--fresh", str(fresh),
+         "--run-id", str(run_id)],
+        capture_output=True, text=True, env=env, cwd=REPO)
+
+
+def test_bench_archive_merges_runs(tmp_path):
+    """Two runs with overlapping + disjoint identities: the merged
+    snapshot is a superset of both, freshest measurement wins, and the
+    silent-cache-miss drill hard-fails."""
+    f1 = tmp_path / "f1" / "bench-json-actor"
+    f2 = tmp_path / "f2" / "bench-json-actor"
+    for d in (f1, f2):
+        d.mkdir(parents=True)
+    (f1 / "BENCH_actor.json").write_text(json.dumps(_actor_payload(
+        [_actor_point(), _actor_point(users=2)])))
+    # run 2 remeasures users=1 (fresher value must win) + adds users=4
+    (f2 / "BENCH_actor.json").write_text(json.dumps(_actor_payload(
+        [_actor_point(requests_per_s=3.5), _actor_point(users=4)])))
+    archive = tmp_path / "arch"
+
+    r1 = _run_archive(archive, f1.parent, "111")
+    assert r1.returncode == 0, r1.stdout + r1.stderr
+    assert "first archived run" in r1.stdout
+
+    os.utime(f2 / "BENCH_actor.json")               # strictly newer mtime
+    r2 = _run_archive(archive, f2.parent, "222")
+    assert r2.returncode == 0, r2.stdout + r2.stderr
+    assert "MERGED_RUNS=2" in r2.stdout
+    merged = json.loads(
+        (archive / "merged" / "BENCH_actor.json").read_text())
+    assert schema.validate(merged) == "actor"
+    by_users = {p["users"]: p for p in merged["points"]}
+    assert set(by_users) == {1, 2, 4}                # union of identities
+    assert by_users[1]["requests_per_s"] == 3.5      # freshest wins
+    manifest = json.loads((archive / "manifest.json").read_text())
+    assert [r["id"] for r in manifest["runs"]] == ["111", "222"]
+
+    # the cache-restore-missed drill: manifest says 2 runs, runs/ gone
+    import shutil
+    shutil.rmtree(archive / "runs")
+    r3 = _run_archive(archive, f2.parent, "333")
+    assert r3.returncode == 1
+    assert "cache restore silently missed" in r3.stderr

@@ -1,0 +1,187 @@
+"""Rolling BENCH archive: merge each CI run's artifacts into a cached
+perf trajectory (the bench-archive job in .github/workflows/ci.yml).
+
+Every push to main emits fresh ``BENCH_*.json`` (bench-smoke, the
+wall-clock gang, the replay-service sweep, the actor-serve load
+generator).  A single run only sees its own points; the archive keeps
+the union.  This script is the whole job:
+
+    PYTHONPATH=src python tools/bench_archive.py \
+        --archive bench-archive/ --fresh fresh/ --run-id 12345
+
+1. ingest: copy the fresh dir's ``BENCH_*.json`` (recursively — the
+   download-artifact merge nests per-artifact subdirectories) into
+   ``archive/runs/<run-id>/`` and append the run to ``manifest.json``;
+2. merge: ``runtime/planner.merge_bench_points`` over ``archive/runs``
+   — identical point identities keep the freshest measurement — and
+   write one schema-valid snapshot per figure under ``archive/merged/``;
+3. check: the merged identity sets must be supersets of BOTH the fresh
+   run's identities and the pre-merge archive's identities.  When the
+   manifest already lists prior runs (i.e. the actions/cache restore
+   was supposed to bring them back), an empty prior identity set is a
+   hard failure — that is exactly the silent-cache-miss case a rolling
+   archive must not paper over.
+
+The merged snapshot dir is what ``planner.plan_from_json`` consumes, so
+the planner plans over the accumulated trajectory, not one run's files.
+Exit is non-zero on any check failure.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+from typing import Dict, List, Set, Tuple
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.schema import FIGURE_METRICS, SchemaError, validate  # noqa: E402
+from repro.runtime.planner import (  # noqa: E402
+    _point_identity, merge_bench_points)
+
+MANIFEST = "manifest.json"
+
+
+def _load_manifest(archive: str) -> dict:
+    path = os.path.join(archive, MANIFEST)
+    if not os.path.exists(path):
+        return {"runs": []}
+    with open(path) as f:
+        return json.load(f)
+
+
+def _identities(bench_dir: str) -> Dict[str, Set[Tuple]]:
+    """figure → set of point identities for every BENCH file under
+    ``bench_dir`` (empty when the dir is missing)."""
+    if not os.path.isdir(bench_dir):
+        return {}
+    return {figure: {_point_identity(p) for p in points}
+            for figure, points in merge_bench_points(bench_dir).items()}
+
+
+def _ingest(archive: str, fresh: str, run_id: str) -> List[str]:
+    """Copy the fresh run's BENCH json into ``archive/runs/<run_id>/``,
+    preserving subdirectories (the download-artifact merge nests one dir
+    per artifact, and the merge walk needs the ``BENCH_*`` filename
+    intact)."""
+    dest = os.path.join(archive, "runs", run_id)
+    copied = []
+    for root, _dirs, files in sorted(os.walk(fresh)):
+        for name in sorted(files):
+            if not (name.startswith("BENCH_") and name.endswith(".json")):
+                continue
+            rel = os.path.relpath(root, fresh)
+            sub = dest if rel == "." else os.path.join(dest, rel)
+            os.makedirs(sub, exist_ok=True)
+            shutil.copy2(os.path.join(root, name), os.path.join(sub, name))
+            copied.append(os.path.normpath(os.path.join(rel, name)))
+    return copied
+
+
+def _write_merged(archive: str) -> Dict[str, int]:
+    """One schema-valid snapshot per figure under ``archive/merged/``."""
+    merged_dir = os.path.join(archive, "merged")
+    if os.path.isdir(merged_dir):
+        shutil.rmtree(merged_dir)  # rebuilt wholesale from runs/ each time
+    os.makedirs(merged_dir)
+    merged = merge_bench_points(os.path.join(archive, "runs"))
+    counts = {}
+    for figure, points in sorted(merged.items()):
+        if figure not in FIGURE_METRICS:
+            print(f"-- skipping unknown figure {figure!r} ({len(points)} "
+                  "points) — not in benchmarks/schema.py")
+            continue
+        payload = {
+            "figure": figure,
+            "metric": FIGURE_METRICS[figure],
+            "merged": True,
+            "points": points,
+        }
+        try:
+            validate(payload)
+        except SchemaError as e:
+            print(f"FAIL: merged {figure} snapshot is schema-invalid: {e}",
+                  file=sys.stderr)
+            raise
+        path = os.path.join(merged_dir, f"BENCH_{figure}.json")
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
+        counts[figure] = len(points)
+    return counts
+
+
+def _check_superset(merged: Dict[str, Set[Tuple]],
+                    part: Dict[str, Set[Tuple]], label: str) -> int:
+    failures = 0
+    for figure, idents in sorted(part.items()):
+        missing = idents - merged.get(figure, set())
+        if missing:
+            print(f"FAIL: merged archive lost {len(missing)} {figure} "
+                  f"point(s) present in the {label} set", file=sys.stderr)
+            failures += 1
+        else:
+            print(f"OK  merged {figure} ⊇ {label} "
+                  f"({len(idents)} identities)")
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--archive", required=True,
+                    help="rolling archive dir (actions/cache restore/save)")
+    ap.add_argument("--fresh", required=True,
+                    help="this run's BENCH artifacts (download-artifact "
+                         "merge dir)")
+    ap.add_argument("--run-id", required=True,
+                    help="unique id for this run (github.run_id)")
+    args = ap.parse_args()
+
+    manifest = _load_manifest(args.archive)
+    prior_runs = [r for r in manifest["runs"] if r["id"] != args.run_id]
+    # identities BEFORE this run is ingested — the restored cache's view
+    prior = _identities(os.path.join(args.archive, "runs"))
+    fresh = _identities(args.fresh)
+    if not fresh:
+        print(f"FAIL: no BENCH points under {args.fresh!r} — nothing to "
+              "archive", file=sys.stderr)
+        return 1
+    if prior_runs and not prior:
+        print(f"FAIL: manifest lists {len(prior_runs)} prior run(s) but the "
+              "restored archive holds zero points — the cache restore "
+              "silently missed", file=sys.stderr)
+        return 1
+
+    copied = _ingest(args.archive, args.fresh, args.run_id)
+    print(f"ingested run {args.run_id}: {len(copied)} file(s)")
+    manifest["runs"] = prior_runs + [{"id": args.run_id, "files": copied}]
+    with open(os.path.join(args.archive, MANIFEST), "w") as f:
+        json.dump(manifest, f, indent=2)
+        f.write("\n")
+
+    counts = _write_merged(args.archive)
+    for figure, n in sorted(counts.items()):
+        print(f"merged/{figure}: {n} point(s) across "
+              f"{len(manifest['runs'])} run(s)")
+
+    merged = _identities(os.path.join(args.archive, "merged"))
+    failures = _check_superset(merged, fresh, "fresh")
+    if prior:
+        failures += _check_superset(merged, prior, "prior-archive")
+        if not failures:
+            print(f"MERGED_RUNS={len(manifest['runs'])} (prior cache + "
+                  "fresh both represented)")
+    else:
+        print("first archived run — no prior cache to merge")
+    if failures:
+        print(f"FAIL: {failures} archive check(s) failed", file=sys.stderr)
+        return 1
+    print("bench-archive: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
