@@ -49,7 +49,7 @@ BENCH_FILES = ("BENCH_fig9.json", "BENCH_fig10.json", "BENCH_replay.json",
 _MEASUREMENT_FIELDS = {"env_steps_per_s", "replay_ops_per_s",
                        "inserts_per_s", "speedup_vs_sync",
                        "repeats", "rel_spread",
-                       "samples_per_s", "realized_spi",
+                       "samples_per_s", "realized_spi", "recovery_s",
                        "requests_per_s", "p50_ms", "p99_ms",
                        "p99_before_swap_ms", "p99_after_swap_ms",
                        "param_swaps"}

@@ -178,14 +178,174 @@ def serve_points(writer_counts=(1, 2, 4), shard_counts=(1, 2),
     return points
 
 
+def fault_points(writers: int = 2, n_shards: int = 1, spi: float = 8.0,
+                 batch: int = 64, insert_chunk: int = 64,
+                 chunks_per_writer: int = 24, outage_s: float = 0.5):
+    """The recovery arm (DESIGN.md §14): the same coupled writer/sampler
+    load as ``serve_points``, but over real TCP clients against a served
+    instance that is crashed (soft ``FaultPlan`` — identical wire
+    semantics to a process kill, without the multi-second reimport) at
+    its midpoint append, held down for ``outage_s``, then restored from
+    its per-append shard snapshots onto the same port.  The measured
+    quantity is ``recovery_s`` — wall seconds from the kill to the first
+    re-admitted append ack — with the (outage-inclusive) sustained rates
+    alongside.  Exactly-once is asserted, not assumed: the run fails
+    unless every chunk landed exactly once across the restart."""
+    import shutil
+    import tempfile
+
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.service import (FaultPlan, ReplayClient, RetryPolicy, serve,
+                               wait_for_service)
+
+    total_appends = writers * chunks_per_writer
+    crash_at = max(2, total_appends // 2)
+    capacity = max(4096, (total_appends * insert_chunk) // n_shards + batch)
+    snap_dir = tempfile.mkdtemp(prefix="fig_serve_snap_")
+    service, limiter = _build_service(n_shards, writers, spi, batch,
+                                      insert_chunk, capacity)
+    service.attach_snapshots(CheckpointManager(snap_dir, keep=2),
+                             every_appends=1)
+    server, port = serve(service, fault_plan=FaultPlan(
+        crash_on_op=f"append:{crash_at}", hard=False))
+    wait_for_service("127.0.0.1", port, timeout=30.0)
+
+    holders = {"service": service, "server": server}
+    marks = {"t_kill": None, "t_recover": None}
+    mark_lock = threading.Lock()
+    done = threading.Event()
+    errors = []
+    retry_kw = dict(base=0.02, cap=0.25, jitter=0.25, deadline=120.0)
+
+    def monitor():
+        """Waits for the injected crash, holds the planned outage, then
+        restores a fresh service from the snapshot lineage on the same
+        port (the in-process twin of the gang drill's server respawn)."""
+        try:
+            while not holders["server"].crashed.is_set():
+                if done.is_set():
+                    return
+                time.sleep(0.02)
+            with mark_lock:
+                marks["t_kill"] = time.perf_counter()
+            time.sleep(outage_s)  # deliberate downtime before restart
+            svc2, _ = _build_service(n_shards, writers, spi, batch,
+                                     insert_chunk, capacity)
+            manager = CheckpointManager(snap_dir, keep=2)
+            if svc2.restore_snapshot(manager) is None:
+                raise RuntimeError("no snapshot to restore from")
+            svc2.attach_snapshots(manager, every_appends=1)
+            s2, _ = serve(svc2, port=port)
+            holders["service"], holders["server"] = svc2, s2
+        except Exception as e:  # noqa: BLE001 — surface on the main thread
+            errors.append(e)
+            done.set()
+
+    def writer(wid: int):
+        try:
+            client = ReplayClient(
+                "127.0.0.1", port, timeout=30.0,
+                retry=RetryPolicy(seed=wid, **retry_kw))
+            for c in range(chunks_per_writer):
+                client.append(f"w{wid}", _items(insert_chunk, wid * 7919 + c),
+                              timeout=60.0)
+                now = time.perf_counter()
+                # only an ack on a *reconnected* client marks recovery —
+                # an in-flight reply the dying server flushes right
+                # after ``crashed`` is set must not count
+                if client.reconnects:
+                    with mark_lock:
+                        if (marks["t_kill"] is not None
+                                and marks["t_recover"] is None):
+                            marks["t_recover"] = now
+            client.close()
+        except Exception as e:  # noqa: BLE001
+            errors.append(e)
+            done.set()
+
+    def sampler():
+        client = ReplayClient("127.0.0.1", port, timeout=30.0,
+                              retry=RetryPolicy(seed=999, **retry_kw))
+        while not done.is_set():
+            try:
+                out = client.sample(batch, timeout=0.25)
+            except RuntimeError as e:
+                if "TimeoutError" in str(e):
+                    continue  # quiet limiter, not an outage
+                errors.append(e)
+                return
+            except ConnectionError:
+                continue  # outage: the retry deadline outlives it
+            if out.get("stopped"):
+                break
+            try:
+                client.update_priorities(out["sample_id"],
+                                         np.ones((batch,), np.float32))
+            except (RuntimeError, ConnectionError):
+                pass  # handle aged out across the crash — stale is fine
+        client.close()
+
+    mon = threading.Thread(target=monitor, daemon=True)
+    ws = [threading.Thread(target=writer, args=(w,)) for w in range(writers)]
+    st = threading.Thread(target=sampler, daemon=True)
+    t0 = time.perf_counter()
+    mon.start()
+    for t in ws:
+        t.start()
+    st.start()
+    for t in ws:
+        t.join()
+    dt = time.perf_counter() - t0
+    done.set()
+    st.join(timeout=30.0)
+    mon.join(timeout=30.0)
+    if errors:
+        raise errors[0]
+    if marks["t_kill"] is None or marks["t_recover"] is None:
+        raise RuntimeError(
+            f"fault arm never crossed the crash (kill={marks['t_kill']}, "
+            f"recover={marks['t_recover']}) — crash_at={crash_at} vs "
+            f"{total_appends} appends")
+
+    final = holders["service"]
+    stats = final.stats()
+    expected = total_appends * insert_chunk
+    if stats["inserts"] != expected:
+        raise RuntimeError(
+            f"exactly-once violated across restart: {stats['inserts']} "
+            f"inserts != {total_appends} appends × {insert_chunk} "
+            f"(dup_appends={stats['dup_appends']}, "
+            f"writer_appends={stats['writer_appends']})")
+    final.stop()
+    holders["server"].shutdown()
+    holders["server"].server_close()
+    shutil.rmtree(snap_dir, ignore_errors=True)
+
+    return [{
+        "writers": writers,
+        "n_shards": n_shards,
+        "spi": spi,
+        "batch_size": batch,
+        "fault": True,
+        "outage_s": outage_s,
+        "inserts_per_s": round(stats["inserts"] / dt, 2),
+        "samples_per_s": round(stats["samples"] / dt, 2),
+        "realized_spi": round(stats["samples"] / max(1, stats["inserts"]), 4),
+        "recovery_s": round(marks["t_recover"] - marks["t_kill"], 3),
+    }]
+
+
 def emit_json(out_dir: str, smoke: bool = False) -> str:
     kwargs = (dict(writer_counts=(1, 2), shard_counts=(1, 2),
                    chunks_per_writer=8) if smoke else {})
+    # the fault arm runs full-size even under --smoke: its rate carries
+    # a fixed outage+restore cost, so a shorter run would de-calibrate
+    # the point against the committed baseline the gate matches it to
     payload = {
         "figure": "serve",
         "metric": "inserts_per_s",
         "smoke": smoke,
-        "points": serve_points(**kwargs),
+        "points": serve_points(**kwargs) + fault_points(),
     }
     os.makedirs(out_dir, exist_ok=True)
     path = os.path.join(out_dir, SERVE_JSON)
@@ -215,8 +375,14 @@ if __name__ == "__main__":
     ap.add_argument("--emit-json", default=None, metavar="DIR")
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized sweep, same schema and code paths")
+    ap.add_argument("--fault", action="store_true",
+                    help="run only the crash-and-restore recovery arm "
+                         "and print its point (emit-json always "
+                         "includes it)")
     args = ap.parse_args()
-    if args.emit_json:
+    if args.fault and not args.emit_json:
+        print(json.dumps(fault_points(), indent=2))
+    elif args.emit_json:
         emit_json(args.emit_json, smoke=args.smoke)
     else:
         run(csv=True)

@@ -86,6 +86,14 @@ POINT_FIELDS: Dict[str, Dict[str, tuple]] = {
         "spi": ((int, float), True),       # configured samples-per-insert
         "batch_size": (int, True),
         "realized_spi": ((int, float), False),
+        # recovery arm (fig_serve --fault, DESIGN.md §14): the server is
+        # crashed mid-run and restored from shard snapshots.  fault and
+        # outage_s (the deliberate downtime) are identity fields;
+        # recovery_s (kill → first re-admitted append ack) is the arm's
+        # measured quantity alongside the rate metrics.
+        "fault": (bool, False),
+        "outage_s": ((int, float), False),
+        "recovery_s": ((int, float), False),
     },
     # actor-serve load generator (benchmarks/fig_actor.py): sustained
     # request rate + client latency of the continuous-batching inference

@@ -19,7 +19,7 @@ import json
 import os
 import shutil
 import threading
-from typing import Any, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -59,10 +59,15 @@ class CheckpointManager:
 
     # -- save ---------------------------------------------------------------
 
-    def save(self, step: int, tree: Pytree) -> str:
-        """Synchronous atomic save; returns the committed path."""
+    def save(self, step: int, tree: Pytree,
+             extra: Optional[Dict[str, bytes]] = None) -> str:
+        """Synchronous atomic save; returns the committed path.
+        ``extra`` maps filenames to opaque byte blobs committed inside
+        the same atomic rename as the arrays — side-state that must
+        stay consistent with the tree (the replay service's seq tables,
+        a pickled params blob) rides the same crash guarantee."""
         host = jax.tree.map(lambda x: np.asarray(x), tree)
-        return self._write(step, host)
+        return self._write(step, host, extra)
 
     def save_async(self, step: int, tree: Pytree) -> None:
         """Snapshot now, write in background (previous write is joined
@@ -77,7 +82,8 @@ class CheckpointManager:
             self._thread.join()
             self._thread = None
 
-    def _write(self, step: int, host_tree: Pytree) -> str:
+    def _write(self, step: int, host_tree: Pytree,
+               extra: Optional[Dict[str, bytes]] = None) -> str:
         flat, _ = _flatten_with_paths(host_tree)
         tmp = os.path.join(self.dir, f"step_{step}.tmp")
         final = os.path.join(self.dir, f"step_{step}")
@@ -91,9 +97,16 @@ class CheckpointManager:
             "keys": sorted(flat.keys()),
             "shapes": {k: list(np.shape(v)) for k, v in flat.items()},
             "dtypes": {k: str(np.asarray(v).dtype) for k, v in flat.items()},
+            "extra": sorted(extra.keys()) if extra else [],
         }
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
+        for name, blob in (extra or {}).items():
+            if name in ("arrays.npz", "manifest.json") or _SEP in name:
+                raise ValueError(f"extra blob name {name!r}: reserved or "
+                                 f"contains a path separator")
+            with open(os.path.join(tmp, name), "wb") as f:
+                f.write(blob)
         if os.path.exists(final):
             # re-saving an existing step (restart at the same point):
             # rename over a non-empty dir is an error on POSIX, so retire
@@ -146,3 +159,13 @@ class CheckpointManager:
         if not steps:
             return None, example
         return steps[-1], self.restore(steps[-1], example)
+
+    def read_extra(self, step: int, name: str) -> Optional[bytes]:
+        """Read one ``extra`` blob from a committed step; None when the
+        step carries no blob by that name (restore paths treat missing
+        side-state as absent, not corrupt — the rename was atomic)."""
+        path = os.path.join(self.dir, f"step_{step}", name)
+        if not os.path.exists(path):
+            return None
+        with open(path, "rb") as f:
+            return f.read()

@@ -212,6 +212,10 @@ def launch_service(
     ckpt_dir: Optional[str] = None,
     ckpt_every: int = 0,
     restart_learner_after: Optional[int] = None,
+    restart_server_after: Optional[int] = None,
+    snapshot_dir: Optional[str] = None,
+    snapshot_every_appends: int = 0,
+    retry_deadline: float = 180.0,
     timeout_s: float = 900.0,
 ) -> Dict[str, Dict[str, str]]:
     """Spawn the replay-service gang: 1 server + ``n_actors`` writers +
@@ -219,20 +223,33 @@ def launch_service(
     runtime, meeting only at the service's TCP boundary.  Returns the
     parsed ``KEY=VALUE`` results per role (``server``, ``actor-<i>``,
     ``learner``, plus ``learner-0`` for the pre-restart learner when
-    ``restart_learner_after`` is set).
+    ``restart_learner_after`` is set, and ``server-0`` for the crashed
+    server when ``restart_server_after`` is set).
 
     With ``restart_learner_after`` the first learner process checkpoints
     and exits after that many learn steps *without* stopping the service
     — actors park in writer backpressure — and a second learner process
     resumes from the checkpoint (``--resume``) and trains to completion:
     the elastic-restart drill of DESIGN.md §4.5 against a live service.
-    """
+
+    With ``restart_server_after`` the *server* is the casualty
+    (DESIGN.md §14): a hard FaultPlan kills it with os._exit(42) when
+    its Nth append arrives, while ``snapshot_every_appends=1`` has been
+    giving durable acks all along.  Clients park in reconnect backoff,
+    a fresh server process restores the latest snapshot onto the same
+    port, and training runs through to criterion — with the per-writer
+    applied counters provably equal to the clients' acked counts."""
     if n_actors < 1:
         raise ValueError(f"n_actors={n_actors}: need ≥ 1")
     if restart_learner_after is not None and not (ckpt_dir and ckpt_every):
         raise ValueError("restart_learner_after requires ckpt_dir and "
                          "ckpt_every (the resumed learner restores from "
                          "the checkpoint directory)")
+    if restart_server_after is not None and not (
+            snapshot_dir and snapshot_every_appends):
+        raise ValueError("restart_server_after requires snapshot_dir and "
+                         "snapshot_every_appends (the restarted server "
+                         "restores from the shard snapshots)")
     env = worker_env(1)
     port = free_port()
     deadline = time.monotonic() + timeout_s
@@ -243,19 +260,29 @@ def launch_service(
                                 stderr=subprocess.STDOUT, text=True)
 
     common = ["--serve-port", str(port), "--batch-size", str(batch_size),
-              "--seed", str(seed)]
+              "--seed", str(seed),
+              "--retry-deadline", str(retry_deadline)]
     # the admission window must absorb one full gang burst: every actor
     # can land a whole rollout chunk between two learner samples
     burst = n_actors * actor_chunk * n_envs
+    server_args = ["--mode", "replay-server", *common,
+                   "--n-shards", str(n_shards),
+                   "--spi", str(samples_per_insert),
+                   "--warmup", str(warmup),
+                   "--capacity-per-shard", str(capacity_per_shard),
+                   "--insert-burst", str(burst),
+                   "--serve-timeout", str(timeout_s)]
+    if snapshot_dir:
+        server_args += ["--snapshot-dir", snapshot_dir,
+                        "--snapshot-every-appends",
+                        str(snapshot_every_appends)]
+    first_server_args = list(server_args)
+    if restart_server_after is not None:
+        first_server_args += [
+            "--fault-plan",
+            f"crash_on_op=append:{restart_server_after},hard=1"]
     procs: Dict[str, subprocess.Popen] = {}
-    procs["server"] = spawn(
-        ["--mode", "replay-server", *common,
-         "--n-shards", str(n_shards),
-         "--spi", str(samples_per_insert),
-         "--warmup", str(warmup),
-         "--capacity-per-shard", str(capacity_per_shard),
-         "--insert-burst", str(burst),
-         "--serve-timeout", str(timeout_s)])
+    procs["server"] = spawn(first_server_args)
     try:
         _wait_for_server(port, procs["server"],
                          timeout_s=min(90.0, timeout_s))
@@ -287,12 +314,34 @@ def launch_service(
             procs["learner"] = spawn([*learner_args, "--resume"])
         else:
             procs["learner"] = spawn(learner_args)
+        if restart_server_after is not None:
+            from repro.service.faults import CRASH_EXIT_CODE
+            first_server = procs.pop("server")
+            procs["server-0"] = first_server
+            first_server.wait(timeout=max(1.0, deadline - time.monotonic()))
+            if first_server.returncode != CRASH_EXIT_CODE:
+                out, _ = first_server.communicate()
+                tail = "\n".join(out.splitlines()[-25:])
+                raise RuntimeError(
+                    f"server did not crash as planned (code "
+                    f"{first_server.returncode}, expected "
+                    f"{CRASH_EXIT_CODE}); output tail:\n{tail}")
+            # actors and learner are now parked in reconnect backoff;
+            # the replacement restores the snapshot onto the SAME port
+            # (SO_REUSEADDR) so nobody needs re-addressing
+            procs["server"] = spawn([*server_args, "--restore-server"])
+            _wait_for_server(port, procs["server"],
+                             timeout_s=min(90.0, timeout_s))
     except Exception:
         for p in procs.values():
             if p.poll() is None:
                 p.kill()
         raise
 
+    expected_codes = {"server-0": {0}}
+    if restart_server_after is not None:
+        from repro.service.faults import CRASH_EXIT_CODE
+        expected_codes["server-0"] = {CRASH_EXIT_CODE}
     outs: Dict[str, str] = {}
     failed = None
     for name, p in procs.items():
@@ -303,7 +352,8 @@ def launch_service(
             p.kill()
             outs[name], _ = p.communicate()
             failed = failed or (name, "timeout")
-        if p.returncode not in (0, None) and failed is None:
+        if (p.returncode not in (0, None) and failed is None
+                and p.returncode not in expected_codes.get(name, ())):
             failed = (name, f"exit code {p.returncode}")
     if failed is not None:
         for p in procs.values():
@@ -576,8 +626,14 @@ def _params_checksum(params) -> float:
 
 def _replay_server_worker(args):
     """``--mode replay-server``: host the sharded rate-limited service
-    until the learner sends stop, then report flow-control stats."""
-    from repro.service import (RateLimiter, ReplayService,
+    until the learner sends stop, then report flow-control stats.  With
+    ``--snapshot-dir`` the service snapshots its full state every
+    ``--snapshot-every-appends`` applied appends; ``--restore-server``
+    resumes from the latest snapshot (the server-restart drill,
+    DESIGN.md §14); ``--fault-plan`` arms deterministic wire faults —
+    a ``hard=1`` crash plan kills this process with os._exit(42), so
+    every print before it must flush."""
+    from repro.service import (FaultPlan, RateLimiter, ReplayService,
                                ReplayServiceConfig, serve)
 
     _, _, _, example = _dqn_cartpole(1)
@@ -594,7 +650,22 @@ def _replay_server_worker(args):
                             fanout=128,
                             seed=args.seed),
         example, rate_limiter=limiter)
-    server, port = serve(service, port=args.serve_port)
+    restored_step = None
+    if args.snapshot_dir:
+        from repro.checkpoint.manager import CheckpointManager
+        manager = CheckpointManager(args.snapshot_dir, keep=3)
+        if args.restore_server:
+            restored_step = service.restore_snapshot(manager)
+            if restored_step is None:
+                raise RuntimeError("--restore-server: no snapshot under "
+                                   f"{args.snapshot_dir}")
+            print(f"RESTORED_STEP={restored_step}", flush=True)
+        service.attach_snapshots(
+            manager, every_appends=max(1, args.snapshot_every_appends))
+    fault_plan = (FaultPlan.parse(args.fault_plan)
+                  if args.fault_plan else None)
+    server, port = serve(service, port=args.serve_port,
+                         fault_plan=fault_plan)
     print(f"SERVE_PORT={port}", flush=True)
     deadline = time.monotonic() + args.serve_timeout
     while not service.stopped and time.monotonic() < deadline:
@@ -617,6 +688,13 @@ def _replay_server_worker(args):
     print("PER_SHARD_COUNT="
           + ",".join(str(c) for c in st["per_shard_count"]))
     print(f"PARAMS_VERSION={st['params_version']}")
+    print(f"APPENDS={st['appends']}")
+    print(f"DUP_APPENDS={st['dup_appends']}")
+    print("WRITER_APPENDS=" + ",".join(
+        f"{w}:{n}" for w, n in sorted(st["writer_appends"].items())))
+    print(f"SNAPSHOTS={st['snapshots']}")
+    if restored_step is not None:
+        print(f"RESTORED_STEP={restored_step}")
     if timed_out:
         raise SystemExit("replay server: no stop received within "
                          f"--serve-timeout {args.serve_timeout:.0f}s")
@@ -635,7 +713,8 @@ def _service_actor_worker(args):
 
     from repro.runtime.loop import (LoopConfig, init_actor_slice,
                                     make_actor_program)
-    from repro.service.client import ReplayClient, wait_for_service
+    from repro.service.client import (ReplayClient, RetryPolicy,
+                                      wait_for_service)
 
     env_fn, _, agent, _ = _dqn_cartpole(args.n_envs)
     _, v_reset, v_step = env_fn(args.n_envs)
@@ -666,7 +745,10 @@ def _service_actor_worker(args):
 
     wait_for_service("127.0.0.1", args.serve_port, timeout=60.0)
     client = ReplayClient("127.0.0.1", args.serve_port,
-                          timeout=args.rpc_timeout)
+                          timeout=args.rpc_timeout,
+                          retry=RetryPolicy(base=0.1, cap=3.0,
+                                            deadline=args.retry_deadline,
+                                            seed=args.seed + args.actor_id))
     # the learner publishes v1 before sampling — actors start on a real
     # policy, never on their own uninitialized weights
     out = client.get_params(min_version=1, timeout=120.0)
@@ -694,8 +776,15 @@ def _service_actor_worker(args):
         transitions += args.actor_chunk * args.n_envs
         env_steps0 = jnp.asarray(int(reply["inserts"]), jnp.int32)
         if reply["params_version"] > have_version:
-            out = client.get_params(min_version=have_version + 1,
-                                    timeout=30.0)
+            try:
+                out = client.get_params(min_version=have_version + 1,
+                                        timeout=30.0)
+            except RuntimeError:
+                # graceful degradation (DESIGN.md §14): a restored
+                # server's params version can sit briefly below what a
+                # pre-crash reply advertised — keep acting on the
+                # last-good params; a later reply re-triggers the pull
+                continue
             agent_state = agent.with_acting_params(
                 agent_state, jax.tree.map(jnp.asarray, out["params"]))
             have_version = out["version"]
@@ -705,12 +794,17 @@ def _service_actor_worker(args):
     print(f"TRANSITIONS={transitions}")
     print(f"EPISODES={episodes}")
     print(f"PARAMS_VERSION={have_version}")
+    print(f"RECONNECTS={client.reconnects}")
+    print(f"ACKED_APPENDS={client.acked_appends}")
+    print(f"DEDUPED_APPENDS={client.deduped_appends}")
 
 
 def _eval_policy(agent, agent_state, env_fn, n_envs: int, steps: int,
                  seed: int) -> float:
     """Near-greedy rollout of the learned policy (fresh envs, no replay):
-    mean return over every episode that finishes in the window."""
+    mean return over every episode that finishes in the window, plus the
+    censored running return of any env that outlives the whole window —
+    a policy good enough to never terminate must not score 0.0."""
     import jax
     import jax.numpy as jnp
     import numpy as np
@@ -732,10 +826,16 @@ def _eval_policy(agent, agent_state, env_fn, n_envs: int, steps: int,
     key = jax.random.PRNGKey(seed)
     sl = init_actor_slice(v_reset, jax.random.fold_in(key, 0), n_envs)
     keys = jax.random.split(jax.random.fold_in(key, 1), steps)
-    _, fin = jax.jit(lambda s, ks: jax.lax.scan(body, s, ks))(sl, keys)
-    fin = np.asarray(fin).ravel()
-    fin = fin[~np.isnan(fin)]
-    return float(fin.mean()) if fin.size else 0.0
+    final, fin = jax.jit(lambda s, ks: jax.lax.scan(body, s, ks))(sl, keys)
+    fin = np.asarray(fin)                        # (steps, n_envs); NaN = alive
+    finished = fin[~np.isnan(fin)]
+    # an env with no completed episode in the window (CartPole's 500-step
+    # limit exceeds the 250-step eval window, so a strong policy finishes
+    # nothing) is scored by its running return — a lower bound, not a 0
+    never_done = ~np.any(~np.isnan(fin), axis=0)
+    censored = np.asarray(final.episode_return)[never_done]
+    rets = np.concatenate([finished, censored])
+    return float(rets.mean()) if rets.size else 0.0
 
 
 def _service_learner_worker(args):
@@ -751,7 +851,8 @@ def _service_learner_worker(args):
     import numpy as np
 
     from repro.runtime.loop import make_learner_program
-    from repro.service.client import ReplayClient, wait_for_service
+    from repro.service.client import (ReplayClient, RetryPolicy,
+                                      wait_for_service)
 
     env_fn, _, agent, _ = _dqn_cartpole(args.n_envs)
     learn = jax.jit(make_learner_program(agent))
@@ -786,7 +887,10 @@ def _service_learner_worker(args):
 
     wait_for_service("127.0.0.1", args.serve_port, timeout=60.0)
     client = ReplayClient("127.0.0.1", args.serve_port,
-                          timeout=args.rpc_timeout)
+                          timeout=args.rpc_timeout,
+                          retry=RetryPolicy(base=0.1, cap=3.0,
+                                            deadline=args.retry_deadline,
+                                            seed=args.seed + 1000))
     client.put_params(agent.params_for_acting(agent_state))
 
     def save(step):
@@ -796,18 +900,31 @@ def _service_learner_worker(args):
     learn_step = step0
     last_loss = float("nan")
     while learn_step < args.learn_steps:
-        out = client.sample(args.batch_size, beta=0.4,
-                            timeout=args.rpc_timeout)
-        if out.get("stopped"):
-            break
-        agent_state, metrics, td = learn(
-            agent_state, jax.tree.map(jnp.asarray, out["items"]),
-            jnp.asarray(out["weights"]))
-        client.update_priorities(out["sample_id"], np.asarray(td))
-        learn_step += 1
-        last_loss = float(metrics["loss"])
-        if learn_step % args.publish_every == 0:
-            client.put_params(agent.params_for_acting(agent_state))
+        try:
+            out = client.sample(args.batch_size, beta=0.4,
+                                timeout=args.rpc_timeout)
+            if out.get("stopped"):
+                break
+            agent_state, metrics, td = learn(
+                agent_state, jax.tree.map(jnp.asarray, out["items"]),
+                jnp.asarray(out["weights"]))
+            client.update_priorities(out["sample_id"], np.asarray(td))
+            learn_step += 1
+            last_loss = float(metrics["loss"])
+            if learn_step % args.publish_every == 0:
+                client.put_params(agent.params_for_acting(agent_state))
+        except ConnectionError:
+            # bounded degradation (DESIGN.md §14): the client already
+            # spent its full reconnect-retry budget — the service is
+            # gone for good.  Checkpoint what we have and exit cleanly
+            # instead of hanging the gang.
+            if manager is not None:
+                save(learn_step)
+            client.close()
+            print(f"LEARN_STEPS={learn_step}")
+            print(f"FINAL_LOSS={last_loss!r}")
+            print("SAMPLE_RETRY_EXHAUSTED=1")
+            return
         if manager is not None and args.ckpt_every \
                 and learn_step % args.ckpt_every == 0:
             save(learn_step)
@@ -896,6 +1013,20 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
                     help="learner: restore the latest checkpoint")
     ap.add_argument("--rpc-timeout", type=float, default=300.0)
     ap.add_argument("--append-timeout", type=float, default=240.0)
+    ap.add_argument("--retry-deadline", type=float, default=180.0,
+                    help="client reconnect-retry budget per call — must "
+                         "cover a full server restart (jax import included)")
+    ap.add_argument("--snapshot-dir", default=None,
+                    help="server: shard-snapshot directory (DESIGN.md §14)")
+    ap.add_argument("--snapshot-every-appends", type=int, default=0,
+                    help="server: snapshot period in applied appends "
+                         "(1 = durable acks, the restart drill setting)")
+    ap.add_argument("--restore-server", action="store_true",
+                    help="server: restore the latest shard snapshot from "
+                         "--snapshot-dir before serving")
+    ap.add_argument("--fault-plan", default=None,
+                    help="server: FaultPlan.parse spec, e.g. "
+                         "'crash_on_op=append:40,hard=1'")
     args = ap.parse_args(argv)
 
     service_roles = {"replay-server": _replay_server_worker,

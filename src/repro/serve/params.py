@@ -84,17 +84,30 @@ class ServiceParamChannel:
     """Poll the replay service's versioned param channel into a
     ``ParamDoubleBuffer``.  ``source`` is duck-typed: anything with
     ``get_params(min_version=..., timeout=...)`` — the in-process
-    ``ReplayService`` or the TCP ``ReplayClient``."""
+    ``ReplayService`` or the TCP ``ReplayClient``.
+
+    Degradation contract (DESIGN.md §14): a channel outage — the
+    service unreachable, the connection torn mid-poll, the retry budget
+    exhausted — must never take the serve loop down with it.  ``poll``
+    swallows connection-level failures, leaves the double buffer on the
+    last-good params, and counts the outage: ``stale_polls`` is the
+    consecutive-failure staleness signal (reset on the next successful
+    round trip), ``outages`` the lifetime total, ``last_error`` the
+    most recent failure rendered for operators."""
 
     def __init__(self, source: Any, buffer: ParamDoubleBuffer):
         self.source = source
         self.buffer = buffer
         self._seen = buffer.version
+        self.outages = 0          # lifetime connection-level poll failures
+        self.stale_polls = 0      # consecutive failures — staleness signal
+        self.last_error: Optional[str] = None
 
     def poll(self) -> bool:
         """Non-blocking pull: stage the channel's tree iff it carries a
         version newer than anything we've seen.  Returns True on a new
-        stage."""
+        stage; False on no-news *and* on outage (see class docstring —
+        check ``stale_polls`` to tell them apart)."""
         floor = self._seen
         staged = self.buffer.staged_version
         if staged is not None:
@@ -102,7 +115,26 @@ class ServiceParamChannel:
         try:
             reply = self.source.get_params(min_version=floor + 1, timeout=0.0)
         except TimeoutError:
+            # in-process source: no newer version yet — contact was fine
+            self.stale_polls = 0
             return False
+        except (ConnectionError, EOFError, OSError) as e:
+            self.outages += 1
+            self.stale_polls += 1
+            self.last_error = f"{type(e).__name__}: {e}"
+            return False
+        except RuntimeError as e:
+            # the TCP client surfaces server-side errors as RuntimeError
+            # replies; a server-side TimeoutError is the quiet-channel
+            # case, anything else is a real outage of the channel
+            if "TimeoutError" in str(e):
+                self.stale_polls = 0
+                return False
+            self.outages += 1
+            self.stale_polls += 1
+            self.last_error = f"{type(e).__name__}: {e}"
+            return False
+        self.stale_polls = 0
         if reply.get("stopped") and reply.get("version", 0) <= floor:
             return False
         version = int(reply["version"])
@@ -114,3 +146,8 @@ class ServiceParamChannel:
         self._seen = version
         self.buffer.stage(params, version)
         return True
+
+    def stats(self) -> dict:
+        return {"seen_version": self._seen, "outages": self.outages,
+                "stale_polls": self.stale_polls,
+                "last_error": self.last_error}

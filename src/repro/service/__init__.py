@@ -8,20 +8,31 @@ admission window, and a ``RateLimiter`` that generalizes the loop's
 and learner processes.
 """
 
+from repro.service.faults import (ClientFaultInjector, FaultPlan,
+                                  InjectedCrash, ServerFaultInjector)
 from repro.service.rate_limiter import RateLimiter, ServiceStopped
 from repro.service.router import Router
-from repro.service.server import (ReplayService, ReplayServiceConfig,
-                                  serve)
-from repro.service.client import ReplayClient
+from repro.service.server import (ConnectionClosed, ReplayService,
+                                  ReplayServiceConfig, serve)
+from repro.service.client import (ReplayClient, RetryPolicy,
+                                  backoff_delays, wait_for_service)
 from repro.service.executor import ServiceExecutor
 
 __all__ = [
+    "ClientFaultInjector",
+    "ConnectionClosed",
+    "FaultPlan",
+    "InjectedCrash",
     "RateLimiter",
+    "RetryPolicy",
+    "ServerFaultInjector",
     "ServiceStopped",
     "Router",
     "ReplayService",
     "ReplayServiceConfig",
     "ReplayClient",
     "ServiceExecutor",
+    "backoff_delays",
     "serve",
+    "wait_for_service",
 ]

@@ -208,7 +208,8 @@ class ServiceExecutor(Executor):
                 # greedy limiter drain: the learn cadence is whatever
                 # flow control admits — RatioSchedule generalized
                 n_learns = 0
-                while self.limiter.can_sample(self.cfg.batch_size):
+                while (not self.limiter.stopped
+                       and self.limiter.can_sample(self.cfg.batch_size)):
                     self.limiter.note_sample(self.cfg.batch_size)
                     n_learns += 1
                 target = self.service.router.route(

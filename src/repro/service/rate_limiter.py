@@ -175,6 +175,23 @@ class RateLimiter:
             self._stopped = True
             self._cond.notify_all()
 
+    @property
+    def stopped(self) -> bool:
+        with self._cond:
+            return self._stopped
+
+    def restore_counts(self, inserts: int, samples: int) -> None:
+        """Reset the debt counters to a snapshot's values (server
+        restart, DESIGN.md §14) — the flow-control band resumes exactly
+        where the crashed server left it instead of re-running warmup."""
+        if inserts < 0 or samples < 0:
+            raise ValueError(f"restore_counts({inserts}, {samples}): "
+                             f"counts must be ≥ 0")
+        with self._cond:
+            self._inserts = int(inserts)
+            self._samples = int(samples)
+            self._cond.notify_all()
+
     # -- stats --------------------------------------------------------------
 
     @property

@@ -24,20 +24,24 @@ authenticated RPC stack).  All numerical payloads cross as numpy.
 from __future__ import annotations
 
 import dataclasses
+import json
 import pickle
 import socket
 import socketserver
 import struct
+import sys
 import threading
+import time
 from collections import deque
 from functools import partial
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Set, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.replay import PrioritizedReplay, ReplayConfig, ReplayState
+from repro.service.faults import FaultPlan, InjectedCrash, ServerFaultInjector
 from repro.service.rate_limiter import RateLimiter, ServiceStopped
 from repro.service.router import Router
 
@@ -101,6 +105,23 @@ class ReplayService:
         self._samples = 0
         self._sample_count = 0
         self._outstanding: Dict[int, Tuple[np.ndarray, ...]] = {}
+        # idempotent appends (DESIGN.md §14): per-writer last-applied
+        # sequence number + the set of seqs currently being applied.
+        # A retry for an in-flight seq parks on the condition until the
+        # original lands, then reads the dedup verdict — this closes the
+        # retry-while-original-parked race without double-applying.
+        self._seq_cond = threading.Condition(self._lock)
+        self._writer_seq: Dict[str, int] = {}
+        self._writer_appends: Dict[str, int] = {}
+        self._inflight: Dict[str, Set[int]] = {}
+        self._dup_appends = 0
+        self._appends = 0
+        # durability: optional snapshot sink (attach_snapshots)
+        self._ckpt = None
+        self._snap_every = 0
+        self._snap_step = 0
+        self._snapshots_taken = 0
+        self._restored_step: Optional[int] = None
         # param channel (PUT/GET with versions; blobs are opaque bytes)
         self._params_cond = threading.Condition()
         self._params_blob: Optional[bytes] = None
@@ -112,28 +133,100 @@ class ReplayService:
 
     def append(self, writer_id: str, items: Pytree, *,
                returns: Optional[List[float]] = None,
-               timeout: Optional[float] = None) -> Dict[str, Any]:
+               timeout: Optional[float] = None,
+               seq: Optional[int] = None) -> Dict[str, Any]:
         """One writer transaction: rate-limited admission, route to a
         shard, lazy leaf-only append (sampleable at the shard's next
         flush).  Returns progress the writer needs (global insert clock
         for its ε-schedule, current params version, stop flag) so the
-        common actor loop costs one round trip per batch."""
+        common actor loop costs one round trip per batch.
+
+        ``seq`` (per-writer, monotonic, allocated client-side *before*
+        the retry loop) makes the transaction idempotent: a seq at or
+        below the writer's last applied one is acknowledged without
+        re-inserting, so retry-after-reconnect — including the case
+        where the reply, not the request, was lost — applies exactly
+        once."""
         batch = int(jax.tree.leaves(items)[0].shape[0])
-        if self.limiter is not None:
-            try:
-                self.limiter.await_insert(batch, timeout)
-            except ServiceStopped:
-                return {"stopped": True, "inserts": self.total_inserts(),
-                        "params_version": self.params_version()}
-        shard = self.router.route(writer_id)
-        with self._lock:
-            self.states[shard] = self._append_op(self.states[shard], items)
-            self._inserts += batch
-            if returns:
-                self._returns.extend(float(r) for r in returns)
-            total = self._inserts
+        if seq is not None:
+            dup = self._admit_seq(writer_id, int(seq), timeout)
+            if dup is not None:
+                return dup
+        try:
+            if self.limiter is not None:
+                try:
+                    self.limiter.await_insert(batch, timeout)
+                except ServiceStopped:
+                    return {"stopped": True, "inserts": self.total_inserts(),
+                            "params_version": self.params_version()}
+            shard = self.router.route(writer_id)
+            with self._lock:
+                self.states[shard] = self._append_op(self.states[shard],
+                                                     items)
+                self._inserts += batch
+                self._appends += 1
+                if seq is not None:
+                    self._writer_seq[writer_id] = int(seq)
+                    self._writer_appends[writer_id] = (
+                        self._writer_appends.get(writer_id, 0) + 1)
+                if returns:
+                    self._returns.extend(float(r) for r in returns)
+                total = self._inserts
+                if self._snap_every and self._appends % self._snap_every == 0:
+                    # durable ack: the snapshot lands before the reply,
+                    # so an acked append is a restored append — this is
+                    # what makes per-writer counters bit-identical
+                    # across a server crash (snapshot_every_appends=1
+                    # in the drills; larger periods trade the tail of
+                    # un-acked work for throughput, and dedup-on-retry
+                    # still keeps the restore exactly-once)
+                    self._save_snapshot_locked()
+        finally:
+            if seq is not None:
+                self._release_seq(writer_id, int(seq))
+        # "applied" is the exactly-once ack: set on real application and
+        # on dedup (the original applied; this reply is its ack), absent
+        # on the not-applied ServiceStopped path — clients count acked
+        # appends off it, and the restart drill compares those counts
+        # against the server's per-writer applied table
         return {"stopped": self._stopped.is_set(), "shard": shard,
-                "inserts": total, "params_version": self.params_version()}
+                "applied": True, "inserts": total,
+                "params_version": self.params_version()}
+
+    def _admit_seq(self, writer_id: str, seq: int,
+                   timeout: Optional[float]) -> Optional[Dict[str, Any]]:
+        """Claim ``seq`` for application, or return the dedup reply if
+        it already applied.  A retry that races its own original (still
+        parked in limiter backpressure) waits here for the verdict."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._seq_cond:
+            while True:
+                if seq <= self._writer_seq.get(writer_id, 0):
+                    self._dup_appends += 1
+                    return {"stopped": self._stopped.is_set(),
+                            "deduped": True, "applied": True,
+                            "inserts": self._inserts,
+                            "params_version": self.params_version()}
+                inflight = self._inflight.setdefault(writer_id, set())
+                if seq not in inflight:
+                    inflight.add(seq)
+                    return None
+                remaining = (None if deadline is None
+                             else deadline - time.monotonic())
+                if remaining is not None and remaining <= 0:
+                    raise TimeoutError(
+                        f"append seq {seq} from writer {writer_id!r} "
+                        f"still in flight after {timeout}s")
+                self._seq_cond.wait(remaining)
+
+    def _release_seq(self, writer_id: str, seq: int) -> None:
+        with self._seq_cond:
+            inflight = self._inflight.get(writer_id)
+            if inflight is not None:
+                inflight.discard(seq)
+                if not inflight:
+                    self._inflight.pop(writer_id, None)
+            self._seq_cond.notify_all()
 
     # -- read path ----------------------------------------------------------
 
@@ -228,6 +321,92 @@ class ReplayService:
                     self.states[shard], jnp.asarray(idx), jnp.asarray(chunk))
         return {"applied": True}
 
+    # -- durability (DESIGN.md §14) -----------------------------------------
+
+    def attach_snapshots(self, manager, *, every_appends: int = 50) -> None:
+        """Snapshot the full service state into ``manager`` (a
+        ``checkpoint.CheckpointManager``) every N applied appends.
+        ``every_appends=1`` gives durable acks — insert → snapshot →
+        ack — which the restart drills rely on for exactly-once."""
+        if every_appends < 1:
+            raise ValueError(f"every_appends={every_appends}: must be ≥ 1")
+        with self._lock:
+            self._ckpt = manager
+            self._snap_every = every_appends
+
+    def _snapshot_tree(self) -> Pytree:
+        return {"shards": list(self.states)}
+
+    def _save_snapshot_locked(self) -> int:  # repro-lint: disable=L301(every caller holds self._lock — the _locked suffix is the contract)
+        self._snap_step += 1
+        meta = {
+            "inserts": self._inserts,
+            "samples": self._samples,
+            "sample_count": self._sample_count,
+            "appends": self._appends,
+            "dup_appends": self._dup_appends,
+            "writer_seq": dict(self._writer_seq),
+            "writer_appends": dict(self._writer_appends),
+            "returns": [float(r) for r in self._returns],
+            "params_version": self.params_version(),
+            "limiter": (None if self.limiter is None
+                        else self.limiter.stats()),
+        }
+        extra = {"service.json": json.dumps(meta).encode()}
+        with self._params_cond:
+            blob = self._params_blob
+        if blob is not None:
+            extra["params.bin"] = blob
+        self._ckpt.save(self._snap_step, self._snapshot_tree(), extra=extra)
+        self._snapshots_taken += 1
+        return self._snap_step
+
+    def save_snapshot(self) -> int:
+        """Force one snapshot now (requires ``attach_snapshots``)."""
+        with self._lock:
+            if self._ckpt is None:
+                raise RuntimeError("no snapshot manager attached — call "
+                                   "attach_snapshots first")
+            return self._save_snapshot_locked()
+
+    def restore_snapshot(self, manager) -> Optional[int]:
+        """Rebuild the service from the latest snapshot in ``manager``:
+        shard ReplayStates, per-writer seq tables (so dedup keeps
+        rejecting already-acked retries from before the crash), sample
+        rng position, limiter debt counters, and the last published
+        params blob + version.  Returns the restored step, or None when
+        the directory is empty (cold start)."""
+        example = self._snapshot_tree()
+        step, tree = manager.restore_latest(example)
+        if step is None:
+            return None
+        meta = json.loads(manager.read_extra(step, "service.json").decode())
+        blob = manager.read_extra(step, "params.bin")
+        with self._lock:
+            self.states[:] = tree["shards"]
+            self._inserts = int(meta["inserts"])
+            self._samples = int(meta["samples"])
+            self._sample_count = int(meta["sample_count"])
+            self._appends = int(meta["appends"])
+            self._dup_appends = int(meta["dup_appends"])
+            self._writer_seq = {k: int(v)
+                                for k, v in meta["writer_seq"].items()}
+            self._writer_appends = {k: int(v)
+                                    for k, v in meta["writer_appends"].items()}
+            self._returns.clear()
+            self._returns.extend(float(r) for r in meta["returns"])
+            self._snap_step = step
+            self._restored_step = step
+        if self.limiter is not None and meta["limiter"] is not None:
+            self.limiter.restore_counts(int(meta["limiter"]["inserts"]),
+                                        int(meta["limiter"]["samples"]))
+        with self._params_cond:
+            if blob is not None:
+                self._params_blob = blob
+            self._params_version = int(meta["params_version"])
+            self._params_cond.notify_all()
+        return step
+
     # -- param channel ------------------------------------------------------
 
     def put_params(self, blob: bytes) -> int:
@@ -280,6 +459,12 @@ class ReplayService:
                 "inserts": self._inserts,
                 "samples": self._samples,
                 "sample_calls": self._sample_count,
+                "appends": self._appends,
+                "dup_appends": self._dup_appends,
+                "writer_seq": dict(self._writer_seq),
+                "writer_appends": dict(self._writer_appends),
+                "snapshots": self._snapshots_taken,
+                "restored_step": self._restored_step,
                 "per_shard_count": per_shard,
                 "params_version": self.params_version(),
                 "mean_recent_return": (float(np.mean(recent))
@@ -298,6 +483,33 @@ class ReplayService:
 _LEN = struct.Struct("!Q")
 
 
+class ConnectionClosed(ConnectionError):
+    """Peer closed the connection — with where and how far through the
+    frame it happened, so the retry layer can classify (mid-frame close
+    after a send means the reply was lost and the request *may have
+    applied*: only idempotent operations may be retried)."""
+
+    def __init__(self, peer: str, bytes_read: int, expected: int):
+        self.peer = peer
+        self.bytes_read = bytes_read
+        self.expected = expected
+        if bytes_read:
+            detail = (f"mid-frame ({bytes_read}/{expected} bytes read)")
+        else:
+            detail = "before a frame"
+        super().__init__(
+            f"replay-service peer {peer} closed connection {detail}")
+
+
+def _peer_name(sock: socket.socket) -> str:
+    try:
+        host, port = sock.getpeername()[:2]
+        return f"{host}:{port}"
+    except (OSError, ValueError):
+        # closed socket, or a non-INET family (unix socketpair in tests)
+        return "unknown"
+
+
 def send_msg(sock: socket.socket, obj: Any) -> None:
     blob = pickle.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL)
     sock.sendall(_LEN.pack(len(blob)) + blob)
@@ -314,28 +526,59 @@ def _recv_exact(sock: socket.socket, n: int) -> bytes:
     while len(buf) < n:
         chunk = sock.recv(n - len(buf))
         if not chunk:
-            raise ConnectionError("replay-service peer closed connection")
+            raise ConnectionClosed(_peer_name(sock), len(buf), n)
         buf.extend(chunk)
     return bytes(buf)
 
 
 class _Handler(socketserver.BaseRequestHandler):
+    def setup(self):
+        self.server.track(self.request)  # type: ignore[attr-defined]
+
+    def finish(self):
+        self.server.untrack(self.request)  # type: ignore[attr-defined]
+
     def handle(self):  # one connection = one client, many requests
         service: ReplayService = self.server.service  # type: ignore
+        injector: Optional[ServerFaultInjector] = (
+            self.server.fault_injector)  # type: ignore[attr-defined]
+        conn_id = id(self.request)
         while True:
             try:
                 cmd, kw = recv_msg(self.request)
             except (ConnectionError, EOFError):
+                return
+            action = (injector.on_frame(conn_id, cmd)
+                      if injector is not None else None)
+            if action == "crash":
+                injector.crash(self.server)  # hard: no return; soft: raises
+            if action == "drop_request":
+                self._drop()  # request lost before dispatch
                 return
             try:
                 reply = self._dispatch(service, cmd, kw)
                 reply.setdefault("ok", True)
             except Exception as e:  # noqa: BLE001 — cross the wire, don't die
                 reply = {"ok": False, "error": f"{type(e).__name__}: {e}"}
+            if action == "drop_reply":
+                self._drop()  # request applied, ack lost — the dedup drill
+                return
+            if injector is not None:
+                injector.before_reply(cmd)
             try:
                 send_msg(self.request, reply)
             except (ConnectionError, BrokenPipeError):
                 return
+
+    def _drop(self):
+        try:
+            self.request.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+        try:
+            self.request.close()
+        except OSError:
+            pass
 
     @staticmethod
     def _dispatch(service: ReplayService, cmd: str, kw: dict) -> dict:
@@ -365,14 +608,77 @@ class _Server(socketserver.ThreadingTCPServer):
     # blocking admissions park handler threads; the default request
     # queue of 5 is fine (one connection per worker, long-lived)
 
+    def __init__(self, *args, **kwargs):
+        super().__init__(*args, **kwargs)
+        self.fault_injector: Optional[ServerFaultInjector] = None
+        self.crashed = threading.Event()
+        self._conn_lock = threading.Lock()
+        self._conns: Set[socket.socket] = set()
 
-def serve(service: ReplayService, host: str = "127.0.0.1",
-          port: int = 0) -> Tuple[_Server, int]:
+    def track(self, sock: socket.socket) -> None:
+        with self._conn_lock:
+            self._conns.add(sock)
+
+    def untrack(self, sock: socket.socket) -> None:
+        with self._conn_lock:
+            self._conns.discard(sock)
+
+    def shutdown_connections(self) -> None:
+        """Sever every live client connection (their next recv raises
+        ``ConnectionClosed``)."""
+        with self._conn_lock:
+            conns = list(self._conns)
+        for sock in conns:
+            try:
+                sock.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+            try:
+                sock.close()
+            except OSError:
+                pass
+
+    def simulate_crash(self) -> None:
+        """In-process stand-in for a process kill: stop accepting,
+        close the listener, sever every connection.  The service
+        object's in-memory state is abandoned exactly as a real crash
+        abandons it — a restart must come from the snapshot.
+
+        ``crashed`` is set only after the listener is closed: a restart
+        monitor waking on the event may rebind the port immediately."""
+        self.shutdown()  # blocks until serve_forever exits (≤ poll tick)
+        try:
+            self.server_close()
+        except OSError:
+            pass
+        self.crashed.set()
+        self.shutdown_connections()
+
+    def handle_error(self, request, client_address):
+        # injected crashes and torn connections are expected events in
+        # the fault drills — everything else keeps the stock traceback
+        exc = sys.exc_info()[1]
+        if isinstance(exc, (InjectedCrash, ConnectionError,
+                            BrokenPipeError)):
+            return
+        if isinstance(exc, OSError) and self.crashed.is_set():
+            # a simulated crash severs sockets under live handlers;
+            # their dying sends (EBADF) are the drill, not a bug
+            return
+        super().handle_error(request, client_address)
+
+
+def serve(service: ReplayService, host: str = "127.0.0.1", port: int = 0,
+          *, fault_plan: Optional[FaultPlan] = None) -> Tuple[_Server, int]:
     """Start serving on a background thread; returns (server, bound
     port).  ``port=0`` lets the OS pick — the gang launcher passes the
-    bound port to the workers.  Call ``server.shutdown()`` to stop."""
+    bound port to the workers.  Call ``server.shutdown()`` to stop.
+    ``fault_plan`` arms deterministic wire-layer fault injection
+    (``service/faults.py``) for the chaos drills."""
     server = _Server((host, port), _Handler)
     server.service = service  # type: ignore[attr-defined]
+    if fault_plan is not None:
+        server.fault_injector = ServerFaultInjector(fault_plan)
     thread = threading.Thread(target=server.serve_forever,
                               name="replay-service", daemon=True)
     thread.start()

@@ -277,11 +277,14 @@ def test_audited_sites_are_clean():
 
 
 def test_unguarding_server_shard_state_is_caught(tmp_path):
-    # acceptance demo: dedent a guarded read out of `with self._lock:`
-    # in ReplayService.insert and L301 must fire
+    # acceptance demo: move a guarded read out of `with self._lock:`
+    # in ReplayService.total_inserts and L301 must fire
     src = (REPO / "src" / "repro" / "service" / "server.py").read_text()
-    before = '            total = self._inserts\n        return {"stopped"'
-    after = '        total = self._inserts\n        return {"stopped"'
+    before = ('        with self._lock:\n'
+              '            return self._inserts\n')
+    after = ('        with self._lock:\n'
+             '            pass\n'
+             '        return self._inserts\n')
     assert before in src
     mutated = tmp_path / "server.py"
     mutated.write_text(src.replace(before, after, 1))

@@ -69,6 +69,29 @@ def test_resave_same_step_replaces_committed_checkpoint(tmp_path):
         np.asarray(tree(1)["params"]["w"]))
 
 
+def test_extra_blobs_roundtrip(tmp_path):
+    """Opaque sidecar blobs (the replay server's service.json/params.bin
+    snapshot metadata) commit atomically with the arrays and read back
+    by name; absent names are None, reserved names are rejected."""
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    mgr.save(3, tree(), extra={"service.json": b'{"appends": 7}',
+                              "params.bin": b"\x00\x01\x02"})
+    assert mgr.read_extra(3, "service.json") == b'{"appends": 7}'
+    assert mgr.read_extra(3, "params.bin") == b"\x00\x01\x02"
+    assert mgr.read_extra(3, "absent.bin") is None
+    # the arrays ride the same commit
+    step, restored = mgr.restore_latest(jax.tree.map(jnp.zeros_like, tree()))
+    assert step == 3
+    np.testing.assert_array_equal(np.asarray(restored["params"]["w"]),
+                                  np.asarray(tree()["params"]["w"]))
+    # a save without extras is still readable (and reports no blobs)
+    mgr.save(4, tree(1))
+    assert mgr.read_extra(4, "service.json") is None
+    for bad in ("arrays.npz", "manifest.json", "a/b.json"):
+        with pytest.raises(ValueError):
+            mgr.save(5, tree(), extra={bad: b"x"})
+
+
 def test_manifest_mismatch_rejected(tmp_path):
     mgr = CheckpointManager(str(tmp_path))
     mgr.save(1, tree())

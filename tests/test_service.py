@@ -279,6 +279,71 @@ def test_service_rate_limited_ratio():
     assert abs(st["realized_spi"] - 0.5) <= slack + 1e-6
 
 
+def test_service_stop_wakes_parked_writers_in_process():
+    """Writers parked in rate-limiter backpressure must wake on stop()
+    with a stopped (not applied) reply — not hang until timeout."""
+    lim = RateLimiter(samples_per_insert=1.0, min_size_to_sample=1,
+                      error_buffer=1.0)
+    svc = ReplayService(ReplayServiceConfig(capacity_per_shard=256,
+                                            fanout=8), EXAMPLE,
+                        rate_limiter=lim)
+    replies = []
+
+    def writer(wid):
+        replies.append(svc.append(f"w{wid}", items(64, seed=wid),
+                                  timeout=30.0))
+
+    threads = [threading.Thread(target=writer, args=(w,)) for w in range(2)]
+    for t in threads:
+        t.start()
+    time.sleep(0.2)
+    assert replies == []            # both parked: 64 ≫ the limiter band
+    svc.stop()
+    for t in threads:
+        t.join(timeout=10.0)
+    assert not any(t.is_alive() for t in threads)
+    assert len(replies) == 2
+    assert all(r["stopped"] and "applied" not in r for r in replies)
+
+
+def test_service_stop_wakes_parked_writers_tcp():
+    """The same wake-on-stop contract through the wire: appends parked
+    server-side return a stopped reply to their TCP clients."""
+    lim = RateLimiter(samples_per_insert=1.0, min_size_to_sample=1,
+                      error_buffer=1.0)
+    svc = ReplayService(ReplayServiceConfig(capacity_per_shard=256,
+                                            fanout=8), EXAMPLE,
+                        rate_limiter=lim)
+    server, port = serve(svc)
+    replies = []
+
+    def writer(wid):
+        c = ReplayClient("127.0.0.1", port)
+        try:
+            replies.append(c.append(f"w{wid}", items(64, seed=wid),
+                                    timeout=30.0))
+        finally:
+            c.close()
+
+    try:
+        threads = [threading.Thread(target=writer, args=(w,))
+                   for w in range(2)]
+        for t in threads:
+            t.start()
+        time.sleep(0.3)
+        assert replies == []
+        ctl = ReplayClient("127.0.0.1", port)
+        ctl.stop()
+        ctl.close()
+        for t in threads:
+            t.join(timeout=10.0)
+        assert not any(t.is_alive() for t in threads)
+        assert len(replies) == 2
+        assert all(r["stopped"] and not r.get("applied") for r in replies)
+    finally:
+        server.shutdown()
+
+
 # -- wire path ---------------------------------------------------------------
 
 

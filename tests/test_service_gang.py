@@ -81,8 +81,50 @@ def test_service_gang_learner_restart_resumes_from_checkpoint(tmp_path):
         assert int(res[f"actor-{a}"]["CHUNKS"]) > 10, res[f"actor-{a}"]
 
 
+def test_service_gang_server_restart_restores_from_snapshot(tmp_path):
+    """The server is the casualty (DESIGN.md §14): a fault plan hard-kills
+    it at its 40th append, actors and learner park in reconnect backoff,
+    a replacement restores the per-append shard snapshot onto the same
+    port, and training runs through the fault to the same learning
+    criterion.  Exactly-once is asserted as *bit-identical counters*:
+    every actor's acked-append count equals the restored server's
+    per-writer applied table — zero duplicate inserts across the crash."""
+    res = mp.launch_service(learn_steps=1400, timeout_s=600.0,
+                            snapshot_dir=str(tmp_path),
+                            snapshot_every_appends=1,
+                            restart_server_after=40,
+                            retry_deadline=240.0, **GANG)
+
+    server, learner = res["server"], res["learner"]
+    assert int(server["RESTORED_STEP"]) >= 1
+    assert int(server["SNAPSHOTS"]) >= 1
+    # per-writer exactly-once across the restart: the client-side ack
+    # count IS the server-side applied count, for every actor
+    applied = dict(kv.split(":") for kv in
+                   server["WRITER_APPENDS"].split(","))
+    for a in range(GANG["n_actors"]):
+        actor = res[f"actor-{a}"]
+        assert int(actor["ACKED_APPENDS"]) == int(applied[f"actor-{a}"]), (
+            actor, server)
+        # the fault really hit this writer's connection
+        assert int(actor["RECONNECTS"]) >= 1, actor
+    # duplicates were *detected* (and not applied); the server may have
+    # lost pre-crash dedup-ack counts that clients kept, never the
+    # reverse
+    deduped = sum(int(res[f"actor-{a}"]["DEDUPED_APPENDS"])
+                  for a in range(GANG["n_actors"]))
+    assert int(server["DUP_APPENDS"]) <= deduped
+    # one continuous limiter history through the crash, inside the band
+    _assert_spi_band(server)
+    assert int(learner["LEARN_STEPS"]) == 1400
+    # the learning criterion of tests/test_system.py, through the fault
+    assert float(learner["EVAL_RETURN"]) > 30.0, learner
+
+
 def test_launch_service_validates_inputs():
     with pytest.raises(ValueError, match="n_actors"):
         mp.launch_service(n_actors=0)
     with pytest.raises(ValueError, match="restart_learner_after"):
         mp.launch_service(n_actors=1, restart_learner_after=10)
+    with pytest.raises(ValueError, match="restart_server_after"):
+        mp.launch_service(n_actors=1, restart_server_after=10)

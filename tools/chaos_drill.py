@@ -1,0 +1,130 @@
+#!/usr/bin/env python3
+"""Chaos drill: the multiprocess server-kill-and-restore gang, run
+standalone with machine-readable evidence (the chaos-smoke CI job).
+
+    python tools/chaos_drill.py --out out/CHAOS_drill.json
+
+Launches the real replay-service gang (launch/multiprocess.py) with a
+hard fault plan: the server ``os._exit``s at its Nth append while every
+append snapshots durably; actors and the learner park in reconnect
+backoff; a replacement server restores the snapshot onto the same port
+and training runs through the fault.  The drill then asserts the
+fabric's contracts (DESIGN.md §14) rather than just "it exited 0":
+
+  * the replacement really restored (RESTORED_STEP ≥ 1);
+  * exactly-once appends as bit-identical counters — every actor's
+    client-side acked-append count equals the restored server's
+    per-writer applied table entry;
+  * every actor reconnected at least once (the fault was real);
+  * the limiter band held across the crash (one continuous history);
+  * the learner finished all its steps and the policy clears the same
+    learning criterion as the in-process system test.
+
+The stats json it writes is uploaded as a CI artifact so a failing (or
+suspicious) run leaves evidence: all worker counters, the recovery
+topology, and wall time.  Exit is non-zero on any violated invariant.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+from repro.launch import multiprocess as mp  # noqa: E402
+
+# the proven gang shape of tests/test_service_gang.py, shortened: the
+# drill pins recovery invariants, the full learning criterion runs in
+# the tier-1 gang test (learn_steps=1400 ⇒ eval return > 30)
+GANG = dict(n_actors=2, samples_per_insert=8.0, batch_size=64,
+            warmup=400, n_envs=8, actor_chunk=8, epsilon=0.2, seed=1)
+
+
+def run_drill(learn_steps: int, restart_after: int, out_path: str) -> int:
+    snap_dir = tempfile.mkdtemp(prefix="chaos_snap_")
+    t0 = time.monotonic()
+    res = mp.launch_service(learn_steps=learn_steps, timeout_s=600.0,
+                            snapshot_dir=snap_dir,
+                            snapshot_every_appends=1,
+                            restart_server_after=restart_after,
+                            retry_deadline=240.0, **GANG)
+    wall_s = time.monotonic() - t0
+
+    server, learner = res["server"], res["learner"]
+    applied = dict(kv.split(":") for kv in
+                   server["WRITER_APPENDS"].split(","))
+    failures = []
+
+    def check(ok: bool, what: str):
+        if not ok:
+            failures.append(what)
+
+    check(int(server["RESTORED_STEP"]) >= 1,
+          f"server did not restore (RESTORED_STEP="
+          f"{server['RESTORED_STEP']})")
+    check(int(server["SNAPSHOTS"]) >= 1, "restored server never snapshot")
+    for a in range(GANG["n_actors"]):
+        actor = res[f"actor-{a}"]
+        acked, srv = int(actor["ACKED_APPENDS"]), int(applied[f"actor-{a}"])
+        check(acked == srv,
+              f"actor-{a}: acked {acked} != server applied {srv} "
+              f"(duplicate or lost appends across the restart)")
+        check(int(actor["RECONNECTS"]) >= 1,
+              f"actor-{a}: never reconnected — the fault missed it")
+    deduped = sum(int(res[f"actor-{a}"]["DEDUPED_APPENDS"])
+                  for a in range(GANG["n_actors"]))
+    check(int(server["DUP_APPENDS"]) <= deduped,
+          f"server deduped {server['DUP_APPENDS']} > clients saw {deduped}")
+    realized, configured = (float(server["REALIZED_SPI"]),
+                            float(server["CONFIGURED_SPI"]))
+    tol = float(server["SPI_TOLERANCE"])
+    check(abs(realized - configured) <= tol,
+          f"limiter band broken across restart: |{realized} - {configured}|"
+          f" > {tol}")
+    check(int(learner["LEARN_STEPS"]) == learn_steps,
+          f"learner finished {learner['LEARN_STEPS']}/{learn_steps} steps")
+
+    report = {
+        "ok": not failures,
+        "failures": failures,
+        "wall_s": round(wall_s, 1),
+        "learn_steps": learn_steps,
+        "restart_server_after": restart_after,
+        "gang": GANG,
+        "workers": res,
+    }
+    os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+    print(f"# wrote {out_path} (wall {wall_s:.1f}s)")
+    for line in failures:
+        print(f"CHAOS FAIL: {line}", file=sys.stderr)
+    if not failures:
+        print(f"chaos drill: OK — restored at step "
+              f"{server['RESTORED_STEP']}, "
+              f"{sum(int(applied[k]) for k in applied)} appends applied "
+              f"exactly once across the restart")
+    return 1 if failures else 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="out/CHAOS_drill.json",
+                    help="stats json path (CI artifact)")
+    ap.add_argument("--learn-steps", type=int, default=300,
+                    help="learner steps (default sized for CI smoke)")
+    ap.add_argument("--restart-server-after", type=int, default=30,
+                    help="hard-kill the server at this append count")
+    args = ap.parse_args()
+    return run_drill(args.learn_steps, args.restart_server_after, args.out)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
